@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: CSV emission, timing, result storage."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row in the harness format: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_us(fn, *args, repeat: int = 3, **kw) -> float:
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def save_json(name: str, obj) -> Path:
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=2))
+    return p

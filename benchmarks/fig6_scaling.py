@@ -1,0 +1,68 @@
+"""Fig. 6: performance scaling, intra-blade (left) and inter-blade (right).
+
+MIND / MIND-PSO / GAM / FastSwap on TF, GC, M_A, M_C traces; performance
+= inverse runtime normalized to MIND at 1 thread (left) / 1 blade (right).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core.emulator import run_workload
+
+ACCESSES = 500
+
+
+def intra_blade(workloads=("TF", "GC"), threads=(1, 4, 10)):
+    rows = []
+    for wl in workloads:
+        base = None
+        for th in threads:
+            for system in ("mind", "gam", "fastswap"):
+                t0 = time.perf_counter()
+                r = run_workload(system, wl, num_compute_blades=1,
+                                 threads_per_blade=th,
+                                 accesses_per_thread=ACCESSES)
+                wall = (time.perf_counter() - t0) * 1e6
+                if system == "mind" and th == threads[0]:
+                    base = r.performance
+                norm = r.performance / base
+                rows.append({"workload": wl, "threads": th, "system": system,
+                             "perf_norm": norm})
+                emit(f"fig6_intra/{wl}/{system}/t{th}", wall,
+                     f"perf_norm={norm:.2f}")
+    return rows
+
+
+def inter_blade(workloads=("TF", "GC", "M_A", "M_C"), blades=(1, 2, 4, 8),
+                threads=4):
+    rows = []
+    for wl in workloads:
+        base = None
+        for nb in blades:
+            for system in ("mind", "mind-pso", "mind-pso+", "gam"):
+                t0 = time.perf_counter()
+                r = run_workload(system, wl, num_compute_blades=nb,
+                                 threads_per_blade=threads,
+                                 accesses_per_thread=ACCESSES)
+                wall = (time.perf_counter() - t0) * 1e6
+                if system == "mind" and nb == blades[0]:
+                    base = r.performance
+                norm = r.performance / base
+                rows.append({"workload": wl, "blades": nb, "system": system,
+                             "perf_norm": norm,
+                             "invalidations": r.stats.invalidations,
+                             "false_inv": r.stats.false_invalidated_pages})
+                emit(f"fig6_inter/{wl}/{system}/b{nb}", wall,
+                     f"perf_norm={norm:.2f}")
+    return rows
+
+
+def main() -> None:
+    rows = {"intra": intra_blade(), "inter": inter_blade()}
+    save_json("fig6_scaling", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Roofline collation: turn dry-run records into the §Roofline table.
+
+Reads benchmarks/results/dryrun/*.json (written by launch/dryrun.py),
+emits CSV rows + a markdown table (benchmarks/results/roofline.md) used by
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS, emit
+
+DRYRUN = RESULTS / "dryrun"
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            continue
+        rows.append(d)
+    return rows
+
+
+def one_sentence(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    kind = r["kind"]
+    if dom == "collective":
+        return ("reduce-scatter+seq-parallel instead of activation "
+                "all-reduce" if kind == "train"
+                else "shard KV heads wider / duplicate-gather removal")
+    if dom == "memory":
+        return ("cut remat traffic (policy: save matmul outputs) and keep "
+                "bf16 end-to-end" if kind == "train"
+                else "decode is HBM-bound by design: raise batch or quantize KV")
+    return "MXU-bound: good; interleave collectives to hide the rest"
+
+
+def table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| MODEL/HLO | roofline_frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"{t['dominant']} | {t['useful_flops_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.3f} | {one_sentence(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        for r in rows:
+            t = r["roofline"]
+            bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", bound * 1e6,
+                 f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f}")
+    md = ["# Roofline (single-pod 16x16, per-device terms)", "",
+          table("single"), "", "# Roofline (multi-pod 2x16x16)", "",
+          table("multi")]
+    (RESULTS / "roofline.md").write_text("\n".join(md))
+    print(f"# wrote {RESULTS/'roofline.md'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Scaling study: reproduce the paper's §7.1 experiment shape at laptop
+scale — MIND vs GAM vs FastSwap across compute blades, four workloads.
+
+    PYTHONPATH=src python examples/scaling_study.py [--accesses 3000]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.emulator import run_workload  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--accesses", type=int, default=3000)
+    ap.add_argument("--threads", type=int, default=5)
+    args = ap.parse_args()
+
+    print(f"{'workload':8s} {'blades':>6s} {'MIND':>10s} {'MIND-PSO':>10s} "
+          f"{'GAM':>10s}")
+    for wl in ("TF", "GC", "M_A", "M_C"):
+        base = None
+        for nb in (1, 2, 4):
+            perfs = {}
+            for system in ("mind", "mind-pso", "gam"):
+                r = run_workload(system, wl, num_compute_blades=nb,
+                                 threads_per_blade=args.threads,
+                                 accesses_per_thread=args.accesses)
+                perfs[system] = r.performance
+            if base is None:
+                base = perfs["mind"]
+            print(f"{wl:8s} {nb:6d} "
+                  f"{perfs['mind']/base:10.2f} "
+                  f"{perfs['mind-pso']/base:10.2f} "
+                  f"{perfs['gam']/base:10.2f}")
+    print("\n(normalized to MIND @ 1 blade, as in Fig. 6 right)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: MIND-coherent paged KV cache with prefix sharing.
+
+Demonstrates the paper's protocol driving a real serving cache:
+  * requests with a common prompt prefix SHARE physical KV pages
+    (directory state S, replicas in the sharer set);
+  * a request that decodes into a shared page triggers S->M through the
+    in-network directory -> multicast invalidation -> copy-on-write;
+  * per-session protection domains (PDIDs) isolate sessions (§4.2).
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced_config  # noqa: E402
+from repro.models.model import LM  # noqa: E402
+from repro.serving.engine import PagedServer  # noqa: E402
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("qwen3-4b"))
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    srv = PagedServer(model, params, max_batch=6, page_tokens=8,
+                      num_pages=256)
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 16)  # exactly 2 full pages
+
+    # Group 1: 4 requests sharing the 16-token prefix, then diverging.
+    for i in range(4):
+        tail = rng.integers(0, cfg.vocab_size, 5)
+        srv.submit(np.concatenate([shared, tail]), max_new_tokens=6)
+    # Group 2: two IDENTICAL 12-token prompts share even the partial tail
+    # page; both decode into it -> S->M through the MIND directory and
+    # copy-on-write of the physical page.
+    ident = rng.integers(0, cfg.vocab_size, 12)
+    srv.submit(ident.copy(), max_new_tokens=6)
+    srv.submit(ident.copy(), max_new_tokens=6)
+
+    stats = srv.run_until_done()
+    print("=== MIND paged-serving stats ===")
+    for k, v in stats.items():
+        print(f"  {k:20s} {v}")
+    assert stats["prefix_hits"] >= 3, "prefix pages were not shared"
+    assert stats["cow"] >= 1, "copy-on-write did not trigger"
+    print("prefix sharing + in-network coherence (CoW) verified.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: MIND (in-network memory management) as a JAX/TPU framework.
+
+Layers: core (the paper), kernels (Pallas data plane), memory/serving
+(paged KV integration), models/configs (10 assigned archs), distributed/
+launch (pjit multi-pod), optim/data/checkpoint/training (substrates).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,138 @@
+"""Sharded, async, restart-safe checkpointing.
+
+Layout (one directory per step):
+    <dir>/step_000100/
+        manifest.json      tree structure, shapes/dtypes, step, extras
+        arrays.npz         one entry per leaf (path-encoded keys)
+        mind_state.json    MIND control-plane snapshot (optional) — the
+                           paper's backup-switch failover state (§3.2)
+
+Writes go to ``<name>.tmp`` then rename — a crash mid-write never corrupts
+the latest checkpoint (the launcher restores the newest COMPLETE step).
+Restore accepts a different mesh than the one that wrote the checkpoint
+(elastic scaling): arrays are saved unsharded and re-placed under the
+target sharding at load.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path
+        )
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state: dict, extras: dict | None = None,
+             mind_snapshot: str | None = None, blocking: bool = True) -> Path:
+        """state: pytree dict (params/opt_state/...); extras: JSON-able."""
+        arrays, _ = _flatten(state)
+        host = {k: np.asarray(v) for k, v in arrays.items()}
+
+        def _write():
+            final = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **host)
+            manifest = {
+                "step": step,
+                "keys": sorted(host.keys()),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+                "extras": extras or {},
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if mind_snapshot is not None:
+                (tmp / "mind_state.json").write_text(mind_snapshot)
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        return self.dir / f"step_{step:08d}"
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def list_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``state_template`` (a pytree of
+        arrays or ShapeDtypeStructs).  Returns (state, step, extras,
+        mind_snapshot)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "arrays.npz")
+        flat_t, treedef = _flatten(state_template)
+        leaves = []
+        for key in flat_t:
+            arr = data[key]
+            leaves.append(arr)
+        # Rebuild in template order.
+        flat_paths, treedef2 = jax.tree_util.tree_flatten_with_path(
+            state_template)
+        restored = jax.tree_util.tree_unflatten(
+            treedef2, [data[k] for k in flat_t.keys()]
+        )
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), restored, shardings
+            )
+        mind = None
+        if (d / "mind_state.json").exists():
+            mind = (d / "mind_state.json").read_text()
+        return restored, step, manifest["extras"], mind

@@ -1,0 +1,20 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    activation="geglu",
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32768),
+    source="hf:xai-org/grok-1; unverified",
+)

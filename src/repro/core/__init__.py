@@ -1,0 +1,63 @@
+"""MIND core: in-network memory management for disaggregated data centers.
+
+The paper's primary contribution, realized as a composable library:
+
+* :mod:`repro.core.address_space`   — global VA space, range partitioning
+* :mod:`repro.core.allocator`       — balanced placement + first-fit
+* :mod:`repro.core.protection`      — decoupled (PDID, vma) -> PC table
+* :mod:`repro.core.directory`       — region directory (switch SRAM model)
+* :mod:`repro.core.coherence`       — in-network MSI protocol engine
+* :mod:`repro.core.bounded_splitting` — §5 adaptive region sizing
+* :mod:`repro.core.switch`          — staged data-plane pipeline
+* :mod:`repro.core.control_plane`   — switch-CPU policies + failover
+* :mod:`repro.core.network_model`   — Fig. 8-calibrated latency model
+* :mod:`repro.core.emulator`        — §7 trace-replay methodology
+"""
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.allocator import MemoryAllocator
+from repro.core.bounded_splitting import (
+    BoundedSplitting,
+    worst_case_subregions,
+    worst_case_total,
+)
+from repro.core.cache import BladePageCache
+from repro.core.coherence import CoherenceEngine
+from repro.core.control_plane import ControlPlane
+from repro.core.directory import CacheDirectory
+from repro.core.emulator import DisaggregatedRack, run_workload
+from repro.core.network_model import NetworkModel
+from repro.core.protection import ProtectionTable
+from repro.core.switch import InNetworkMMU, make_mmu
+from repro.core.types import (
+    PAGE_SIZE,
+    AccessType,
+    MemAccess,
+    MSIState,
+    Perm,
+    VMA,
+)
+
+__all__ = [
+    "GlobalAddressSpace",
+    "MemoryAllocator",
+    "BoundedSplitting",
+    "worst_case_subregions",
+    "worst_case_total",
+    "BladePageCache",
+    "CoherenceEngine",
+    "ControlPlane",
+    "CacheDirectory",
+    "DisaggregatedRack",
+    "run_workload",
+    "NetworkModel",
+    "ProtectionTable",
+    "InNetworkMMU",
+    "make_mmu",
+    "PAGE_SIZE",
+    "AccessType",
+    "MemAccess",
+    "MSIState",
+    "Perm",
+    "VMA",
+]

@@ -1,0 +1,137 @@
+"""Balanced memory allocation with per-blade first-fit (§4.1).
+
+The control plane tracks total allocation per memory blade and places each
+new vma on the *least-allocated* blade (near-optimal load balancing,
+validated in Fig. 9 right via Jain's fairness index).  Inside a blade the
+allocator is a classic address-ordered first-fit over the blade's VA range
+(one-to-one VA<->PA within a blade keeps external fragmentation low).
+
+Allocations are rounded up to power-of-two sizes and aligned to their size
+(§4.4) so each vma's protection needs a *single* TCAM entry.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.types import PAGE_SIZE, VMA, Perm, align_up, next_pow2
+
+
+@dataclass
+class _FreeBlock:
+    base: int
+    length: int
+
+    @property
+    def end(self) -> int:
+        return self.base + self.length
+
+
+class BladeAllocator:
+    """Address-ordered first-fit allocator over one blade's VA range [1]."""
+
+    def __init__(self, va_base: int, capacity: int):
+        self.va_base = va_base
+        self.capacity = capacity
+        self.free: list[_FreeBlock] = [_FreeBlock(va_base, capacity)]
+        self.allocated = 0
+
+    def alloc(self, length: int, align: int) -> int | None:
+        """First fit with alignment; returns base VA or None if no room."""
+        for i, blk in enumerate(self.free):
+            base = align_up(blk.base, align)
+            if base + length <= blk.end:
+                # Carve [base, base+length) out of blk.
+                tail = _FreeBlock(base + length, blk.end - (base + length))
+                head = _FreeBlock(blk.base, base - blk.base)
+                repl = [b for b in (head, tail) if b.length > 0]
+                self.free[i : i + 1] = repl
+                self.allocated += length
+                return base
+        return None
+
+    def free_range(self, base: int, length: int) -> None:
+        self.allocated -= length
+        self.free.append(_FreeBlock(base, length))
+        self.free.sort(key=lambda b: b.base)
+        # Coalesce neighbours.
+        merged: list[_FreeBlock] = []
+        for blk in self.free:
+            if merged and merged[-1].end == blk.base:
+                merged[-1].length += blk.length
+            else:
+                merged.append(blk)
+        self.free = merged
+
+    @property
+    def largest_free(self) -> int:
+        return max((b.length for b in self.free), default=0)
+
+
+class MemoryAllocator:
+    """Control-plane allocator: balanced placement + per-blade first-fit."""
+
+    def __init__(self, gas: GlobalAddressSpace, pow2_align: bool = True):
+        self.gas = gas
+        self.pow2_align = pow2_align
+        self.blades: dict[int, BladeAllocator] = {}
+        self.vmas: dict[int, VMA] = {}  # keyed by base address
+        for b, spec in gas.blades.items():
+            self.blades[b] = BladeAllocator(spec.va_base, spec.capacity)
+
+    # Keep allocator membership in sync with the address space.
+    def on_blade_added(self, blade_id: int) -> None:
+        spec = self.gas.blades[blade_id]
+        self.blades[blade_id] = BladeAllocator(spec.va_base, spec.capacity)
+
+    def on_blade_retired(self, blade_id: int) -> None:
+        self.blades.pop(blade_id, None)
+
+    # ------------------------------------------------------------------ #
+    def _rounded(self, length: int) -> tuple[int, int]:
+        """(rounded_length, alignment).  pow2 rounding per §4.4 so the vma
+        fits one TCAM entry; callers can disable to measure the trade-off
+        (benchmarks/fig9_resources.py does)."""
+        length = align_up(length, PAGE_SIZE)
+        if self.pow2_align:
+            length = next_pow2(length)
+            return length, length
+        return length, PAGE_SIZE
+
+    def mmap(self, pdid: int, length: int, perm: Perm = Perm.RW) -> VMA:
+        """Allocate a vma; places on least-allocated blade (§4.1)."""
+        rlen, align = self._rounded(length)
+        # Least-allocated first; fall back across blades if fragmented.
+        order = sorted(self.blades, key=lambda b: (self.blades[b].allocated, b))
+        for blade_id in order:
+            base = self.blades[blade_id].alloc(rlen, align)
+            if base is not None:
+                vma = VMA(base=base, length=rlen, pdid=pdid, perm=perm, blade_id=blade_id)
+                self.vmas[base] = vma
+                return vma
+        raise MemoryError(f"out of disaggregated memory for request of {length} bytes")
+
+    def munmap(self, base: int) -> None:
+        vma = self.vmas.pop(base)
+        self.blades[vma.blade_id].free_range(vma.base, vma.length)
+
+    # ------------------------------------------------------------------ #
+    def allocation_by_blade(self) -> dict[int, int]:
+        return {b: a.allocated for b, a in self.blades.items()}
+
+    def jain_fairness(self) -> float:
+        """Jain's index over per-blade allocated bytes (Fig. 9 right)."""
+        xs = list(self.allocation_by_blade().values())
+        if not xs or sum(xs) == 0:
+            return 1.0
+        num = sum(xs) ** 2
+        den = len(xs) * sum(x * x for x in xs)
+        return num / den
+
+    def find_vma(self, vaddr: int) -> VMA | None:
+        # Control-plane lookup (the data plane uses the protection table).
+        for vma in self.vmas.values():
+            if vma.contains(vaddr):
+                return vma
+        return None

@@ -1,0 +1,181 @@
+"""Bounded Splitting (§5): adaptive directory-region sizing.
+
+Every epoch, any region whose false-invalidation count (FIC) exceeds a
+threshold ``t`` is split into two buddies (never below 4 KB).  Buddies
+whose combined FIC stays below ``t`` (and whose coherence states are
+compatible) merge back.  The threshold is derived from the global view of
+traffic (Eq. 1):
+
+    t = (1 / (c * N)) * sum_i f_i
+
+with ``N`` the number of M-sized partitions carrying traffic, ``f_i`` the
+per-partition FIC, and ``c`` a constant the control plane adapts to keep
+switch SRAM utilization below 95 % (§5.2 'From theory to practice').
+
+Theorem 5.1 (proved in Appendix A, property-tested in
+tests/test_bounded_splitting.py): the number of sub-regions an M-sized
+partition generates is at most ``(ceil(f/t) - 1) * (1 + log2 M)``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.directory import CacheDirectory
+from repro.core.types import PAGE_SHIFT, MSIState, align_down
+
+
+def worst_case_subregions(f: int, t: float, m_log2: int, page_log2: int = PAGE_SHIFT) -> int:
+    """Theorem 5.1 bound S for one M-sized region with FIC ``f``."""
+    if t <= 0:
+        raise ValueError("threshold must be positive")
+    levels = 1 + (m_log2 - page_log2)  # 1 + log2(M in pages)
+    if f <= t:
+        return 1
+    k = math.ceil(f / t)
+    return max(1, (k - 1)) * levels
+
+
+def worst_case_total(fs: list[int], t: float, m_log2: int) -> int:
+    """S_max over all M-sized regions (§5.2)."""
+    return sum(worst_case_subregions(f, t, m_log2) for f in fs)
+
+
+def threshold_for_capacity(s_max: int, n_regions: int, m_log2: int,
+                           total_fic: int) -> float:
+    """Invert Eq. 1: choose t so the S_max bound fits ``s_max`` slots."""
+    levels = 1 + (m_log2 - PAGE_SHIFT)
+    c = max(1.0, s_max / max(1, n_regions * levels))
+    return max(1.0, total_fic / (c * max(1, n_regions)))
+
+
+@dataclass
+class EpochReport:
+    epoch: int
+    threshold: float
+    c: float
+    splits: int
+    merges: int
+    directory_entries: int
+    utilization: float
+    total_fic: int
+
+
+class BoundedSplitting:
+    """Control-plane epoch processor for the directory."""
+
+    def __init__(
+        self,
+        directory: CacheDirectory,
+        c: float = 1.0,
+        adapt_c: bool = True,
+        merge_enabled: bool = True,
+    ):
+        self.directory = directory
+        self.c = c
+        self.adapt_c = adapt_c
+        self.merge_enabled = merge_enabled
+        self.epoch = 0
+        self.history: list[EpochReport] = []
+
+    # ------------------------------------------------------------------ #
+    def _partition_fics(self) -> dict[int, int]:
+        """FIC summed per M-sized partition (the f_i of Eq. 1)."""
+        m = 1 << self.directory.max_region_log2
+        out: dict[int, int] = {}
+        for key, st in self.directory.stats.items():
+            base, _ = key
+            part = align_down(base, m)
+            out[part] = out.get(part, 0) + st.false_invalidations
+        return out
+
+    def current_threshold(self) -> float:
+        fics = self._partition_fics()
+        n = max(1, len(fics))
+        total = sum(fics.values())
+        return max(1.0, total / (self.c * n))
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self) -> EpochReport:
+        """End-of-epoch processing: adapt c, split hot, merge cold, reset."""
+        self.epoch += 1
+        d = self.directory
+
+        # Adapt c to SRAM pressure (§5.2): utilization > target => larger
+        # t (fewer regions); ample headroom => drive c back toward 1.
+        if self.adapt_c:
+            util = d.utilization()
+            if util > d.resources.sram_util_target:
+                self.c *= 2.0
+            elif util < 0.5 * d.resources.sram_util_target and self.c > 1.0:
+                self.c = max(1.0, self.c / 2.0)
+
+        t = self.current_threshold()
+        splits = self._split_pass(t)
+        merges = self._merge_pass(t) if self.merge_enabled else 0
+
+        report = EpochReport(
+            epoch=self.epoch,
+            threshold=t,
+            c=self.c,
+            splits=splits,
+            merges=merges,
+            directory_entries=d.num_entries(),
+            utilization=d.utilization(),
+            total_fic=sum(s.false_invalidations for s in d.stats.values()),
+        )
+        self.history.append(report)
+        d.reset_epoch_counters()
+        return report
+
+    # ------------------------------------------------------------------ #
+    def _split_pass(self, t: float) -> int:
+        """One split per hot region per epoch (the paper splits once per
+        epoch so an M region stabilizes over <= log2 M epochs)."""
+        d = self.directory
+        splits = 0
+        hot = [
+            key
+            for key, st in d.stats.items()
+            if st.false_invalidations > t and key[1] > PAGE_SHIFT
+        ]
+        # Hottest first so capacity-limited passes help the worst regions.
+        hot.sort(key=lambda k: -d.stats[k].false_invalidations)
+        for key in hot:
+            e = d.entries.get(key)
+            if e is None:
+                continue
+            if d.num_entries() >= d.resources.max_directory_entries:
+                break  # no free SRAM slots: cannot split further
+            d.split(e)
+            splits += 1
+        return splits
+
+    def _merge_pass(self, t: float) -> int:
+        d = self.directory
+        merges = 0
+        merged_something = True
+        while merged_something:
+            merged_something = False
+            for key in list(d.entries.keys()):
+                e = d.entries.get(key)
+                if e is None or e.size_log2 >= d.max_region_log2:
+                    continue
+                buddy = d.buddy_of(e)
+                if buddy is None:
+                    continue
+                fic = (
+                    d.stats[(e.base, e.size_log2)].false_invalidations
+                    + d.stats[(buddy.base, buddy.size_log2)].false_invalidations
+                )
+                if fic > t:
+                    continue
+                if not CacheDirectory.mergeable(e, buddy):
+                    continue
+                merged = d.merge(*sorted((e, buddy), key=lambda x: x.base))
+                # Carry the combined FIC so chained merges stay bounded.
+                d.stats[(merged.base, merged.size_log2)].false_invalidations = fic
+                merges += 1
+                merged_something = True
+        return merges

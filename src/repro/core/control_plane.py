@@ -1,0 +1,187 @@
+"""Switch control plane (§3.2, §6.3): the "switch CPU" program.
+
+Hosts the syscall intercept server (mmap/brk/munmap/mprotect from compute
+blades), owns the global allocation policy, drives Bounded Splitting
+epochs, installs data-plane rules, and supports failover snapshots (§3.2:
+"on a failure, the data plane state is reconstructed at the backup switch
+using the control plane state").
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from repro.core.allocator import MemoryAllocator
+from repro.core.bounded_splitting import BoundedSplitting, EpochReport
+from repro.core.coherence import CoherenceEngine
+from repro.core.switch import InNetworkMMU
+from repro.core.types import VMA, MSIState, Perm
+
+
+@dataclass
+class SyscallResult:
+    retval: int
+    vma: VMA | None = None
+
+
+class ControlPlane:
+    def __init__(
+        self,
+        mmu: InNetworkMMU,
+        allocator: MemoryAllocator,
+        epoch_us: float = 100_000.0,  # 100 ms default epoch (§7)
+        splitting_c: float = 1.0,
+    ):
+        self.mmu = mmu
+        self.allocator = allocator
+        self.epoch_us = epoch_us
+        self.splitting = BoundedSplitting(mmu.engine.directory, c=splitting_c)
+        self._last_epoch_at_us = 0.0
+        self.epoch_reports: list[EpochReport] = []
+
+    # ------------------------------------------------------------------ #
+    # Syscall intercepts (§6.1 'Managing vmas').
+    # ------------------------------------------------------------------ #
+    def sys_mmap(self, pdid: int, length: int, perm: Perm = Perm.RW,
+                 requesting_blade: int | None = None) -> SyscallResult:
+        vma = self.allocator.mmap(pdid, length, perm)
+        self.mmu.protection.grant_vma(vma)
+        if requesting_blade is not None:
+            # §4.4 pre-population: allocating blade gets exclusive access.
+            self.mmu.engine.prepopulate(vma.base, vma.length, requesting_blade)
+        return SyscallResult(retval=vma.base, vma=vma)
+
+    def sys_munmap(self, pdid: int, base: int) -> SyscallResult:
+        vma = self.allocator.vmas.get(base)
+        if vma is None or vma.pdid != pdid:
+            return SyscallResult(retval=-1)
+        self.mmu.protection.revoke(pdid, vma.base, vma.length)
+        # Tear down any directory entries covering the vma.
+        d = self.mmu.engine.directory
+        for e in d.entries_in(vma.base, vma.length):
+            targets = e.sharer_list() if e.state == MSIState.S else (
+                [e.owner] if e.owner >= 0 else [])
+            for b in targets:
+                c = self.mmu.engine.caches.get(b)
+                if c is not None:
+                    c.invalidate_region(e.base, e.size, None)
+            d.remove(e)
+        self.allocator.munmap(base)
+        return SyscallResult(retval=0)
+
+    def sys_mprotect(self, pdid: int, base: int, length: int, perm: Perm) -> SyscallResult:
+        self.mmu.protection.revoke(pdid, base, length)
+        self.mmu.protection.grant(pdid, base, length, perm)
+        return SyscallResult(retval=0)
+
+    # ------------------------------------------------------------------ #
+    # Blade membership (§4.1: ranges change only on join/retire).
+    # ------------------------------------------------------------------ #
+    def blade_join(self, capacity: int | None = None) -> int:
+        spec = self.mmu.gas.add_blade(capacity)
+        self.allocator.on_blade_added(spec.blade_id)
+        return spec.blade_id
+
+    def blade_retire(self, blade_id: int) -> None:
+        # Production flow would first migrate pages off (§4.4); the vmas on
+        # the blade must be empty or migrated — enforced here.
+        alloc = self.allocator.blades[blade_id]
+        assert alloc.allocated == 0, "retire requires prior migration"
+        self.allocator.on_blade_retired(blade_id)
+        self.mmu.gas.retire_blade(blade_id)
+
+    # ------------------------------------------------------------------ #
+    # Epoch driver (Bounded Splitting, §5).
+    # ------------------------------------------------------------------ #
+    def maybe_run_epoch(self, now_us: float) -> EpochReport | None:
+        if now_us - self._last_epoch_at_us < self.epoch_us:
+            return None
+        self._last_epoch_at_us = now_us
+        report = self.splitting.run_epoch()
+        self.epoch_reports.append(report)
+        return report
+
+    # ------------------------------------------------------------------ #
+    # Failover (§3.2): serialize enough control-plane state to rebuild the
+    # data plane on a backup switch.
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> str:
+        d = self.mmu.engine.directory
+        state = {
+            "blades": {
+                str(b): {"va_base": s.va_base, "capacity": s.capacity}
+                for b, s in self.mmu.gas.blades.items()
+            },
+            "vmas": [
+                {
+                    "base": v.base,
+                    "length": v.length,
+                    "pdid": v.pdid,
+                    "perm": int(v.perm),
+                    "blade_id": v.blade_id,
+                }
+                for v in self.allocator.vmas.values()
+            ],
+            "directory": [
+                {
+                    "base": e.base,
+                    "log2": e.size_log2,
+                    "state": int(e.state),
+                    "sharers": e.sharers,
+                    "owner": e.owner,
+                }
+                for e in d.entries.values()
+            ],
+            "splitting": {"c": self.splitting.c, "epoch": self.splitting.epoch},
+        }
+        return json.dumps(state)
+
+    @staticmethod
+    def restore(snapshot_json: str, cache_bytes_per_blade: int,
+                num_compute_blades: int) -> "ControlPlane":
+        """Rebuild a full switch (data plane included) from a snapshot."""
+        from repro.core.switch import make_mmu
+        from repro.core.types import VMA as _VMA, MSIState as _MSI, Perm as _Perm
+
+        state = json.loads(snapshot_json)
+        mmu, alloc = make_mmu(
+            num_memory_blades=len(state["blades"]),
+            num_compute_blades=num_compute_blades,
+            cache_bytes_per_blade=cache_bytes_per_blade,
+        )
+        cp = ControlPlane(mmu, alloc)
+        for v in state["vmas"]:
+            vma = _VMA(v["base"], v["length"], v["pdid"], _Perm(v["perm"]), v["blade_id"])
+            blade_alloc = alloc.blades[vma.blade_id]
+            got = blade_alloc.alloc(vma.length, 1)  # re-reserve exact range
+            # Re-reservation must land on the same base: first-fit over a
+            # fresh arena may not, so rebuild free lists directly instead.
+            if got != vma.base:
+                if got is not None:
+                    blade_alloc.free_range(got, vma.length)
+                _carve_exact(blade_alloc, vma.base, vma.length)
+            alloc.vmas[vma.base] = vma
+            mmu.protection.grant_vma(vma)
+        d = mmu.engine.directory
+        for e in state["directory"]:
+            ent = d._install(e["base"], e["log2"], _MSI(e["state"]), e["sharers"], e["owner"])
+            _ = ent
+        cp.splitting.c = state["splitting"]["c"]
+        cp.splitting.epoch = state["splitting"]["epoch"]
+        return cp
+
+
+def _carve_exact(blade_alloc, base: int, length: int) -> None:
+    """Remove exactly [base, base+length) from a blade's free list."""
+    for i, blk in enumerate(list(blade_alloc.free)):
+        if blk.base <= base and base + length <= blk.end:
+            from repro.core.allocator import _FreeBlock
+
+            head = _FreeBlock(blk.base, base - blk.base)
+            tail = _FreeBlock(base + length, blk.end - (base + length))
+            repl = [b for b in (head, tail) if b.length > 0]
+            blade_alloc.free[i : i + 1] = repl
+            blade_alloc.allocated += length
+            return
+    raise ValueError(f"range {base:#x}+{length:#x} not free during restore")

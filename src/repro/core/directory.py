@@ -1,0 +1,225 @@
+"""In-network cache directory with variable-granularity regions (§4.3, §6.3).
+
+The directory maps a *region* (pow2-sized, naturally aligned, 4 KB..M) to
+its MSI state and sharer bitmap.  Entries live in a fixed pool of SRAM
+slots on the switch; the control plane owns a free list and installs a
+match-action rule per entry (modelled by the (base, log2) keyed map here
+and materialized for the data-plane kernel via ``export_tables``).
+
+Region boundaries form a buddy system inside each M-sized partition of the
+VA space, so a lookup probes at most ``log2(M) - 12 + 1`` aligned bases —
+this mirrors the staged TCAM lookup and keeps the Python control plane
+fast.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.types import (
+    PAGE_SHIFT,
+    DirectoryEntry,
+    MSIState,
+    SwitchResources,
+    align_down,
+)
+
+DEFAULT_MAX_REGION_LOG2 = 21  # M = 2 MB (512 pages), as in the paper's Fig. 10
+DEFAULT_INITIAL_REGION_LOG2 = 14  # 16 KB default initial region (§5, §7)
+
+
+@dataclass
+class RegionStats:
+    """Per-entry counters for the current epoch (feeds Bounded Splitting)."""
+
+    false_invalidations: int = 0
+    accesses: int = 0
+    last_touch: int = 0  # logical time, for capacity-pressure eviction
+
+
+class CacheDirectory:
+    """Control-plane + data-plane view of the region directory."""
+
+    def __init__(
+        self,
+        max_region_log2: int = DEFAULT_MAX_REGION_LOG2,
+        initial_region_log2: int = DEFAULT_INITIAL_REGION_LOG2,
+        resources: SwitchResources | None = None,
+    ):
+        assert PAGE_SHIFT <= initial_region_log2 <= max_region_log2
+        self.max_region_log2 = max_region_log2
+        self.initial_region_log2 = initial_region_log2
+        self.resources = resources or SwitchResources()
+        self.entries: dict[tuple[int, int], DirectoryEntry] = {}
+        self.stats: dict[tuple[int, int], RegionStats] = {}
+        self._clock = 0
+        # Telemetry for Fig. 9 (left) and §7.2.
+        self.peak_entries = 0
+        self.capacity_evictions = 0
+        # Entries force-evicted under capacity pressure that still had
+        # sharers; the coherence engine drains this and multicasts
+        # invalidations.
+        self.pending_evictions: list[DirectoryEntry] = []
+
+    # ------------------------------------------------------------------ #
+    # Lookup.
+    # ------------------------------------------------------------------ #
+    def lookup(self, vaddr: int) -> DirectoryEntry | None:
+        """Find the (unique) region entry containing vaddr, if any."""
+        for log2 in range(PAGE_SHIFT, self.max_region_log2 + 1):
+            key = (align_down(vaddr, 1 << log2), log2)
+            e = self.entries.get(key)
+            if e is not None:
+                self._clock += 1
+                self.stats[key].last_touch = self._clock
+                return e
+        return None
+
+    def get_or_create(self, vaddr: int) -> DirectoryEntry:
+        """Directory-miss path (§6.3): allocate a slot from the free list and
+        create the region covering vaddr at the initial granularity."""
+        e = self.lookup(vaddr)
+        if e is not None:
+            return e
+        log2 = self.initial_region_log2
+        base = align_down(vaddr, 1 << log2)
+        return self._install(base, log2)
+
+    def _install(self, base: int, log2: int, state: MSIState = MSIState.I,
+                 sharers: int = 0, owner: int = -1) -> DirectoryEntry:
+        if len(self.entries) >= self.resources.max_directory_entries:
+            self._evict_for_capacity()
+        e = DirectoryEntry(base=base, size_log2=log2, state=state,
+                           sharers=sharers, owner=owner)
+        key = (base, log2)
+        self.entries[key] = e
+        self._clock += 1
+        self.stats[key] = RegionStats(last_touch=self._clock)
+        self.peak_entries = max(self.peak_entries, len(self.entries))
+        return e
+
+    def _evict_for_capacity(self) -> None:
+        """SRAM slots exhausted: drop the coldest Invalid entry, else the
+        coldest entry overall (its eviction is surfaced to the engine via
+        ``pending_evictions`` so sharers get invalidated — the §7.2
+        'directory storage becomes the bottleneck' behaviour)."""
+        inval = [k for k, e in self.entries.items() if e.state == MSIState.I]
+        pool = inval if inval else list(self.entries.keys())
+        victim = min(pool, key=lambda k: self.stats[k].last_touch)
+        e = self.entries.pop(victim)
+        self.stats.pop(victim)
+        self.capacity_evictions += 1
+        if e.state != MSIState.I:
+            self.pending_evictions.append(e)
+
+    # ------------------------------------------------------------------ #
+    # Split / merge primitives used by Bounded Splitting (§5).
+    # ------------------------------------------------------------------ #
+    def split(self, entry: DirectoryEntry) -> tuple[DirectoryEntry, DirectoryEntry]:
+        """Split a region into two buddies inheriting coherence state.
+
+        Inheriting (state, sharers, owner) is conservative and safe: a
+        child can only be *over*-approximate about sharers, never under.
+        """
+        assert entry.size_log2 > PAGE_SHIFT, "cannot split a 4 KB region"
+        key = (entry.base, entry.size_log2)
+        assert key in self.entries
+        del self.entries[key]
+        self.stats.pop(key)
+        child_log2 = entry.size_log2 - 1
+        left = self._install(entry.base, child_log2, entry.state, entry.sharers, entry.owner)
+        right = self._install(
+            entry.base + (1 << child_log2), child_log2, entry.state, entry.sharers, entry.owner
+        )
+        return left, right
+
+    def buddy_of(self, entry: DirectoryEntry) -> DirectoryEntry | None:
+        if entry.size_log2 >= self.max_region_log2:
+            return None
+        buddy_base = entry.base ^ (1 << entry.size_log2)
+        return self.entries.get((buddy_base, entry.size_log2))
+
+    def merge(self, left: DirectoryEntry, right: DirectoryEntry) -> DirectoryEntry:
+        """Merge two buddies (must be coherence-compatible)."""
+        assert left.size_log2 == right.size_log2
+        assert left.base ^ (1 << left.size_log2) == right.base
+        lo = min(left.base, right.base)
+        assert lo % (1 << (left.size_log2 + 1)) == 0
+        merged_state, sharers, owner = self._merged_coherence(left, right)
+        for e in (left, right):
+            key = (e.base, e.size_log2)
+            del self.entries[key]
+            self.stats.pop(key)
+        return self._install(lo, left.size_log2 + 1, merged_state, sharers, owner)
+
+    @staticmethod
+    def mergeable(left: DirectoryEntry, right: DirectoryEntry) -> bool:
+        """Coherence-compatibility for merging: cannot combine two regions
+        with *different* exclusive owners — that would create a region in M
+        with two owners."""
+        if MSIState.M in (left.state, right.state):
+            owners = {e.owner for e in (left, right) if e.state == MSIState.M}
+            others = [e for e in (left, right) if e.state != MSIState.M]
+            if len(owners) > 1:
+                return False
+            # M + S with foreign sharers cannot merge into a single state.
+            owner = next(iter(owners))
+            for e in others:
+                if e.state == MSIState.S and e.sharers & ~(1 << owner):
+                    return False
+        return True
+
+    @staticmethod
+    def _merged_coherence(left: DirectoryEntry, right: DirectoryEntry):
+        states = (left.state, right.state)
+        if MSIState.M in states:
+            owner = left.owner if left.state == MSIState.M else right.owner
+            return MSIState.M, 0, owner
+        if MSIState.S in states:
+            return MSIState.S, left.sharers | right.sharers, -1
+        return MSIState.I, 0, -1
+
+    # ------------------------------------------------------------------ #
+    # Epoch bookkeeping.
+    # ------------------------------------------------------------------ #
+    def record_false_invalidations(self, entry: DirectoryEntry, count: int) -> None:
+        key = (entry.base, entry.size_log2)
+        if key in self.stats:
+            self.stats[key].false_invalidations += count
+
+    def record_access(self, entry: DirectoryEntry) -> None:
+        key = (entry.base, entry.size_log2)
+        if key in self.stats:
+            self.stats[key].accesses += 1
+
+    def reset_epoch_counters(self) -> None:
+        for s in self.stats.values():
+            s.false_invalidations = 0
+            s.accesses = 0
+
+    # ------------------------------------------------------------------ #
+    def num_entries(self) -> int:
+        return len(self.entries)
+
+    def utilization(self) -> float:
+        return len(self.entries) / self.resources.max_directory_entries
+
+    def remove(self, entry: DirectoryEntry) -> None:
+        key = (entry.base, entry.size_log2)
+        self.entries.pop(key, None)
+        self.stats.pop(key, None)
+
+    def entries_in(self, base: int, length: int) -> list[DirectoryEntry]:
+        return [
+            e
+            for e in self.entries.values()
+            if e.base < base + length and base < e.end
+        ]
+
+    def export_tables(self):
+        """(base, log2, state, sharers, owner) rows, smallest regions first
+        (LPM: most-specific wins) — consumed by kernels/directory_msi.py."""
+        rows = sorted(
+            self.entries.values(), key=lambda e: (e.size_log2, e.base)
+        )
+        return [(e.base, e.size_log2, int(e.state), e.sharers, e.owner) for e in rows]

@@ -1,0 +1,331 @@
+"""Trace-driven emulator of the disaggregated rack (§7 methodology).
+
+The paper replays PIN-captured memory traces through MIND, GAM and
+FastSwap on a real rack.  We replay the statistically-matched traces of
+:mod:`repro.core.traces` through behavioural models of the same three
+systems plus the paper's two simulated variants:
+
+  * ``mind``       — full in-network MMU (this work), TSO.
+  * ``mind-pso``   — §7.1 simulated PSO relaxation: remote writes retire
+                     asynchronously; reads and queueing remain.
+  * ``mind-pso+``  — PSO plus infinite switch directory capacity.
+  * ``gam``        — compute-centric software DSM baseline (GAM [34]):
+                     distributed directory at compute blades, software
+                     overhead on every access, PSO writes.
+  * ``fastswap``   — swap-based, single-blade, no sharing (FastSwap [27]).
+
+Each emulated thread owns a logical clock; per-access latency from the
+:class:`NetworkModel` advances it.  Reported performance is
+``total_accesses / max_thread_clock`` (inverse runtime, as in Fig. 6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cache import BladePageCache
+from repro.core.control_plane import ControlPlane
+from repro.core.network_model import NetworkModel
+from repro.core.switch import make_mmu
+from repro.core.traces import Trace
+from repro.core.types import (
+    PAGE_SIZE,
+    AccessType,
+    EpochStats,
+    MemAccess,
+    NetworkConstants,
+    Perm,
+)
+
+
+@dataclass
+class EmulationResult:
+    system: str
+    workload: str
+    num_blades: int
+    threads_per_blade: int
+    runtime_us: float
+    performance: float  # accesses per us (inverse runtime x accesses)
+    stats: EpochStats
+    directory_timeline: list[int] = field(default_factory=list)
+    epoch_reports: list = field(default_factory=list)
+    latency_breakdown_us: dict[str, float] = field(default_factory=dict)
+    transition_latencies: dict[str, list[float]] = field(default_factory=dict)
+
+    @property
+    def mean_access_us(self) -> float:
+        return self.runtime_us * self.num_blades * self.threads_per_blade / max(
+            1, self.stats.accesses
+        )
+
+
+class DisaggregatedRack:
+    """One emulated rack: N compute blades x M memory blades + switch."""
+
+    def __init__(
+        self,
+        system: str = "mind",
+        num_compute_blades: int = 1,
+        threads_per_blade: int = 10,
+        num_memory_blades: int = 8,
+        cache_bytes_per_blade: int = 512 << 20,  # 512 MB, ~25% of footprint (§7)
+        max_directory_entries: int = 30_000,
+        initial_region_log2: int = 14,  # 16 KB (§7)
+        max_region_log2: int = 21,  # 2 MB
+        epoch_us: float = 10_000.0,
+        splitting_enabled: bool = True,
+        constants: NetworkConstants | None = None,
+        downgrade_keeps_copy: bool = False,
+        gam_sw_cores: int = 4,
+    ):
+        assert system in ("mind", "mind-pso", "mind-pso+", "gam", "fastswap")
+        self.system = system
+        self.nb = num_compute_blades
+        self.tpb = threads_per_blade
+        self.epoch_us = epoch_us
+        self.splitting_enabled = splitting_enabled
+        self.gam_sw_cores = gam_sw_cores
+        if system == "mind-pso+":
+            max_directory_entries = 10**9  # infinite switch capacity
+        self.mmu, self.allocator = make_mmu(
+            num_memory_blades=num_memory_blades,
+            num_compute_blades=num_compute_blades,
+            cache_bytes_per_blade=cache_bytes_per_blade,
+            max_directory_entries=max_directory_entries,
+            initial_region_log2=initial_region_log2,
+            max_region_log2=max_region_log2,
+            downgrade_keeps_copy=downgrade_keeps_copy,
+        )
+        if constants is not None:
+            self.mmu.network = NetworkModel(constants)
+        self.cp = ControlPlane(self.mmu, self.allocator, epoch_us=epoch_us)
+        # fastswap/gam state
+        self._fs_caches = {
+            b: BladePageCache(b, cache_bytes_per_blade) for b in range(num_compute_blades)
+        }
+        self._gam_dir: dict[int, tuple[int, int, int]] = {}  # page->(state,sharers,owner)
+        self._alt_stats = EpochStats()  # gam/fastswap counters
+
+    # ------------------------------------------------------------------ #
+    def _map_arena(self, trace: Trace) -> list[tuple[int, int, int]]:
+        """Allocate vmas for the trace arena; returns sorted
+        (arena_start, arena_end, vaddr_base) segments."""
+        segs: list[tuple[int, int, int]] = []
+        pdid = 1
+        shared = trace.shared_bytes
+        if shared > 0:
+            vma = self.cp.sys_mmap(pdid, shared, Perm.RW, requesting_blade=0).vma
+            segs.append((0, shared, vma.base))
+        priv_total = trace.arena_bytes - shared
+        if priv_total > 0:
+            nthreads = self.nb * self.tpb
+            per = priv_total // nthreads if nthreads else priv_total
+            if per > 0:
+                for t in range(nthreads):
+                    blade = t // self.tpb
+                    vma = self.cp.sys_mmap(
+                        pdid, per, Perm.RW, requesting_blade=blade
+                    ).vma
+                    segs.append((shared + t * per, shared + (t + 1) * per, vma.base))
+        return sorted(segs)
+
+    def _to_vaddr(self, segs, arena_off: int) -> int:
+        # Binary search over segments.
+        lo, hi = 0, len(segs) - 1
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            s, e, base = segs[mid]
+            if arena_off < s:
+                hi = mid - 1
+            elif arena_off >= e:
+                lo = mid + 1
+            else:
+                return base + (arena_off - s)
+        # Offsets beyond the last slice (rounding): clamp into last seg.
+        s, e, base = segs[-1]
+        return base + min(arena_off - s, e - s - 1) if arena_off >= e else segs[0][2]
+
+    # ------------------------------------------------------------------ #
+    def run(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
+        segs = self._map_arena(trace)
+        nthreads = self.nb * self.tpb
+        clocks = np.zeros(nthreads)
+        breakdown = {"fetch": 0.0, "invalidation": 0.0, "tlb": 0.0, "queue": 0.0,
+                     "switch": 0.0, "local": 0.0, "software": 0.0}
+        trans_lat: dict[str, list[float]] = {}
+        dir_timeline: list[int] = []
+        n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
+        next_epoch_at = self.epoch_us
+        pso = self.system in ("mind-pso", "mind-pso+", "gam")
+
+        for i in range(n):
+            t = int(trace.threads[i]) % nthreads
+            blade = t // self.tpb
+            vaddr = self._to_vaddr(segs, int(trace.offsets[i]))
+            is_write = bool(trace.ops[i])
+            if self.system in ("mind", "mind-pso", "mind-pso+"):
+                us = self._mind_access(blade, vaddr, is_write, pso, breakdown, trans_lat)
+            elif self.system == "gam":
+                us = self._gam_access(blade, vaddr, is_write, breakdown)
+            else:
+                us = self._fastswap_access(blade, vaddr, is_write, breakdown)
+            clocks[t] += us
+
+            # Epoch boundary: driven by emulated time (mean thread clock).
+            if self.splitting_enabled and clocks.mean() >= next_epoch_at:
+                if self.system.startswith("mind"):
+                    self.cp.maybe_run_epoch(now_us=next_epoch_at)
+                    dir_timeline.append(self.mmu.engine.directory.num_entries())
+                    self.mmu.network.begin_window()
+                next_epoch_at += self.epoch_us
+
+        stats = self.mmu.engine.stats if self.system.startswith("mind") else self._alt_stats
+        runtime = float(clocks.max()) if n else 0.0
+        return EmulationResult(
+            system=self.system,
+            workload=trace.name,
+            num_blades=self.nb,
+            threads_per_blade=self.tpb,
+            runtime_us=runtime,
+            performance=(n / runtime) if runtime > 0 else 0.0,
+            stats=stats,
+            directory_timeline=dir_timeline,
+            epoch_reports=list(self.cp.epoch_reports),
+            latency_breakdown_us=breakdown,
+            transition_latencies=trans_lat,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _mind_access(self, blade, vaddr, is_write, pso, breakdown, trans_lat) -> float:
+        req = MemAccess(
+            blade_id=blade,
+            pdid=1,
+            vaddr=vaddr,
+            access=AccessType.WRITE if is_write else AccessType.READ,
+        )
+        res = self.mmu.handle(req)
+        lb = res.latency
+        breakdown["fetch"] += lb.fetch_us
+        breakdown["invalidation"] += lb.invalidation_us
+        breakdown["tlb"] += lb.tlb_us
+        breakdown["queue"] += lb.queue_us
+        breakdown["switch"] += lb.switch_us
+        if res.rec is not None:
+            trans_lat.setdefault(res.rec.kind, []).append(lb.total_us)
+        if pso and is_write and not res.acts.hit_local:
+            # PSO: the store retires into a write buffer; only issue cost
+            # is exposed.  Queueing at invalidation targets persists (the
+            # paper's simulation cannot elide it either).
+            return self.mmu.network.k.switch_pipeline_ns / 1000.0 + lb.queue_us
+        return lb.total_us
+
+    # ------------------------------------------------------------------ #
+    def _gam_access(self, blade, vaddr, is_write, breakdown) -> float:
+        """Compute-centric DSM (§2.2): home-node directory at compute
+        blades, software overhead per access, PSO writes."""
+        st = self._alt_stats
+        st.accesses += 1
+        net = self.mmu.network
+        page = vaddr & ~(PAGE_SIZE - 1)
+        cache = self._fs_caches[blade]
+        sw = net.gam_local_us()
+        # Software contention: beyond ~gam_sw_cores threads/blade the
+        # user-level library serializes (lock per access), Fig. 6 left.
+        contention = max(1.0, self.tpb / self.gam_sw_cores)
+        sw *= contention
+        breakdown["software"] += sw
+        state, sharers, owner = self._gam_dir.get(page, (0, 0, -1))
+        me = 1 << blade
+        if cache.has(vaddr) and (not is_write or (state == 2 and owner == blade)):
+            cache.touch(vaddr)
+            if is_write:
+                cache.mark_dirty(vaddr)
+            st.local_hits += 1
+            breakdown["local"] += sw
+            return sw
+        st.remote_fetches += 1
+        invs = 0
+        if is_write:
+            if state == 1:
+                invs = bin(sharers & ~me).count("1")
+                for b in _bits(sharers & ~me):
+                    self._fs_caches[b].invalidate_region(page, PAGE_SIZE, vaddr)
+                    st.invalidations += 1
+            elif state == 2 and owner != blade:
+                invs = 1
+                self._fs_caches[owner].invalidate_region(page, PAGE_SIZE, vaddr)
+                st.invalidations += 1
+            self._gam_dir[page] = (2, me, blade)
+        else:
+            if state == 2 and owner != blade:
+                invs = 1
+                self._fs_caches[owner].invalidate_region(page, PAGE_SIZE, vaddr)
+                st.invalidations += 1
+                self._gam_dir[page] = (1, me | (1 << owner), -1)
+            else:
+                self._gam_dir[page] = (1, sharers | me, -1)
+        cache.insert(vaddr, dirty=is_write)
+        remote = net.gam_remote_us(invs)
+        breakdown["fetch"] += remote
+        if is_write:
+            # PSO write: asynchronous completion, only issue cost exposed.
+            return sw
+        return sw + remote
+
+    def _fastswap_access(self, blade, vaddr, is_write, breakdown) -> float:
+        """Swap-based far memory: per-blade private working set, no
+        coherence.  (FastSwap does not scale past one blade, §7.1.)"""
+        st = self._alt_stats
+        st.accesses += 1
+        net = self.mmu.network
+        cache = self._fs_caches[blade]
+        if cache.has(vaddr):
+            cache.touch(vaddr)
+            if is_write:
+                cache.mark_dirty(vaddr)
+            st.local_hits += 1
+            breakdown["local"] += net.k.local_dram_ns / 1000.0
+            return net.k.local_dram_ns / 1000.0
+        st.remote_fetches += 1
+        flushed = cache.insert(vaddr, dirty=is_write)
+        st.flushed_pages += flushed
+        us = net.fastswap_remote_us() + net.page_transfer_us(flushed)
+        breakdown["fetch"] += us
+        return us
+
+
+def _bits(bm: int) -> list[int]:
+    out, i = [], 0
+    while bm:
+        if bm & 1:
+            out.append(i)
+        bm >>= 1
+        i += 1
+    return out
+
+
+def run_workload(
+    system: str,
+    workload: str,
+    num_compute_blades: int,
+    threads_per_blade: int = 10,
+    accesses_per_thread: int = 5_000,
+    **rack_kw,
+) -> EmulationResult:
+    """Convenience one-shot used by benchmarks and tests."""
+    from repro.core import traces as T
+
+    gen = T.WORKLOADS[workload]
+    trace = gen(
+        num_threads=num_compute_blades * threads_per_blade,
+        accesses_per_thread=accesses_per_thread,
+    )
+    rack = DisaggregatedRack(
+        system=system,
+        num_compute_blades=num_compute_blades,
+        threads_per_blade=threads_per_blade,
+        **rack_kw,
+    )
+    return rack.run(trace)

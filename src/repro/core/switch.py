@@ -1,0 +1,123 @@
+"""The staged switch data-plane pipeline (§3.2, §6.3).
+
+Models the ingress pipeline order of the MIND switch program:
+
+    parse -> [protection match] -> [translation match] -> [directory MAU 1:
+    lookup] -> [MAU 2: materialized transition table] -> (recirculate:
+    directory write-back) -> egress multicast w/ sharer filter.
+
+Protection and translation run in PARALLEL in the real ASIC (§3.2 "In
+parallel, the data plane also ensures the requesting process has
+permissions"); we model that by charging a single pipeline traversal.
+
+This module is the *behavioural* model used by the emulator and tests; the
+batched JAX/Pallas realization of stages lives in kernels/range_match.py
+and kernels/directory_msi.py, and ``export_dataplane_tables`` below is the
+bridge that materializes match-action tables for those kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.coherence import CoherenceEngine, TransitionRecord
+from repro.core.network_model import LatencyBreakdown, NetworkModel
+from repro.core.protection import ProtectionTable
+from repro.core.types import AccessType, CoherenceActions, MemAccess
+
+
+@dataclass
+class SwitchResult:
+    acts: CoherenceActions
+    rec: TransitionRecord | None
+    latency: LatencyBreakdown
+    target_blade: int = -1  # memory blade after translation (if fetched)
+    paddr: int = -1
+
+
+class InNetworkMMU:
+    """Ties the stages together; one instance == one programmable switch."""
+
+    def __init__(
+        self,
+        gas: GlobalAddressSpace,
+        protection: ProtectionTable,
+        engine: CoherenceEngine,
+        network: NetworkModel,
+    ):
+        self.gas = gas
+        self.protection = protection
+        self.engine = engine
+        self.network = network
+
+    # ------------------------------------------------------------------ #
+    def handle(self, req: MemAccess) -> SwitchResult:
+        # Stage A (parallel in ASIC): protection check.
+        if not self.protection.check(req.pdid, req.vaddr, req.access):
+            acts = CoherenceActions(fault="protection")
+            self.engine.stats.faults += 1
+            return SwitchResult(acts, None, LatencyBreakdown(
+                switch_us=self.network.k.switch_pipeline_ns / 1000.0))
+
+        # Stage B: coherence (directory MAUs).  The directory decides
+        # whether a fetch is needed and from where.
+        acts, rec = self.engine.access(req)
+
+        # Stage C: translation — only exercised when the request leaves the
+        # switch toward a memory blade (fetch_from_memory).
+        target, paddr = -1, -1
+        if acts.fetch_from_memory:
+            target, paddr = self.gas.translate(req.vaddr)
+
+        lat = self.network.latency(acts, rec)
+        return SwitchResult(acts, rec, lat, target, paddr)
+
+    # ------------------------------------------------------------------ #
+    def export_dataplane_tables(self) -> dict[str, np.ndarray]:
+        """Materialize every match-action table as dense arrays, the form
+        the Pallas data-plane kernels consume (and that a P4 compiler
+        would install as table entries)."""
+        trans = self.gas.export_tables()
+        prot = self.protection.export_tables()
+        dirs = self.engine.directory.export_tables()
+        out: dict[str, np.ndarray] = {}
+        out["translate"] = np.asarray(trans, dtype=np.int64).reshape(-1, 4)
+        out["protect"] = np.asarray(prot, dtype=np.int64).reshape(-1, 4)
+        out["directory"] = np.asarray(dirs, dtype=np.int64).reshape(-1, 5)
+        return out
+
+
+def make_mmu(
+    num_memory_blades: int,
+    num_compute_blades: int,
+    cache_bytes_per_blade: int,
+    max_directory_entries: int = 30_000,
+    initial_region_log2: int = 14,
+    max_region_log2: int = 21,
+    downgrade_keeps_copy: bool = False,
+):
+    """Convenience factory wiring a full single-switch MIND instance."""
+    from repro.core.allocator import MemoryAllocator
+    from repro.core.cache import BladePageCache
+    from repro.core.directory import CacheDirectory
+    from repro.core.types import SwitchResources
+
+    gas = GlobalAddressSpace()
+    for _ in range(num_memory_blades):
+        gas.add_blade()
+    alloc = MemoryAllocator(gas)
+    prot = ProtectionTable()
+    directory = CacheDirectory(
+        max_region_log2=max_region_log2,
+        initial_region_log2=initial_region_log2,
+        resources=SwitchResources(max_directory_entries=max_directory_entries),
+    )
+    caches = {
+        b: BladePageCache(b, cache_bytes_per_blade) for b in range(num_compute_blades)
+    }
+    engine = CoherenceEngine(directory, caches, downgrade_keeps_copy=downgrade_keeps_copy)
+    mmu = InNetworkMMU(gas, prot, engine, NetworkModel())
+    return mmu, alloc

@@ -1,0 +1,239 @@
+"""Workload trace generators mirroring the paper's §7 methodology.
+
+The paper captures memory accesses from TensorFlow (TF), GraphChi
+pagerank (GC) and Memcached YCSB-A/C (M_A, M_C) with Intel PIN and replays
+identical traces through every compared system.  We generate statistically
+matched traces instead (no PIN on TPU hosts):
+
+  * TF  — phase-structured: large private tensors per worker (weights /
+          activations) with mostly-sequential streaming, a small shared
+          parameter area written by all workers once per step (~2.5x less
+          shared-write volume than GC, §7.1).
+  * GC  — random graph traversal: power-law vertex popularity, heavy
+          read-modify-write on shared vertex data (contentious).
+  * M_A — YCSB-A: 50% reads / 50% updates over zipfian keys, all shared.
+  * M_C — YCSB-C: 100% reads over zipfian keys, all shared.
+  * uniform(read_ratio, sharing_ratio) — the microbenchmark of Fig. 8
+          (center/right): uniform random over 400k pages.
+
+Every generator yields (thread_id, op, vaddr_offset) triples with
+vaddr_offset relative to a workload-owned arena; the emulator maps threads
+onto compute blades and offsets into allocated vmas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.types import PAGE_SIZE
+
+READ, WRITE = 0, 1
+
+
+@dataclass
+class Trace:
+    name: str
+    threads: np.ndarray  # int32 [n]
+    ops: np.ndarray  # int8 [n] (0=read, 1=write)
+    offsets: np.ndarray  # int64 [n] byte offsets
+    arena_bytes: int  # total footprint
+    shared_bytes: int  # prefix of arena that is shared across threads
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+
+def _zipf_pages(rng, n, num_pages, a=1.2):
+    # Bounded zipfian over [0, num_pages).
+    ranks = rng.zipf(a, size=n)
+    return (ranks - 1) % num_pages
+
+
+def tf_trace(
+    num_threads: int,
+    accesses_per_thread: int = 20_000,
+    private_mb_per_thread: int = 24,
+    shared_mb: int = 8,
+    shared_write_frac: float = 0.004,
+    seed: int = 0,
+) -> Trace:
+    """TensorFlow-like: streaming private + small shared parameter area.
+
+    Calibrated against Fig. 6/7: data-parallel training reads shared
+    parameters often but writes them rarely (one update per step), so
+    shared WRITES are ~0.01% of accesses — this is what lets MIND scale
+    near-linearly on TF while GC/M_A do not (§7.1)."""
+    rng = np.random.default_rng(seed)
+    shared_bytes = shared_mb << 20
+    priv_bytes = private_mb_per_thread << 20
+    arena = shared_bytes + num_threads * priv_bytes
+    ths, ops, offs = [], [], []
+    priv_pages = priv_bytes // PAGE_SIZE
+    shared_pages = shared_bytes // PAGE_SIZE
+    for t in range(num_threads):
+        n = accesses_per_thread
+        is_shared = rng.random(n) < 0.03  # ~3% of accesses hit params
+        # Private accesses stream sequentially with some reuse.
+        stream = (np.arange(n) * 7) % priv_pages
+        jitter = rng.integers(0, 4, n)
+        priv_off = shared_bytes + t * priv_bytes + ((stream + jitter) % priv_pages) * PAGE_SIZE
+        shr_off = _zipf_pages(rng, n, shared_pages, a=1.2) * PAGE_SIZE
+        off = np.where(is_shared, shr_off, priv_off)
+        # Writes: activations written privately (~35%), params rarely.
+        wr_priv = rng.random(n) < 0.35
+        wr_shr = rng.random(n) < shared_write_frac
+        op = np.where(is_shared, wr_shr, wr_priv).astype(np.int8)
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append(off.astype(np.int64))
+    return _interleave("TF", ths, ops, offs, arena, shared_bytes, rng)
+
+
+def gc_trace(
+    num_threads: int,
+    accesses_per_thread: int = 20_000,
+    graph_mb: int = 64,
+    write_frac: float = 0.30,
+    seed: int = 1,
+) -> Trace:
+    """GraphChi-like: random traversal over shared vertex data, heavy RMW
+    (~2.5x the shared-write volume of TF, §7.1)."""
+    rng = np.random.default_rng(seed)
+    arena = graph_mb << 20
+    pages = arena // PAGE_SIZE
+    ths, ops, offs = [], [], []
+    for t in range(num_threads):
+        n = accesses_per_thread
+        page = _zipf_pages(rng, n, pages, a=1.3)
+        op = (rng.random(n) < write_frac).astype(np.int8)
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append((page * PAGE_SIZE).astype(np.int64))
+    return _interleave("GC", ths, ops, offs, arena, arena, rng)
+
+
+def ycsb_trace(
+    name: str,
+    num_threads: int,
+    read_ratio: float,
+    accesses_per_thread: int = 20_000,
+    store_mb: int = 24,
+    zipf_a: float = 1.1,
+    seed: int = 2,
+) -> Trace:
+    """Memcached/YCSB-like: zipfian keys over a fully shared store."""
+    rng = np.random.default_rng(seed)
+    arena = store_mb << 20
+    pages = arena // PAGE_SIZE
+    ths, ops, offs = [], [], []
+    for t in range(num_threads):
+        n = accesses_per_thread
+        page = _zipf_pages(rng, n, pages, a=zipf_a)
+        op = (rng.random(n) >= read_ratio).astype(np.int8)
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append((page * PAGE_SIZE).astype(np.int64))
+    return _interleave(name, ths, ops, offs, arena, arena, rng)
+
+
+def ma_trace(num_threads: int, **kw) -> Trace:
+    return ycsb_trace("M_A", num_threads, read_ratio=0.5, seed=3, **kw)
+
+
+def mc_trace(num_threads: int, **kw) -> Trace:
+    return ycsb_trace("M_C", num_threads, read_ratio=1.0, seed=4, **kw)
+
+
+def uniform_trace(
+    num_threads: int,
+    read_ratio: float,
+    sharing_ratio: float,
+    accesses_per_thread: int = 10_000,
+    working_set_pages: int = 400_000,
+    seed: int = 5,
+) -> Trace:
+    """Fig. 8 (center/right) microbenchmark: uniform random accesses; a
+    ``sharing_ratio`` fraction go to a region shared by all threads, the
+    rest to thread-private slices."""
+    rng = np.random.default_rng(seed)
+    shared_pages = max(1, int(working_set_pages * 0.5))
+    priv_pages = max(1, (working_set_pages - shared_pages) // max(1, num_threads))
+    shared_bytes = shared_pages * PAGE_SIZE
+    arena = shared_bytes + num_threads * priv_pages * PAGE_SIZE
+    ths, ops, offs = [], [], []
+    for t in range(num_threads):
+        n = accesses_per_thread
+        to_shared = rng.random(n) < sharing_ratio
+        shr = rng.integers(0, shared_pages, n) * PAGE_SIZE
+        prv = shared_bytes + (t * priv_pages + rng.integers(0, priv_pages, n)) * PAGE_SIZE
+        off = np.where(to_shared, shr, prv).astype(np.int64)
+        op = (rng.random(n) >= read_ratio).astype(np.int8)
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append(off)
+    return _interleave(
+        f"uniform(R={read_ratio},S={sharing_ratio})", ths, ops, offs, arena,
+        shared_bytes, rng,
+    )
+
+
+def kv_serving_trace(
+    num_threads: int,
+    accesses_per_thread: int = 20_000,
+    prefix_mb: int = 32,
+    private_mb_per_thread: int = 8,
+    append_frac: float = 0.05,
+    seed: int = 7,
+) -> Trace:
+    """TPU-adaptation workload: data-parallel serving replicas reading a
+    shared KV prefix-cache pool and appending to private decode pages.
+    Used by the serving-path integration benchmarks."""
+    rng = np.random.default_rng(seed)
+    shared_bytes = prefix_mb << 20
+    priv_bytes = private_mb_per_thread << 20
+    arena = shared_bytes + num_threads * priv_bytes
+    shared_pages = shared_bytes // PAGE_SIZE
+    priv_pages = priv_bytes // PAGE_SIZE
+    ths, ops, offs = [], [], []
+    for t in range(num_threads):
+        n = accesses_per_thread
+        to_shared = rng.random(n) < 0.6  # prefix reuse dominates prefill
+        shr = _zipf_pages(rng, n, shared_pages, a=1.4) * PAGE_SIZE
+        seq = (np.arange(n) // 4) % priv_pages  # decode appends sequentially
+        prv = shared_bytes + t * priv_bytes + seq * PAGE_SIZE
+        off = np.where(to_shared, shr, prv).astype(np.int64)
+        op = np.where(
+            to_shared, rng.random(n) < append_frac, np.ones(n, bool)
+        ).astype(np.int8)  # private decode pages are written
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append(off)
+    return _interleave("KV", ths, ops, offs, arena, shared_bytes, rng)
+
+
+def _interleave(name, ths, ops, offs, arena, shared_bytes, rng) -> Trace:
+    th = np.concatenate(ths)
+    op = np.concatenate(ops)
+    off = np.concatenate(offs)
+    # Round-robin interleave across threads approximates concurrent
+    # execution; a random permutation would break per-thread streaming.
+    order = np.argsort(np.concatenate([np.arange(len(t)) for t in ths]), kind="stable")
+    return Trace(
+        name=name,
+        threads=th[order],
+        ops=op[order],
+        offsets=off[order],
+        arena_bytes=int(arena),
+        shared_bytes=int(shared_bytes),
+    )
+
+
+WORKLOADS = {
+    "TF": tf_trace,
+    "GC": gc_trace,
+    "M_A": ma_trace,
+    "M_C": mc_trace,
+    "KV": kv_serving_trace,
+}

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, ShardedLoader, make_source
+
+__all__ = ["DataConfig", "ShardedLoader", "make_source"]

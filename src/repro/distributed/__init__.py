@@ -1,0 +1,3 @@
+from repro.distributed import hlo_analysis, sharding
+
+__all__ = ["hlo_analysis", "sharding"]

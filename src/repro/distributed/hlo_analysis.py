@@ -1,0 +1,433 @@
+"""HLO analysis: trip-count-aware FLOPs / bytes / collective traffic.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — with
+layer-scanned models that undercounts FLOPs by the trip count (~60x for a
+62-layer scan), so we parse the optimized HLO module ourselves:
+
+  1. split the module into computations;
+  2. build the call graph (while bodies/conds, fusions, calls,
+     conditionals) and propagate execution multipliers: a while body
+     executes trip_count times (trip counts recovered from the loop
+     condition's comparison constant);
+  3. per computation, count
+       * dot/convolution FLOPs (2*M*N*K from shapes; all computations),
+       * bytes accessed (sum of operand+result buffer sizes; only in
+         control-flow computations — fusion-internal instructions are
+         register-level),
+       * collective result bytes by op kind;
+  4. total = sum over computations of (count x multiplier).
+
+The compiled module under GSPMD is the PER-DEVICE program, so totals are
+per-device: compute term = flops / peak_flops (no chip division), and the
+analytic MODEL_FLOPS must be divided by chip count when compared.
+
+CALIBRATION CAVEAT (documented in EXPERIMENTS.md §Roofline): the dry-run
+compiles with the CPU backend, whose precision rewrites upcast bf16 dot
+outputs to f32 before collectives — memory/collective byte terms for bf16
+models are therefore up to 2x pessimistic vs. a real TPU lowering.
+Before/after deltas in §Perf compare like with like and are unaffected.
+
+Roofline terms (per-device seconds, TPU v5e constants):
+    compute    = device_FLOPs / 197e12 bf16 FLOP/s
+    memory     = device_bytes / 819e9 B/s HBM
+    collective = device_collective_bytes / 50e9 B/s ICI link
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count[^}]*?\"n\"\s*:\s*\"?(\d+)")
+_CALL_ATTRS = ("body=", "condition=", "calls=", "to_apply=",
+               "true_computation=", "false_computation=")
+_COMP_REF_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation)="
+    r"%?([\w\.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_RE = re.compile(r"\bdot\(")
+_OPNAME_RE = re.compile(r"=\s*(?:\(?[a-z][a-z0-9]*\[[^=]*?\)?\s*)?([a-z][a-z0-9\-]*)\(")
+
+
+def _shape_elems_bytes(dtype: str, dims: str) -> tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _line_bytes(line: str) -> int:
+    """Sum of all buffer shapes mentioned on the line (result + operands)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(line):
+        if dtype in _DTYPE_BYTES:
+            _, b = _shape_elems_bytes(dtype, dims)
+            total += b
+    return total
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the instruction's result (first shape group after '=')."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    rest = line[eq + 1 :]
+    # result type ends at the opcode token; just take shapes before '('.
+    par = rest.find("(")
+    seg = rest[:par] if par > 0 else rest
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(seg):
+        if dtype in _DTYPE_BYTES:
+            total += _shape_elems_bytes(dtype, dims)[1]
+    return total
+
+
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)\s*\)")
+
+
+def _dot_flops(line: str, def_dims: dict) -> int:
+    """2 * prod(result dims) * contraction size for a dot instruction.
+
+    Optimized HLO prints operands without shapes, so the lhs dims are
+    resolved through ``def_dims`` (name -> dims of the defining line)."""
+    eq = line.find("=")
+    par = line.find("dot(")
+    if eq < 0 or par < 0:
+        return 0
+    res_seg = line[eq + 1 : par]
+    res_shapes = _SHAPE_RE.findall(res_seg)
+    if not res_shapes:
+        return 0
+    res_elems = 1
+    for d in res_shapes[0][1].split(","):
+        if d:
+            res_elems *= int(d)
+    ops_m = _DOT_OPERANDS_RE.search(line)
+    cdims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if not ops_m or not cdims_m:
+        return 2 * res_elems  # degenerate
+    lhs_dims = def_dims.get(ops_m.group(1))
+    if lhs_dims is None:
+        return 2 * res_elems
+    k = 1
+    for idx in cdims_m.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    # batch dims appear in both result and lhs; result already includes them.
+    return 2 * res_elems * k
+
+
+# Opcodes whose "result" is aliasing/bookkeeping, not HBM traffic.
+_NOOP_OPS = {
+    "get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+    "after-all", "opt-barrier",
+}
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: list = field(default_factory=list)
+    dot_flops: int = 0
+    bytes_accessed: int = 0
+    coll_counts: dict = field(default_factory=dict)
+    coll_bytes: dict = field(default_factory=dict)
+    children: list = field(default_factory=list)  # (child_name, kind)
+    is_fusion_internal: bool = False
+
+
+def _parse_module(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if (hdr and line.endswith("{") and "->" in line
+                and not line.startswith("%constant")
+                and "=" not in line.split("(")[0]):
+            name = hdr.group(1)
+            cur = _Comp(name=name)
+            comps[name] = cur
+            if raw.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _analyze_comp(c: _Comp) -> None:
+    # Pass 1: result dims of every defined value (for dot operand lookup).
+    def_dims: dict[str, list[int]] = {}
+    for line in c.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        eq = line.find("=")
+        par = line.find("(", eq)
+        seg = line[eq + 1 : par if par > 0 else None]
+        shapes = _SHAPE_RE.findall(seg)
+        if shapes:
+            def_dims[dm.group(1)] = [int(d) for d in shapes[0][1].split(",") if d]
+    # Parameters from the header are resolved lazily — dots on raw
+    # parameters are rare in optimized HLO (they go through GTE/copy).
+    for line in c.lines:
+        if "-done(" in line:
+            continue
+        m = _OPNAME_RE.search(line)
+        op = m.group(1) if m else ""
+        base_op = op.replace("-start", "")
+        if base_op in COLLECTIVE_OPS:
+            c.coll_counts[base_op] = c.coll_counts.get(base_op, 0) + 1
+            c.coll_bytes[base_op] = c.coll_bytes.get(base_op, 0) + _result_bytes(line)
+        if _DOT_RE.search(line):
+            c.dot_flops += _dot_flops(line, def_dims)
+        # Operands are printed without shapes in optimized HLO, so count
+        # each result buffer once and double it (write + downstream read);
+        # aliasing/bookkeeping ops are skipped.
+        if base_op not in _NOOP_OPS:
+            c.bytes_accessed += 2 * _result_bytes(line)
+        for ref in _COMP_REF_RE.findall(line):
+            c.children.append((ref, line))
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for ref in bm.group(1).split(","):
+                ref = ref.strip().lstrip("%")
+                if ref:
+                    c.children.append((ref, line))
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Heuristic: loop conditions compare the induction var to a constant;
+    take the max integer constant in the condition computation."""
+    best = 1
+    for line in cond.lines:
+        for k in _CONST_RE.findall(line):
+            best = max(best, int(k))
+    return best
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_counts: dict = field(default_factory=dict)
+    coll_bytes: dict = field(default_factory=dict)
+    raw_cost_analysis: dict = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_counts": self.coll_counts,
+            "collective_bytes_by_op": self.coll_bytes,
+            "collective_bytes": self.collective_bytes,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def analyze_hlo_text(text: str) -> ModuleCosts:
+    comps = _parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return ModuleCosts()
+    for c in comps.values():
+        if not c.dot_flops and not c.bytes_accessed and c.lines:
+            _analyze_comp(c)
+
+    # Propagate multipliers through the call graph.
+    mult: dict[str, float] = defaultdict(float)
+    fusion_internal: set[str] = set()
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    # BFS (call graphs from XLA are DAGs over computations)
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult[cname]
+        for ref, line in c.children:
+            child = comps.get(ref)
+            if child is None:
+                continue
+            factor = 1.0
+            if f"body=%{ref}" in line or f"body={ref}" in line:
+                tm = _TRIP_RE.search(line)  # XLA annotates known trip counts
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    for r2 in _COMP_REF_RE.findall(line):
+                        if f"condition=%{r2}" in line or f"condition={r2}" in line:
+                            cc = comps.get(r2)
+                            if cc is not None:
+                                trip = _trip_count(cc)
+                factor = float(max(1, trip))
+            if "calls=" in line:
+                fusion_internal.add(ref)
+            mult[ref] += m * factor
+            if ref not in seen:
+                seen.add(ref)
+                order.append(ref)
+
+    out = ModuleCosts()
+    for cname in seen:
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult[cname]
+        out.flops += m * c.dot_flops
+        if cname not in fusion_internal:
+            out.bytes_accessed += m * c.bytes_accessed
+        for k, v in c.coll_counts.items():
+            out.coll_counts[k] = out.coll_counts.get(k, 0) + int(m * v)
+        for k, v in c.coll_bytes.items():
+            out.coll_bytes[k] = out.coll_bytes.get(k, 0) + m * v
+    return out
+
+
+# ------------------------------------------------------------------- #
+# Hardware constants (TPU v5e, per assignment).
+# ------------------------------------------------------------------- #
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclass
+class RooflineTerms:
+    """Per-device terms; model_flops is the per-device share of 6*N*D."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops_global: float = 0.0
+
+    @property
+    def model_flops_device(self) -> float:
+        return self.model_flops_global / self.chips
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops_device / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_time(model flops at peak) / bound_time(dominant term)."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        ideal = self.model_flops_device / PEAK_FLOPS_BF16
+        return ideal / bound if bound > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "model_flops_global": self.model_flops_global,
+            "model_flops_device": self.model_flops_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0):
+    """Extract trip-count-corrected roofline terms from a Compiled object."""
+    costs = analyze_hlo_text(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    costs.raw_cost_analysis = {
+        k: float(v) for k, v in ca.items()
+        if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+    }
+    terms = RooflineTerms(
+        flops=costs.flops,
+        hbm_bytes=costs.bytes_accessed,
+        collective_bytes=costs.collective_bytes,
+        chips=chips,
+        model_flops_global=model_flops,
+    )
+    return terms, costs
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

@@ -1,0 +1,216 @@
+"""Sharding rules: parameter / batch / cache partition specs per arch.
+
+Policy (baseline, paper-faithful "range partition" analogue):
+  * DP over ('data',) — plus 'pod' joins the batch axes on the multi-pod
+    mesh, mirroring MIND's rack=NUMA-domain hierarchy (§8 of the paper).
+  * TP over ('model',) — Megatron pairs: column-parallel then row-parallel
+    so each attention/MLP needs a single reduction.
+  * MoE experts are TP-sharded on the expert-hidden dim (see moe.py);
+    EP over 'model' is a perf-pass variant.
+  * KV caches shard heads over 'model' when divisible, else the sequence
+    dim over 'data' (context-parallel decode; GSPMD inserts the softmax
+    reductions).
+
+Rules key on (leaf name, rank); stacked layer dims are padded with None.
+Dims that do not divide by the mesh axis fall back to replication — the
+validator checks divisibility before emitting a spec.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# Base specs for the TRAILING dims of each named leaf.
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embed": (("model", None)),
+    "lm_head": ((None, "model")),
+    # attention
+    "wq": ((None, "model")),
+    "wk": ((None, "model")),
+    "wv": ((None, "model")),
+    "wo": (("model", None)),
+    # mlp
+    "w_gate": ((None, "model")),
+    "w_up": ((None, "model")),
+    "w_down": (("model", None)),
+    # moe (E, d, ff) / (E, ff, d) — handled by rank in _spec_for
+    "router": ((None, None)),
+    # xlstm / mamba
+    "w_in": ((None, "model")),
+    "r": ((None, None, None)),
+    "conv_w": ((None, None)),
+    "conv_b": ((None,)),
+    "a_log": ((None,)),
+    "d_skip": ((None,)),
+    "dt_bias": ((None,)),
+    "gate_bias": ((None,)),
+}
+
+_VECTOR_NAMES = {
+    "attn_norm", "mlp_norm", "norm", "final_norm", "out_norm", "ff_norm",
+    "kv_norm", "q_norm", "k_norm", "gate", "mlp_gate",
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_for(name: str, shape: tuple, mesh: Mesh, attn_3d: bool = False) -> P:
+    """Resolve the trailing-dim spec, pad leading stack dims with None."""
+    if name in _VECTOR_NAMES:
+        return P(*([None] * len(shape)))
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if attn_3d and name in ("wq", "wk", "wv", "wo"):
+        # 3-D layouts: wq/wk/wv trailing (d, H, hd); wo trailing (H, hd, d).
+        msz = _axis_size(mesh, "model")
+        hpos = ndim - 2 if name != "wo" else ndim - 3
+        dpos = ndim - 1 if name != "wo" else ndim - 2
+        if shape[hpos] % msz == 0:
+            spec[hpos] = "model"
+        elif shape[dpos] % msz == 0:
+            spec[dpos] = "model"  # MQA fallback: shard head_dim
+        return P(*spec)
+    base = _PARAM_RULES.get(name)
+    if base is None:
+        return P(*spec)
+    base = tuple(base) if isinstance(base, tuple) else (base,)
+    # MoE stacks add an E dim before (d, ff): handle by aligning from the
+    # right, then validate divisibility.
+    for i, ax in enumerate(reversed(base)):
+        pos = ndim - 1 - i
+        if pos < 0:
+            break
+        if ax is not None and shape[pos] % _axis_size(mesh, ax) == 0:
+            spec[pos] = ax
+    return P(*spec)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return flat, treedef
+
+
+def param_shardings(params_spec, mesh: Mesh, attn_3d: bool = False):
+    """NamedShardings pytree matching a params (or grads/opt-state) tree."""
+
+    def leaf_spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None) or getattr(entry, "name", None)
+            if isinstance(key, str):
+                name = key
+                break
+        return NamedSharding(
+            mesh, _spec_for(name or "", leaf.shape, mesh, attn_3d=attn_3d))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat]
+    )
+
+
+def opt_state_shardings(opt_state_spec, params_sharding, mesh: Mesh):
+    """AdamW mu/nu mirror the param shardings; step is replicated."""
+    return {
+        "step": NamedSharding(mesh, P()),
+        "mu": params_sharding,
+        "nu": params_sharding,
+    }
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the batch dim (data [+ pod])."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_shardings(batch_spec, mesh: Mesh, cfg: ModelConfig):
+    dp = batch_axes(mesh)
+
+    def leaf(path, l):
+        # First dim is always global batch.
+        spec = [None] * len(l.shape)
+        if l.shape[0] % _axis_size(mesh, dp) == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_spec)
+    return jax.tree_util.tree_unflatten(treedef, [leaf(p, l) for p, l in flat])
+
+
+def cache_shardings(cache_spec, mesh: Mesh, cfg: ModelConfig,
+                    kv_seq_shard: bool = False):
+    """KV caches: [..., B, S, Hkv, hd] / SSM states [..., B, H, ...].
+
+    Heads shard over 'model' when divisible; batch over data axes when
+    divisible; for single-sequence long-context the cache sequence dim
+    shards over 'data' (context-parallel decode).
+
+    ``kv_seq_shard=True`` (§Perf): when KV heads do NOT divide the model
+    axis, shard the cache SEQUENCE dim over 'model' instead of leaving the
+    cache replicated across it — context-parallel decode.  Cuts the
+    per-device KV footprint by the model-axis size and replaces whole-cache
+    gathers with small softmax-stat reductions.
+    """
+    dp = batch_axes(mesh)
+    model_n = _axis_size(mesh, "model")
+    dp_n = _axis_size(mesh, dp)
+
+    def leaf(path, l):
+        shape = l.shape
+        names = [getattr(e, "key", None) for e in path]
+        is_kv = any(n in ("k", "v", "cross_k", "cross_v") for n in names)
+        spec: list = [None] * len(shape)
+        if is_kv:
+            # trailing dims: (B, S, Hkv, hd)
+            bpos, spos, hpos = len(shape) - 4, len(shape) - 3, len(shape) - 2
+            if shape[bpos] % dp_n == 0:
+                spec[bpos] = dp
+                if shape[hpos] % model_n == 0:
+                    spec[hpos] = "model"
+                elif kv_seq_shard and shape[spos] % model_n == 0:
+                    spec[spos] = "model"  # context-parallel decode
+            else:
+                # batch too small: context-parallel the sequence dim
+                if shape[spos] % dp_n == 0:
+                    spec[spos] = dp
+                if shape[hpos] % model_n == 0:
+                    spec[hpos] = "model"
+        else:
+            # SSM/recurrent states: (..., B, H, ...) — shard B over data and
+            # the following heads/state dim over model when divisible.
+            # Find the batch dim: first dim matching none of the stacks is
+            # ambiguous, so shard the largest dim divisible by dp, then the
+            # next divisible by model.
+            for i, d in enumerate(shape):
+                if spec[i] is None and d % dp_n == 0 and dp_n > 1:
+                    spec[i] = dp
+                    break
+            for i, d in enumerate(shape):
+                if spec[i] is None and d % model_n == 0 and model_n > 1:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_spec)
+    return jax.tree_util.tree_unflatten(treedef, [leaf(p, l) for p, l in flat])
+
+
+def with_sharding(spec_tree, sharding_tree):
+    """Attach shardings to ShapeDtypeStructs (for jit.lower inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, sharding_tree,
+    )

@@ -1,0 +1,30 @@
+"""Pallas TPU kernels for MIND's perf-critical paths.
+
+* range_match      — TCAM-style LPM translate/protect (switch MAU analogue)
+* directory_msi    — two-stage match-action MSI transitions (fused write-back)
+* paged_attention  — decode attention over the disaggregated KV pool
+* flash_attention  — blocked causal attention (prefill)
+
+Each kernel ships with a pure-jnp/numpy oracle in ref.py; ops.py holds the
+jit'd public wrappers with backend-appropriate `interpret` defaults.
+"""
+
+from repro.kernels import ops
+from repro.kernels.ops import (
+    flash_attention,
+    msi_transition,
+    msi_transition_vectorized,
+    paged_attention,
+    protect_check,
+    translate_lookup,
+)
+
+__all__ = [
+    "ops",
+    "flash_attention",
+    "msi_transition",
+    "msi_transition_vectorized",
+    "paged_attention",
+    "protect_check",
+    "translate_lookup",
+]

@@ -1,0 +1,58 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults follow the runtime: on CPU (this container) the
+kernels execute in interpret mode; on TPU they compile to Mosaic.  All
+shapes are padded/validated here so kernel bodies stay branch-free.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import directory_msi as _msi
+from repro.kernels import flash_attention as _flash
+from repro.kernels import paged_attention as _paged
+from repro.kernels import range_match as _rm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def translate_lookup(vaddrs, table, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _rm.translate_lookup(vaddrs, table, **kw)
+
+
+def protect_check(pdids, vaddrs, need, table, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _rm.protect_check(pdids, vaddrs, need, table, **kw)
+
+
+def msi_transition(state, sharers, owner, slots, requesters, is_write, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _msi.msi_transition(state, sharers, owner, slots, requesters,
+                               is_write, **kw)
+
+
+def msi_transition_vectorized(state, sharers, owner, slots, requesters, is_write):
+    return _msi.msi_transition_vectorized(
+        state, sharers, owner, slots, requesters, is_write
+    )
+
+
+def paged_attention(q, kv_pages_k, kv_pages_v, block_tables, seq_lens, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _paged.paged_attention(
+        q, kv_pages_k, kv_pages_v, block_tables, seq_lens, **kw
+    )
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash.flash_attention(q, k, v, **kw)
+
+
+build_transition_table = _msi.build_transition_table
+split64_np = _rm.split64_np
+NO_MATCH = _rm.NO_MATCH

@@ -1,0 +1,179 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` mirrors its kernel's contract exactly; the kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NO_MATCH = 0x7FFFFFFF
+
+
+# --------------------------------------------------------------------- #
+# range_match oracles (numpy — addresses are 64-bit host integers).
+# --------------------------------------------------------------------- #
+def translate_lookup_ref(vaddrs, table):
+    vaddrs = np.asarray(vaddrs, np.int64)
+    table = np.asarray(table, np.int64)
+    b = vaddrs.shape[0]
+    blade = np.full(b, -1, np.int32)
+    idx = np.full(b, NO_MATCH, np.int32)
+    for i, v in enumerate(vaddrs):
+        best = None
+        for r in range(table.shape[0]):
+            base, log2, tgt, _ = table[r]
+            if (v >> log2) == (base >> log2):
+                if best is None or log2 < table[best][1]:
+                    best = r
+        if best is not None:
+            blade[i] = table[best][2]
+            idx[i] = best
+    return blade, idx
+
+
+def protect_check_ref(pdids, vaddrs, need, table):
+    pdids = np.asarray(pdids, np.int32)
+    vaddrs = np.asarray(vaddrs, np.int64)
+    need = np.asarray(need, np.int32)
+    table = np.asarray(table, np.int64)
+    out = np.zeros(len(vaddrs), bool)
+    for i in range(len(vaddrs)):
+        for r in range(table.shape[0]):
+            pd, base, log2, perm = table[r]
+            if pd == pdids[i] and (vaddrs[i] >> log2) == (base >> log2):
+                if (perm & need[i]) == need[i]:
+                    out[i] = True
+                    break
+    return out
+
+
+# --------------------------------------------------------------------- #
+# directory_msi oracle: sequential MSI over a batch (the recirculation
+# semantics — requests to the same slot serialize in order).
+# --------------------------------------------------------------------- #
+def msi_transition_ref(state, sharers, owner, slots, requesters, is_write):
+    """Reference MSI over directory arrays.
+
+    Args:
+      state: int32 [S] (0=I, 1=S, 2=M); sharers: int32 [S] bitmaps;
+      owner: int32 [S] (-1 if none).
+      slots: int32 [B] directory slot per request; requesters: int32 [B];
+      is_write: int32/bool [B].
+    Returns:
+      (new_state, new_sharers, new_owner,
+       fetch_src int32 [B]   (-1 local, -2 memory, >=0 owner blade),
+       inval_mask int32 [B]  (sharer bitmap to invalidate))
+    """
+    state = np.array(state, np.int32)
+    sharers = np.array(sharers, np.int32)
+    owner = np.array(owner, np.int32)
+    b = len(slots)
+    fetch = np.zeros(b, np.int32)
+    inval = np.zeros(b, np.int32)
+    I, S, M = 0, 1, 2
+    for i in range(b):
+        s = int(slots[i])
+        r = int(requesters[i])
+        me = 1 << r
+        w = bool(is_write[i])
+        st, sh, ow = int(state[s]), int(sharers[s]), int(owner[s])
+        if not w:
+            if st == I:
+                state[s], sharers[s], owner[s] = S, me, -1
+                fetch[i] = -2
+            elif st == S:
+                fetch[i] = -1 if (sh & me) else -2
+                sharers[s] = sh | me
+            else:  # M
+                if ow == r:
+                    fetch[i] = -1
+                else:
+                    fetch[i] = ow
+                    inval[i] = 1 << ow
+                    state[s], sharers[s], owner[s] = S, me, -1
+        else:
+            if st == I:
+                state[s], sharers[s], owner[s] = M, me, r
+                fetch[i] = -2
+            elif st == S:
+                others = sh & ~me
+                inval[i] = others
+                fetch[i] = -1 if (sh & me) else -2
+                state[s], sharers[s], owner[s] = M, me, r
+            else:  # M
+                if ow == r:
+                    fetch[i] = -1
+                else:
+                    fetch[i] = ow
+                    inval[i] = 1 << ow
+                    state[s], sharers[s], owner[s] = M, me, r
+    return state, sharers, owner, fetch, inval
+
+
+# --------------------------------------------------------------------- #
+# paged attention oracle.
+# --------------------------------------------------------------------- #
+def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, seq_lens,
+                        scale=None):
+    """Decode attention over a paged KV pool.
+
+    Args:
+      q: [B, Hq, D]                  query for the new token
+      kv_pages_k/v: [P, page, Hkv, D] physical page pool
+      block_tables: int32 [B, maxp]  page ids per sequence (-1 padded)
+      seq_lens: int32 [B]            valid KV length per sequence
+    Returns: [B, Hq, D]
+    """
+    b, hq, d = q.shape
+    p, page, hkv, _ = kv_pages_k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    maxp = block_tables.shape[1]
+    out = np.zeros((b, hq, d), np.float32)
+    q = np.asarray(q, np.float32)
+    k_pool = np.asarray(kv_pages_k, np.float32)
+    v_pool = np.asarray(kv_pages_v, np.float32)
+    for i in range(b):
+        n = int(seq_lens[i])
+        ks, vs = [], []
+        for j in range(maxp):
+            pid = int(block_tables[i, j])
+            if pid < 0:
+                break
+            ks.append(k_pool[pid])
+            vs.append(v_pool[pid])
+        if not ks:
+            continue
+        k = np.concatenate(ks, 0)[:n]  # [n, Hkv, D]
+        v = np.concatenate(vs, 0)[:n]
+        for h in range(hq):
+            kh = k[:, h // group, :]
+            vh = v[:, h // group, :]
+            logits = (q[i, h] @ kh.T) * scale
+            w = np.exp(logits - logits.max())
+            w = w / w.sum()
+            out[i, h] = w @ vh
+    return out
+
+
+# --------------------------------------------------------------------- #
+# flash attention oracle.
+# --------------------------------------------------------------------- #
+def flash_attention_ref(q, k, v, causal=True, scale=None):
+    """[B, H, S, D] standard softmax attention in fp32."""
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    d = q.shape[-1]
+    s = q.shape[-2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------- #
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# on the production meshes, proving the distribution config is coherent
+# (sharding propagates, collectives legal, memory fits) without hardware.
+#
+# The two lines above MUST precede any jax import: jax locks the device
+# count at first init.  Everything below may import jax.
+# --------------------------------------------------------------------- #
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.distributed.hlo_analysis import (  # noqa: E402
+    analyze_compiled,
+    memory_analysis_dict,
+)
+from repro.launch.mesh import describe, make_production_mesh  # noqa: E402
+from repro.models.model import LM  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D (dense) or 6*N_active*D (MoE); decode
+    steps use D = global_batch tokens."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens  # forward only
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.attention_supports_long:
+        return ("skip: pure full-attention arch at 524k decode "
+                "(see DESIGN.md §5)")
+    return None
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, opt: dict | None = None) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; returns the record.
+
+    ``opt`` selects §Perf variants (default = paper-faithful baseline):
+        attn3d:      [d,H,hd] attention kernels, head-axis sharding
+        moe_capacity: capacity-gather MoE dispatch (vs ragged_dot)
+        kv_seq_shard: context-parallel decode KV when heads don't divide
+        remat:       per-layer activation checkpointing (default True)
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single", "status": skip}
+
+    opt = opt or {}
+    updates = {}
+    if opt.get("attn3d"):
+        updates["attn_3d_kernels"] = True
+    if opt.get("moe_capacity"):
+        updates["moe_impl"] = "capacity"
+    if updates:
+        cfg = _dc.replace(cfg, **updates)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = LM(cfg, remat=(shape.kind == "train" and opt.get("remat", True)))
+    t0 = time.time()
+
+    with mesh:
+        param_specs = model.param_specs()
+        p_shard = shd.param_shardings(param_specs, mesh,
+                                      attn_3d=cfg.attn_3d_kernels)
+        record = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "mesh_desc": describe(mesh),
+            "kind": shape.kind,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        }
+
+        if shape.kind == "train":
+            opt_specs = jax.eval_shape(adamw.init, param_specs)
+            o_shard = {"step": NamedSharding(mesh, P()), "mu": p_shard,
+                       "nu": p_shard}
+            batch_specs = model.input_specs(shape)
+            b_shard = shd.batch_shardings(batch_specs, mesh, cfg)
+            step = make_train_step(model, AdamWConfig())
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(param_specs, opt_specs, batch_specs)
+        elif shape.kind == "prefill":
+            batch_specs = model.input_specs(shape)
+            b_shard = shd.batch_shardings(batch_specs, mesh, cfg)
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_shard = shd.cache_shardings(
+                cache_specs, mesh, cfg,
+                kv_seq_shard=bool(opt.get("kv_seq_shard")))
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch)
+
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(c_shard, None),
+            )
+            lowered = jitted.lower(param_specs, batch_specs)
+        else:  # decode
+            batch_specs = model.input_specs(shape)
+            b_shard = shd.batch_shardings(batch_specs, mesh, cfg)
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_shard = shd.cache_shardings(
+                cache_specs, mesh, cfg,
+                kv_seq_shard=bool(opt.get("kv_seq_shard")))
+
+            def serve_step(params, cache, batch):
+                return model.decode_step(params, cache, batch)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, b_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(param_specs, cache_specs, batch_specs)
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mf = model_flops_estimate(cfg, shape)
+        terms, coll = analyze_compiled(compiled, chips=chips, model_flops=mf)
+        record["roofline"] = terms.to_dict()
+        record["collectives"] = coll.to_dict()
+        record["memory"] = memory_analysis_dict(compiled)
+        record["status"] = "ok"
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, help="single architecture")
+    ap.add_argument("--shape", choices=list(SHAPES), help="single shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", nargs="*", default=[],
+                    help="perf variants: attn3d moe_capacity kv_seq_shard")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    mesh_tag = "multi" if args.multi_pod else "single"
+    failures = 0
+    for arch, shape in cells:
+        fname = outdir / f"{arch}__{shape}__{mesh_tag}.json"
+        if args.skip_existing and fname.exists():
+            print(f"[skip-existing] {fname.name}")
+            continue
+        print(f"=== {arch} x {shape} on {mesh_tag}-pod mesh ===", flush=True)
+        try:
+            rec = lower_cell(arch, shape, args.multi_pod,
+                             opt={k: True for k in args.opt})
+        except Exception as e:  # pragma: no cover
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": f"FAIL: {type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            failures += 1
+        fname.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        if status == "ok":
+            r = rec["roofline"]
+            print(f"  ok: compile={rec['compile_s']}s dominant={r['dominant']}"
+                  f" compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s"
+                  f" collective={r['collective_s']:.2e}s", flush=True)
+        else:
+            print(f"  {status}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches JAX device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import to obtain 512 placeholder host devices.
+
+Mesh shapes:
+  * single-pod:  (16, 16)    axes ("data", "model")  — 256 chips
+  * multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+The 'pod' axis is MIND's rack boundary (each rack = one NUMA-like domain,
+paper §8): gradient reduction crosses it, activations never do.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run via "
+            "launch/dryrun.py which forces 512 host devices"
+        )
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    assert len(devices) == n, f"need {n} devices, have {len(jax.devices())}"
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def describe(mesh: Mesh) -> str:
+    return (
+        f"mesh(axes={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+        f"devices={mesh.devices.size})"
+    )

@@ -1,0 +1,3 @@
+from repro.memory.paged_pool import PagedKVPool
+
+__all__ = ["PagedKVPool"]

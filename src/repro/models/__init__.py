@@ -1,0 +1,5 @@
+"""Model layer: 10 assigned architectures over 6 family implementations."""
+
+from repro.models.model import LM, build_model
+
+__all__ = ["LM", "build_model"]

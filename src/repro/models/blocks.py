@@ -1,0 +1,482 @@
+"""Per-family residual blocks (params + train/decode application).
+
+Families:
+  * dense / moe / audio / vlm-self: pre-norm attention + (MLP | MoE)
+  * vlm-cross: gated cross-attention + gated MLP (llama-3.2-vision style)
+  * mlstm / slstm: xLSTM blocks (matrix / scalar memory, exp gating)
+  * mamba2: SSD block (conv -> SSM via chunked linear recurrence)
+
+Every block exposes:
+  <name>_params(key, cfg)           -> params pytree
+  <name>_train(p, cfg, x, ...)      -> full-sequence output (+aux)
+  <name>_decode(p, cfg, x, cache)   -> (out, new_cache)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.linear_recurrence import (
+    chunked_linear_attention,
+    recurrent_step,
+)
+from repro.models.moe import moe_ffn, moe_params
+
+
+# --------------------------------------------------------------------- #
+# Dense / MoE transformer block.
+# --------------------------------------------------------------------- #
+def dense_block_params(key, cfg: ModelConfig) -> dict:
+    dt = L._dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.attention_params(k1, cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_params(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_params(k2, cfg)
+    return p
+
+
+def dense_block_train(p, cfg: ModelConfig, x, positions):
+    h = L.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + L.attention(p["attn"], cfg, h, positions)
+    h = L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p["moe"], cfg, h)
+        return x + y, aux
+    return x + L.mlp(p["mlp"], cfg, h), jnp.float32(0.0)
+
+
+def dense_block_prefill(p, cfg: ModelConfig, x, positions, max_len=None):
+    """Like train, but returns the layer's K/V for cache population."""
+    h = L.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    o, k, v = L.attention_with_kv(p["attn"], cfg, h, positions,
+                                  max_len=max_len)
+    x = x + o
+    h = L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p["moe"], cfg, h)
+        return x + y, aux, k, v
+    return x + L.mlp(p["mlp"], cfg, h), jnp.float32(0.0), k, v
+
+
+def mlstm_block_prefill(p, cfg: ModelConfig, x):
+    """Train pass that also returns the final recurrent state."""
+    inner, h, dh = _mlstm_dims(cfg)
+    b, t, d = x.shape
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, log_f, log_i, z = _mlstm_qkv_gates(p, cfg, xn)
+    chunk = cfg.ssm.chunk_size if cfg.ssm else 64
+    y, s_fin, n_fin = chunked_linear_attention(
+        q, k, v, log_f, log_i, chunk_size=chunk, normalize=True
+    )
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"], {"s": s_fin, "n": n_fin}
+
+
+def slstm_block_prefill(p, cfg: ModelConfig, x):
+    b, t, d = x.shape
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    pre = (xn @ p["w_in"]).astype(jnp.float32)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, cfg, pre_t, h, c, n, m)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    (hT, cT, nT, mT), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
+                                        jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) @ p["w_down"]
+    x = x + y
+    hN = L.rmsnorm(x, p["ff_norm"], cfg.norm_eps)
+    return x + L.mlp(p["ff"], cfg, hN), {"h": hT, "c": cT, "n": nT, "m": mT}
+
+
+def mamba2_block_prefill(p, cfg: ModelConfig, x):
+    b, t, d = x.shape
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, xbc, dt_pre = _mamba_split(p, cfg, xn @ p["w_in"])
+    xbc_conv, conv_state = _causal_conv_with_state(xbc, p["conv_w"],
+                                                   p["conv_b"])
+    xs = xbc_conv[..., :inner]
+    bmat = xbc_conv[..., inner : inner + dstate]
+    cmat = xbc_conv[..., inner + dstate :]
+    dt_ = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    log_a = (dt_ * a).transpose(0, 2, 1)
+    log_b = jnp.log(jnp.maximum(dt_, 1e-9)).transpose(0, 2, 1)
+    v = xs.reshape(b, t, nheads, headdim).transpose(0, 2, 1, 3)
+    k = jnp.broadcast_to(bmat[:, None], (b, nheads, t, dstate))
+    q = jnp.broadcast_to(cmat[:, None], (b, nheads, t, dstate))
+    y, s_fin, _ = chunked_linear_attention(
+        q, k, v, log_a, log_b, chunk_size=cfg.ssm.chunk_size, normalize=False
+    )
+    y = y + p["d_skip"][None, :, None, None] * v.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"], {"s": s_fin, "conv": conv_state}
+
+
+def _causal_conv_with_state(xbc, w, b):
+    """Conv for prefill that also returns the tail state for decode."""
+    out, _ = _causal_conv(xbc, w, b)
+    k = w.shape[0]
+    tail = xbc[:, -(k - 1):, :] if k > 1 else xbc[:, :0, :]
+    if tail.shape[1] < k - 1:  # sequence shorter than conv window
+        tail = jnp.pad(tail, ((0, 0), (k - 1 - tail.shape[1], 0), (0, 0)))
+    return out, tail
+
+
+def dense_block_decode(p, cfg: ModelConfig, x, cache, position):
+    """x: [B,1,d]; cache: dict(k=[B,Smax,Hkv,hd], v=...)."""
+    h = L.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    o, ck, cv = L.attention_decode(p["attn"], cfg, h, cache["k"], cache["v"],
+                                   position)
+    x = x + o
+    h = L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, _ = moe_ffn(p["moe"], cfg, h)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], cfg, h)
+    return x, {"k": ck, "v": cv}
+
+
+def dense_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = L._dtype(cfg.compute_dtype)
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dt),
+        "v": jax.ShapeDtypeStruct(shape, dt),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Cross-attention block (vlm).
+# --------------------------------------------------------------------- #
+def cross_block_params(key, cfg: ModelConfig) -> dict:
+    dt = L._dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dt),
+        "xattn": L.attention_params(k1, cfg, cross=True),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dt),
+        "mlp": L.mlp_params(k2, cfg),
+        "mlp_gate": jnp.zeros((), dt),
+    }
+
+
+def cross_block_apply(p, cfg: ModelConfig, x, image_embeds):
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    x = x + L.cross_attention(p["xattn"], cfg, h, image_embeds)
+    h = L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    g = jnp.tanh(p["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + g * L.mlp(p["mlp"], cfg, h)
+
+
+# --------------------------------------------------------------------- #
+# mLSTM block (xLSTM).  Up-projection by `expand`, matrix memory heads.
+# --------------------------------------------------------------------- #
+def _mlstm_dims(cfg: ModelConfig):
+    inner = (cfg.ssm.expand if cfg.ssm else 2) * cfg.d_model
+    h = cfg.num_heads
+    return inner, h, inner // h
+
+
+def mlstm_block_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    inner, h, dh = _mlstm_dims(cfg)
+    dt = L._dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.zeros((d,), dt),
+        "w_up": L.dense_init(ks[0], d, 2 * inner, dt),  # x-branch + z-gate
+        "wq": L.dense_init(ks[1], inner, inner, dt),
+        "wk": L.dense_init(ks[2], inner, inner, dt),
+        "wv": L.dense_init(ks[3], inner, inner, dt),
+        "w_gates": L.dense_init(ks[4], inner, 2 * h, dt),  # i, f per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 + jnp.arange(h, dtype=jnp.float32)]
+        ),  # forget-gate bias init (xLSTM appendix)
+        "out_norm": jnp.zeros((inner,), dt),
+        "w_down": L.dense_init(ks[5], inner, d, dt),
+    }
+
+
+def _mlstm_qkv_gates(p, cfg, x_in):
+    """Shared by train/decode.  x_in: [B, T, d] -> q,k,v,[B,H,T,dh], gates."""
+    b, t, _ = x_in.shape
+    inner, h, dh = _mlstm_dims(cfg)
+    up = x_in @ p["w_up"]
+    xb, z = jnp.split(up, 2, axis=-1)  # [B,T,inner] each
+    q = (xb @ p["wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (xb @ p["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k / math.sqrt(dh)
+    v = (xb @ p["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    gates = (xb @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    ig, fg = jnp.split(gates, 2, axis=-1)  # [B,T,H]
+    log_f = jax.nn.log_sigmoid(fg).transpose(0, 2, 1)  # [B,H,T]
+    log_i = jnp.minimum(ig, 0.0).transpose(0, 2, 1)  # stabilized exp-gate
+    return q, k, v, log_f, log_i, z
+
+
+def mlstm_block_train(p, cfg: ModelConfig, x):
+    inner, h, dh = _mlstm_dims(cfg)
+    b, t, d = x.shape
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, log_f, log_i, z = _mlstm_qkv_gates(p, cfg, xn)
+    chunk = cfg.ssm.chunk_size if cfg.ssm else 64
+    y, _, _ = chunked_linear_attention(
+        q, k, v, log_f, log_i, chunk_size=chunk, normalize=True
+    )
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"]
+
+
+def mlstm_block_decode(p, cfg: ModelConfig, x, cache):
+    """cache: dict(s=[B,H,dh,dh], n=[B,H,dh])."""
+    inner, h, dh = _mlstm_dims(cfg)
+    b = x.shape[0]
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, log_f, log_i, z = _mlstm_qkv_gates(p, cfg, xn)
+    y, s_new, n_new = recurrent_step(
+        q[:, :, 0], k[:, :, 0], v[:, :, 0], log_f[:, :, 0], log_i[:, :, 0],
+        cache["s"], cache["n"], normalize=True,
+    )
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"], {"s": s_new, "n": n_new}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    inner, h, dh = _mlstm_dims(cfg)
+    return {
+        "s": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# sLSTM block (xLSTM scalar memory, exponential gating, recurrent R).
+# --------------------------------------------------------------------- #
+def slstm_block_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = L._dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    ff = int(math.ceil(4 * d / 3 / 64) * 64)
+    return {
+        "norm": jnp.zeros((d,), dt),
+        "w_in": L.dense_init(ks[0], d, 4 * d, dt),  # i,f,z,o pre-acts
+        # Block-diagonal recurrent matrix, one [dh, 4*dh] block per head.
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+              / math.sqrt(dh)).astype(dt),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,), jnp.float32),  # i
+             jnp.full((d,), 3.0, jnp.float32),  # f (remember by default)
+             jnp.zeros((2 * d,), jnp.float32)]  # z, o
+        ),
+        "w_down": L.dense_init(ks[2], d, d, dt),
+        "ff_norm": jnp.zeros((d,), dt),
+        "ff": L.mlp_params(ks[3], cfg, d_ff=ff),
+    }
+
+
+def _slstm_cell(p, cfg, pre, h_prev, c_prev, n_prev, m_prev):
+    """One sLSTM step.  pre: [B, 4d] = W x_t; recurrent term added here."""
+    b = pre.shape[0]
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    rec = jnp.einsum(
+        "bhd,hde->bhe", h_prev.reshape(b, nh, dh).astype(jnp.float32),
+        p["r"].astype(jnp.float32),
+    ).reshape(b, 4 * d)
+    acts = pre.astype(jnp.float32) + rec + p["gate_bias"]
+    i_, f_, z_, o_ = jnp.split(acts, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(log_f + m_prev, i_)
+    i_g = jnp.exp(i_ - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_block_train(p, cfg: ModelConfig, x):
+    b, t, d = x.shape
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    pre = (xn @ p["w_in"]).astype(jnp.float32)  # [B,T,4d]
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, cfg, pre_t, h, c, n, m)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
+                                    jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) @ p["w_down"]
+    x = x + y
+    hN = L.rmsnorm(x, p["ff_norm"], cfg.norm_eps)
+    return x + L.mlp(p["ff"], cfg, hN)
+
+
+def slstm_block_decode(p, cfg: ModelConfig, x, cache):
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    pre = (xn[:, 0] @ p["w_in"]).astype(jnp.float32)
+    h, c, n, m = _slstm_cell(p, cfg, pre, cache["h"], cache["c"], cache["n"],
+                             cache["m"])
+    y = h[:, None, :].astype(x.dtype) @ p["w_down"]
+    x = x + y
+    hN = L.rmsnorm(x, p["ff_norm"], cfg.norm_eps)
+    out = x + L.mlp(p["ff"], cfg, hN)
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {
+        "h": jax.ShapeDtypeStruct((batch, d), f32),
+        "c": jax.ShapeDtypeStruct((batch, d), f32),
+        "n": jax.ShapeDtypeStruct((batch, d), f32),
+        "m": jax.ShapeDtypeStruct((batch, d), f32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 (SSD) block.
+# --------------------------------------------------------------------- #
+def _mamba_dims(cfg: ModelConfig):
+    inner = cfg.ssm.expand * cfg.d_model
+    headdim = 64
+    nheads = inner // headdim
+    return inner, nheads, headdim, cfg.ssm.state_dim
+
+
+def mamba2_block_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    dt = L._dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    conv_dim = inner + 2 * dstate  # x + B + C share the conv (Mamba2)
+    return {
+        "norm": jnp.zeros((d,), dt),
+        # in_proj -> [z(inner), x(inner), B(dstate), C(dstate), dt(nheads)]
+        "w_in": L.dense_init(ks[0], d, 2 * inner + 2 * dstate + nheads, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),  # fp32
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": jnp.zeros((inner,), dt),
+        "w_down": L.dense_init(ks[2], inner, d, dt),
+    }
+
+
+def _mamba_split(p, cfg, proj):
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    z = proj[..., :inner]
+    xbc = proj[..., inner : 2 * inner + 2 * dstate]
+    dt_pre = proj[..., 2 * inner + 2 * dstate :]
+    return z, xbc, dt_pre
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv over time.  xbc: [B, T, C]; w: [K, C].
+
+    Returns (out [B,T,C], new_state [B,K-1,C])."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, T+K-1, C]
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block_train(p, cfg: ModelConfig, x):
+    b, t, d = x.shape
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, xbc, dt_pre = _mamba_split(p, cfg, xn @ p["w_in"])
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :inner]
+    bmat = xbc[..., inner : inner + dstate]  # [B,T,dstate]
+    cmat = xbc[..., inner + dstate :]
+    dt_ = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+    log_a = (dt_ * a).transpose(0, 2, 1)  # [B,H,T]
+    log_b = jnp.log(jnp.maximum(dt_, 1e-9)).transpose(0, 2, 1)
+    # Per head: k = B (shared), v = x_head, q = C (shared).
+    v = xs.reshape(b, t, nheads, headdim).transpose(0, 2, 1, 3)
+    k = jnp.broadcast_to(bmat[:, None], (b, nheads, t, dstate))
+    q = jnp.broadcast_to(cmat[:, None], (b, nheads, t, dstate))
+    y, _, _ = chunked_linear_attention(
+        q, k, v, log_a, log_b, chunk_size=cfg.ssm.chunk_size, normalize=False
+    )
+    y = y + p["d_skip"][None, :, None, None] * v.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"]
+
+
+def mamba2_block_decode(p, cfg: ModelConfig, x, cache):
+    """cache: dict(s=[B,H,dstate,headdim], conv=[B,K-1,convdim])."""
+    b = x.shape[0]
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, xbc, dt_pre = _mamba_split(p, cfg, xn @ p["w_in"])
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 state=cache["conv"])
+    xs = xbc[..., :inner]
+    bmat = xbc[:, 0, inner : inner + dstate]
+    cmat = xbc[:, 0, inner + dstate :]
+    dt_ = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    log_a = dt_ * a
+    log_b = jnp.log(jnp.maximum(dt_, 1e-9))
+    v = xs[:, 0].reshape(b, nheads, headdim)
+    k = jnp.broadcast_to(bmat[:, None], (b, nheads, dstate))
+    q = jnp.broadcast_to(cmat[:, None], (b, nheads, dstate))
+    y, s_new, _ = recurrent_step(q, k, v, log_a, log_b, cache["s"],
+                                 jnp.zeros_like(cache["s"][..., 0]),
+                                 normalize=False)
+    y = y + p["d_skip"][None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"], {"s": s_new, "conv": conv_new}
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int):
+    inner, nheads, headdim, dstate = _mamba_dims(cfg)
+    conv_dim = inner + 2 * dstate
+    dt = L._dtype(cfg.compute_dtype)
+    return {
+        "s": jax.ShapeDtypeStruct((batch, nheads, dstate, headdim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1, conv_dim), dt),
+    }

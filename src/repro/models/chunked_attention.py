@@ -1,0 +1,102 @@
+"""Memory-bounded blocked attention in pure JAX (train / prefill paths).
+
+Naive SDPA materializes [B, H, S, S] logits — 4 TB at S=32k — so the
+full-sequence paths use a doubly-blocked online-softmax formulation
+(FlashAttention recurrence expressed with lax.scan, differentiable by
+construction).  The Pallas kernel in kernels/flash_attention.py is the
+TPU-native realization of the same schedule for the serving runtime; this
+module is the XLA-lowerable version every mesh/backend can compile (the
+dry-run lowers it on CPU hosts).
+
+FLOP note for the roofline: causal masking is applied inside blocks but
+blocks above the diagonal are still *computed* (scan has a fixed trip
+count).  That doubles causal attention FLOPs vs. the ideal schedule; the
+perf pass (§Perf) removes it with a triangular block schedule.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      q_block: int = 512, k_block: int = 1024,
+                      scale: float | None = None):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    GQA handled by grouping; online softmax in fp32.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    eff_scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    bq = min(q_block, sq)
+    bk = min(k_block, sk)
+    sq_p, sk_p = _ceil_to(sq, bq), _ceil_to(sk, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // bq, sk_p // bk
+
+    # [NQ, B, Hkv, G, bq, D] query blocks; [NK, B, Hkv, bk, D] key blocks.
+    qb = jnp.moveaxis(
+        q.reshape(b, nq, bq, hkv, g, d).transpose(0, 1, 3, 4, 2, 5), 1, 0
+    )
+    kb = jnp.moveaxis(k.reshape(b, nk, bk, hkv, d).transpose(0, 1, 3, 2, 4), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, bk, hkv, d).transpose(0, 1, 3, 2, 4), 1, 0)
+
+    kv_valid = jnp.arange(sk_p) < sk  # mask padded keys
+
+    def q_step(_, q_blk_i):
+        q_blk, iq = q_blk_i  # [B,Hkv,G,bq,D], scalar index
+        q32 = q_blk.astype(jnp.float32) * eff_scale
+
+        def kv_step(carry, kv_blk_i):
+            m_p, l_p, acc_p = carry
+            k_blk, v_blk, ik = kv_blk_i
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", q32, k_blk.astype(jnp.float32)
+            )  # [B,Hkv,G,bq,bk]
+            cols = ik * bk + jnp.arange(bk)
+            mask = (cols[None, :] < sk)
+            if causal:
+                rows = iq * bq + jnp.arange(bq)
+                mask = mask & (rows[:, None] >= cols[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_c = jnp.max(s, axis=-1, keepdims=True)
+            m_n = jnp.maximum(m_p, m_c)
+            pexp = jnp.exp(s - m_n)
+            alpha = jnp.exp(m_p - m_n)
+            l_n = l_p * alpha + jnp.sum(pexp, axis=-1, keepdims=True)
+            acc_n = acc_p * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", pexp, v_blk.astype(jnp.float32)
+            )
+            return (m_n, l_n, acc_n), None
+
+        m0 = jnp.full((b, hkv, g, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m_f, l_f, acc_f), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk))
+        )
+        out = acc_f / jnp.maximum(l_f, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    # blocks: [NQ, B, Hkv, G, bq, D] -> [B, Sq, Hq, D]
+    out = jnp.moveaxis(blocks, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(b, sq_p, hq, d)
+    return out[:, :sq]

@@ -1,0 +1,270 @@
+"""Core model building blocks (pure JAX, dict-pytree parameters).
+
+All layers are functions of (params, inputs); parameter initializers are
+pure functions of a PRNG key so ``jax.eval_shape`` can produce parameter
+ShapeDtypeStructs for the dry-run without allocating anything.
+
+Sharding-friendly conventions:
+  * projection kernels are stored as [in, out] so TP sharding rules can
+    key on dimension position;
+  * attention computes in (B, S, H, D) layout, heads contiguous for the
+    'model'-axis shard;
+  * everything computes in ``compute_dtype`` with fp32 accumulations for
+    softmax/norms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------- #
+# Initializers.
+# --------------------------------------------------------------------- #
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# Norms.
+# --------------------------------------------------------------------- #
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# RoPE.
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, D]; positions: int32 [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, S, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Attention (GQA / MQA / MHA, optional qk-norm).
+# --------------------------------------------------------------------- #
+def attention_params(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    if cfg.attn_3d_kernels:
+        # §Perf variant: [d, H, hd] kernels shard cleanly on the head axis
+        # (MaxText layout) — the flattened [d, H*hd] layout makes GSPMD
+        # shard head_dim after the reshape, and RoPE's split/concat along
+        # that sharded dim lowers to collective-permutes per layer.
+        p = {
+            "wq": dense_init(ks[0], d, cfg.num_heads * hd, dt).reshape(
+                d, cfg.num_heads, hd),
+            "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dt).reshape(
+                d, cfg.num_kv_heads, hd),
+            "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dt).reshape(
+                d, cfg.num_kv_heads, hd),
+            "wo": dense_init(ks[3], cfg.num_heads * hd, d, dt).reshape(
+                cfg.num_heads, hd, d),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], d, cfg.num_heads * hd, dt),
+            "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dt),
+            "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dt),
+            "wo": dense_init(ks[3], cfg.num_heads * hd, d, dt),
+        }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    if cross:
+        p["kv_norm"] = jnp.zeros((d,), dt)
+        p["gate"] = jnp.zeros((), dt)  # tanh-gated residual (llama-vision)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_in = x if kv_x is None else kv_x
+    if p["wq"].ndim == 3:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
+    else:
+        q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+        k = (kv_in @ p["wk"]).reshape(b, kv_in.shape[1], cfg.num_kv_heads, hd)
+        v = (kv_in @ p["wv"]).reshape(b, kv_in.shape[1], cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _out_proj(p, o_flat, b, s):
+    """o_flat: [B, S, Hq*hd] @ wo (2-D or 3-D layout)."""
+    if p["wo"].ndim == 3:
+        h, hd, d = p["wo"].shape
+        return jnp.einsum("bshk,hkd->bsd", o_flat.reshape(b, s, h, hd),
+                          p["wo"])
+    return o_flat @ p["wo"]
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    GQA via reshape to (Hkv, G) groups; fp32 softmax.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        mask = rows >= cols
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, causal=True):
+    """Full-sequence attention (training / prefill) — memory-bounded
+    blocked softmax (see models/chunked_attention.py)."""
+    from repro.models.chunked_attention import chunked_attention
+
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=causal)
+    b, s = x.shape[:2]
+    return _out_proj(p, o.reshape(b, s, -1), b, s)
+
+
+def attention_with_kv(p, cfg: ModelConfig, x, positions, *, max_len=None,
+                      causal=True):
+    """Full-sequence attention that also returns the (rope'd) K/V for cache
+    population during prefill.  K/V padded to ``max_len`` along seq."""
+    from repro.models.chunked_attention import chunked_attention
+
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=causal)
+    b, s = x.shape[:2]
+    out = _out_proj(p, o.reshape(b, s, -1), b, s)
+    if max_len is not None and max_len > s:
+        pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, k, v
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, position):
+    """Single-token decode against a dense KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, Smax, Hkv, D]; position: int32 [B] current
+    lengths.  Returns (out [B, 1, d], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = position[:, None]  # [B, 1]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # Scatter the new KV at each sequence's current length.
+    cache_k = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+        c, kk, (i, 0, 0)))(cache_k, k, position)
+    cache_v = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+        c, vv, (i, 0, 0)))(cache_v, v, position)
+    # Mask: keys beyond position+1 are invalid.
+    sk = cache_k.shape[1]
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(sk)[None, :] <= position[:, None]
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+    return _out_proj(p, o, b, 1), cache_k, cache_v
+
+
+def cross_attention(p, cfg: ModelConfig, x, image_embeds):
+    """Cross-attention block (vlm): queries from text, KV from the stubbed
+    vision frontend output.  Tanh-gated residual as in llama-3.2-vision."""
+    from repro.models.chunked_attention import chunked_attention
+
+    kv = rmsnorm(image_embeds, p["kv_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, x, kv_x=kv)
+    o = chunked_attention(q, k, v, causal=False)
+    b, s = x.shape[:2]
+    out = _out_proj(p, o.reshape(b, s, -1), b, s)
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU / GeGLU / GeLU).
+# --------------------------------------------------------------------- #
+def mlp_params(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dt),
+            "w_up": dense_init(ks[1], d, ff, dt),
+            "w_down": dense_init(ks[2], ff, d, dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, ff, dt),
+        "w_down": dense_init(ks[1], ff, d, dt),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]

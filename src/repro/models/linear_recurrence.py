@@ -1,0 +1,122 @@
+"""Chunked linear-attention recurrence shared by mLSTM and Mamba2 (SSD).
+
+Both families compute, per head:
+
+    S_t = a_t * S_{t-1} + b_t * (k_t v_t^T)          (matrix state)
+    n_t = a_t * n_{t-1} + b_t * k_t                  (normalizer, optional)
+    y_t = q_t @ S_t  [/ max(|q_t @ n_t|, 1)]
+
+with per-step scalar decay ``a_t`` in (0, 1] and input gate ``b_t``.
+The chunkwise form (intra-chunk quadratic + inter-chunk recurrence) is the
+TPU-friendly formulation: chunk matmuls hit the MXU, and the scan over
+chunks carries only one [Dk, Dv] state per (batch, head) — per-chunk
+states are never materialized (xLSTM head_dim can be 1024, so a
+[NC, Dk, Dv] buffer would be gigabytes).
+
+Shapes (per call):  q, k: [B, H, T, Dk]; v: [B, H, T, Dv];
+log_a, log_b: [B, H, T] (log-space for stability).
+Returns y: [B, H, T, Dv] and final (state [B, H, Dk, Dv], n [B, H, Dk]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(q, k, v, log_a, log_b, *, chunk_size: int,
+                             normalize: bool = False, initial_state=None,
+                             initial_n=None):
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, t)
+    t_orig = t
+    if t % c:
+        # Pad to a chunk multiple with state-neutral steps: decay a=1
+        # (log_a=0) and input gate b=0 (log_b=-inf) leave S/n unchanged.
+        pad = c - t % c
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+        log_b = jnp.pad(log_b, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-1e30)
+        t = t + pad
+    nc = t // c
+
+    # Chunked views with NC leading (scan axis): [NC, B, H, C, D].
+    def chunkify(x, d):
+        return jnp.moveaxis(x.reshape(b, h, nc, c, d), 2, 0)
+
+    qc = chunkify(q, dk)
+    kc = chunkify(k, dk)
+    vc = chunkify(v, dv)
+    la = jnp.moveaxis(log_a.reshape(b, h, nc, c), 2, 0).astype(jnp.float32)
+    lb = jnp.moveaxis(log_b.reshape(b, h, nc, c), 2, 0).astype(jnp.float32)
+
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    n0 = (jnp.zeros((b, h, dk), jnp.float32) if initial_n is None
+          else initial_n.astype(jnp.float32))
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(carry, xs):
+        s_prev, n_prev = carry
+        qx, kx, vx, lax_, lbx = xs  # [B,H,C,{Dk,Dk,Dv}], [B,H,C]x2
+        qx32 = qx.astype(jnp.float32)
+        kx32 = kx.astype(jnp.float32)
+        vx32 = vx.astype(jnp.float32)
+        cum = jnp.cumsum(lax_, axis=-1)  # [B,H,C]
+        total = cum[..., -1:]
+
+        # Intra-chunk: D[t,s] = exp(cum[t] - cum[s] + lb[s]) for s <= t.
+        # Mask BEFORE the exp: above the diagonal dec is a positive sum of
+        # -log_a terms and can overflow exp; where(mask, exp(dec), 0) is 0
+        # in the forward but 0 * inf = NaN in the backward.
+        dec = cum[..., :, None] - cum[..., None, :] + lbx[..., None, :]
+        dec = jnp.where(causal, dec, -1e30)
+        gates = jnp.exp(dec)  # [B,H,C,C]
+        attn = jnp.einsum("bhcd,bhsd->bhcs", qx32, kx32)
+        y = jnp.einsum("bhcs,bhsv->bhcv", attn * gates, vx32)
+
+        # Inter-chunk: y += exp(cum[t]) * q_t @ S_prev.
+        q_scaled = qx32 * jnp.exp(cum)[..., None]
+        y = y + jnp.einsum("bhcd,bhdv->bhcv", q_scaled, s_prev)
+
+        if normalize:
+            n_intra = jnp.einsum("bhcs,bhsd->bhcd", gates, kx32)
+            n_t = n_intra + jnp.exp(cum)[..., None] * n_prev[:, :, None, :]
+            denom = jnp.einsum("bhcd,bhcd->bhc", qx32, n_t)
+            y = y / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+
+        # State update: S = S * exp(total) + sum_s exp(total-cum[s]+lb[s]) k v^T
+        w_state = jnp.exp(total - cum + lbx)  # [B,H,C]
+        kw = w_state[..., None] * kx32
+        s_new = s_prev * jnp.exp(total[..., 0])[..., None, None] + jnp.einsum(
+            "bhcd,bhcv->bhdv", kw, vx32)
+        n_new = n_prev * jnp.exp(total[..., 0])[..., None] + jnp.sum(kw, axis=2)
+        return (s_new, n_new), y
+
+    (s_fin, n_fin), ys = jax.lax.scan(step, (s0, n0), (qc, kc, vc, la, lb))
+    # ys: [NC, B, H, C, Dv] -> [B, H, T, Dv]
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, t, dv)[:, :, :t_orig]
+    return y.astype(q.dtype), s_fin, n_fin
+
+
+def recurrent_step(q, k, v, log_a, log_b, state, n, *, normalize: bool = False):
+    """Single-token decode step.
+
+    q, k: [B, H, Dk]; v: [B, H, Dv]; log_a/log_b: [B, H];
+    state: [B, H, Dk, Dv]; n: [B, H, Dk].
+    Returns (y [B, H, Dv], new_state, new_n).
+    """
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    bgate = jnp.exp(log_b.astype(jnp.float32))[..., None, None]
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    new_state = state.astype(jnp.float32) * a + bgate * kv
+    new_n = n.astype(jnp.float32) * a[..., 0] + bgate[..., 0] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), new_state)
+    if normalize:
+        denom = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), new_n)
+        y = y / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+    return y.astype(q.dtype), new_state, new_n

@@ -1,0 +1,618 @@
+"""The unified language model over all assigned architecture families.
+
+``LM(cfg)`` exposes a uniform functional interface:
+
+    init(rng)                          -> params
+    param_specs()                      -> params as ShapeDtypeStructs (dry-run)
+    logits_train(params, batch)        -> (per-token logits fn is internal;
+                                           use loss() for training)
+    loss(params, batch)                -> (scalar, aux dict)
+    prefill(params, batch)             -> (cache, last_logits)
+    decode_step(params, cache, batch)  -> (logits, new_cache)
+    cache_specs(batch, max_len)        -> cache as ShapeDtypeStructs
+    input_specs(shape)                 -> batch as ShapeDtypeStructs
+
+Layer stacks are scanned (stacked parameters) so the traced HLO is O(1) in
+depth; interleaved structures (vlm cross blocks, xLSTM sLSTM blocks,
+zamba2 shared attention) use a grouped scan layout (see DESIGN.md §3).
+Large-vocab cross-entropy is computed in sequence chunks to avoid
+materializing [B, S, V] logits.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+def _split_stack(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def sinusoidal_positions(s: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((s, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(angle))
+    out = out.at[:, 1::2].set(jnp.cos(angle))
+    return out.astype(dtype)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat  # rematerialize per-layer activations (training)
+        f = cfg.family
+        assert f in ("dense", "moe", "ssm", "hybrid", "audio", "vlm"), f
+        if f == "ssm":
+            assert cfg.slstm_every and cfg.num_layers % cfg.slstm_every == 0
+            self.n_groups = cfg.num_layers // cfg.slstm_every
+            self.per_group = cfg.slstm_every - 1  # mLSTM per group
+        elif f == "vlm":
+            assert cfg.cross_attn_every
+            self.n_groups = cfg.num_layers // cfg.cross_attn_every
+            self.per_group = cfg.cross_attn_every
+        elif f == "hybrid":
+            assert cfg.shared_attn_every
+            self.n_groups = cfg.num_layers // cfg.shared_attn_every
+            self.per_group = cfg.shared_attn_every
+            self.n_tail = cfg.num_layers - self.n_groups * self.per_group
+
+    # ------------------------------------------------------------------ #
+    # Parameters.
+    # ------------------------------------------------------------------ #
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = L._dtype(cfg.param_dtype)
+        k_emb, k_layers, k_head, k_extra = jax.random.split(rng, 4)
+        p: dict = {"final_norm": jnp.zeros((cfg.d_model,), dt)}
+
+        if cfg.family == "audio":
+            ks = jax.random.split(k_emb, cfg.num_codebooks)
+            p["embed"] = jnp.stack(
+                [L.embed_init(k, cfg.vocab_size, cfg.d_model, dt) for k in ks]
+            )  # [K, V, d]
+        else:
+            p["embed"] = L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt)
+
+        if not cfg.tie_embeddings:
+            if cfg.family == "audio":
+                ks = jax.random.split(k_head, cfg.num_codebooks)
+                p["lm_head"] = jnp.stack(
+                    [L.dense_init(k, cfg.d_model, cfg.vocab_size, dt) for k in ks]
+                )
+            else:
+                p["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+
+        f = cfg.family
+        if f in ("dense", "moe", "audio"):
+            p["layers"] = _split_stack(
+                k_layers, cfg.num_layers, lambda k: B.dense_block_params(k, cfg)
+            )
+        elif f == "vlm":
+            k1, k2 = jax.random.split(k_layers)
+            p["self_layers"] = _split_stack(
+                k1, self.n_groups * self.per_group,
+                lambda k: B.dense_block_params(k, cfg),
+            )
+            p["cross_layers"] = _split_stack(
+                k2, self.n_groups, lambda k: B.cross_block_params(k, cfg)
+            )
+            # reshape self stack into groups
+            p["self_layers"] = jax.tree.map(
+                lambda x: x.reshape(self.n_groups, self.per_group, *x.shape[1:]),
+                p["self_layers"],
+            )
+        elif f == "ssm":
+            k1, k2 = jax.random.split(k_layers)
+            m = _split_stack(
+                k1, self.n_groups * self.per_group,
+                lambda k: B.mlstm_block_params(k, cfg),
+            )
+            p["mlstm"] = jax.tree.map(
+                lambda x: x.reshape(self.n_groups, self.per_group, *x.shape[1:]), m
+            )
+            p["slstm"] = _split_stack(
+                k2, self.n_groups, lambda k: B.slstm_block_params(k, cfg)
+            )
+        elif f == "hybrid":
+            k1, k2, k3 = jax.random.split(k_layers, 3)
+            m = _split_stack(
+                k1, self.n_groups * self.per_group,
+                lambda k: B.mamba2_block_params(k, cfg),
+            )
+            p["mamba"] = jax.tree.map(
+                lambda x: x.reshape(self.n_groups, self.per_group, *x.shape[1:]), m
+            )
+            if self.n_tail:
+                p["mamba_tail"] = _split_stack(
+                    k2, self.n_tail, lambda k: B.mamba2_block_params(k, cfg)
+                )
+            p["shared_attn"] = B.dense_block_params(k3, cfg)  # weight-tied block
+        return p
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def _cast(self, params):
+        """Mixed precision: fp32 master params compute in compute_dtype.
+        Gradients flow through the cast (standard bf16 training)."""
+        cd = L._dtype(self.cfg.compute_dtype)
+        if cd == jnp.float32:
+            return params
+        return jax.tree.map(
+            lambda a: a.astype(cd) if a.dtype == jnp.float32 else a, params
+        )
+
+    # ------------------------------------------------------------------ #
+    # Embedding / head.
+    # ------------------------------------------------------------------ #
+    def _embed(self, p, tokens, positions=None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            # tokens: [B, S, K]; sum codebook embeddings + sinusoidal pos.
+            x = sum(p["embed"][i][tokens[:, :, i]]
+                    for i in range(cfg.num_codebooks))
+            if positions is None:
+                pos = sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)
+                x = x + pos
+            else:
+                # decode: one token per sequence at its current position
+                table = sinusoidal_positions(1 << 16, cfg.d_model, x.dtype)
+                x = x + table[positions][:, None, :]
+        else:
+            x = p["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        return x.astype(L._dtype(cfg.compute_dtype))
+
+    def _head_matrix(self, p):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return p["embed"].T  # [d, V]
+        if cfg.family == "audio":
+            return p["lm_head"]  # [K, d, V]
+        return p["lm_head"]
+
+    # ------------------------------------------------------------------ #
+    # Backbone (full sequence).
+    # ------------------------------------------------------------------ #
+    def backbone(self, p, x, batch):
+        cfg = self.cfg
+        f = cfg.family
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.float32(0.0)
+        ckpt = (lambda fn: jax.checkpoint(fn)) if self.remat else (lambda fn: fn)
+
+        if f in ("dense", "moe", "audio"):
+            @ckpt
+            def body(carry, lp):
+                h, a = carry
+                h, ax = B.dense_block_train(lp, cfg, h, positions)
+                return (h, a + ax), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, aux), p["layers"])
+        elif f == "vlm":
+            img = batch["image_embeds"].astype(x.dtype)
+
+            @ckpt
+            def group(carry, gp):
+                h, a = carry
+                selfs, crossp = gp
+
+                def inner(carry2, lp):
+                    h2, a2 = carry2
+                    h2, ax = B.dense_block_train(lp, cfg, h2, positions)
+                    return (h2, a2 + ax), None
+
+                (h, a), _ = jax.lax.scan(inner, (h, a), selfs)
+                h = B.cross_block_apply(crossp, cfg, h, img)
+                return (h, a), None
+
+            (x, aux), _ = jax.lax.scan(
+                group, (x, aux), (p["self_layers"], p["cross_layers"])
+            )
+        elif f == "ssm":
+            @ckpt
+            def group(h, gp):
+                mls, sls = gp
+
+                def inner(h2, lp):
+                    return B.mlstm_block_train(lp, cfg, h2), None
+
+                h, _ = jax.lax.scan(inner, h, mls)
+                h = B.slstm_block_train(sls, cfg, h)
+                return h, None
+
+            x, _ = jax.lax.scan(group, x, (p["mlstm"], p["slstm"]))
+        elif f == "hybrid":
+            @ckpt
+            def group(carry, gp):
+                h, a = carry
+
+                def inner(h2, lp):
+                    return B.mamba2_block_train(lp, cfg, h2), None
+
+                h, _ = jax.lax.scan(inner, h, gp)
+                h, ax = B.dense_block_train(p["shared_attn"], cfg, h, positions)
+                return (h, a + ax), None
+
+            (x, aux), _ = jax.lax.scan(group, (x, aux), p["mamba"])
+            if self.n_tail:
+                def inner(h2, lp):
+                    return B.mamba2_block_train(lp, cfg, h2), None
+
+                x, _ = jax.lax.scan(inner, x, p["mamba_tail"])
+        return L.rmsnorm(x, p["final_norm"], cfg.norm_eps), aux
+
+    # ------------------------------------------------------------------ #
+    # Loss (chunked large-vocab cross entropy).
+    # ------------------------------------------------------------------ #
+    def loss(self, params, batch, *, vocab_chunk: int = 512):
+        cfg = self.cfg
+        params = self._cast(params)
+        x, aux = self.backbone(params, self._embed(params, batch["tokens"]),
+                               batch)
+        labels = batch["labels"]
+        head = self._head_matrix(params)
+        b, s, d = x.shape
+        nchunk = max(1, s // min(vocab_chunk, s))
+        cs = s // nchunk
+        assert s % cs == 0
+
+        if cfg.family == "audio":
+            # labels: [B, S, K]; K heads.
+            def chunk_loss(carry, idx):
+                tot, cnt = carry
+                xs = jax.lax.dynamic_slice_in_dim(x, idx * cs, cs, axis=1)
+                ls = jax.lax.dynamic_slice_in_dim(labels, idx * cs, cs, axis=1)
+                logits = jnp.einsum(
+                    "bsd,kdv->bskv", xs.astype(jnp.float32),
+                    head.astype(jnp.float32),
+                )
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                tgt = jnp.take_along_axis(
+                    logits, jnp.maximum(ls, 0)[..., None], axis=-1
+                )[..., 0]
+                mask = (ls >= 0).astype(jnp.float32)
+                tot = tot + jnp.sum((lse - tgt) * mask)
+                cnt = cnt + jnp.sum(mask)
+                return (tot, cnt), None
+        else:
+            def chunk_loss(carry, idx):
+                tot, cnt = carry
+                xs = jax.lax.dynamic_slice_in_dim(x, idx * cs, cs, axis=1)
+                ls = jax.lax.dynamic_slice_in_dim(labels, idx * cs, cs, axis=1)
+                logits = xs.astype(jnp.float32) @ head.astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                tgt = jnp.take_along_axis(
+                    logits, jnp.maximum(ls, 0)[..., None], axis=-1
+                )[..., 0]
+                mask = (ls >= 0).astype(jnp.float32)
+                tot = tot + jnp.sum((lse - tgt) * mask)
+                cnt = cnt + jnp.sum(mask)
+                return (tot, cnt), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_loss, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(nchunk)
+        )
+        loss = tot / jnp.maximum(cnt, 1.0) + aux
+        return loss, {"xent": tot / jnp.maximum(cnt, 1.0), "aux": aux}
+
+    # ------------------------------------------------------------------ #
+    # Decode.
+    # ------------------------------------------------------------------ #
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        f = cfg.family
+
+        def stack(spec, *dims):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((*dims, *x.shape), x.dtype), spec
+            )
+
+        if f in ("dense", "moe", "audio"):
+            return {"layers": stack(B.dense_cache_spec(cfg, batch, max_len),
+                                    cfg.num_layers)}
+        if f == "vlm":
+            hd = cfg.resolved_head_dim
+            dt = L._dtype(cfg.compute_dtype)
+            return {
+                "self_layers": stack(
+                    B.dense_cache_spec(cfg, batch, max_len),
+                    self.n_groups, self.per_group,
+                ),
+                "cross_k": jax.ShapeDtypeStruct(
+                    (self.n_groups, batch, cfg.num_image_tokens,
+                     cfg.num_kv_heads, hd), dt),
+                "cross_v": jax.ShapeDtypeStruct(
+                    (self.n_groups, batch, cfg.num_image_tokens,
+                     cfg.num_kv_heads, hd), dt),
+            }
+        if f == "ssm":
+            return {
+                "mlstm": stack(B.mlstm_cache_spec(cfg, batch), self.n_groups,
+                               self.per_group),
+                "slstm": stack(B.slstm_cache_spec(cfg, batch), self.n_groups),
+            }
+        if f == "hybrid":
+            out = {
+                "mamba": stack(B.mamba2_cache_spec(cfg, batch), self.n_groups,
+                               self.per_group),
+                "attn": stack(B.dense_cache_spec(cfg, batch, max_len),
+                              self.n_groups),
+            }
+            if self.n_tail:
+                out["mamba_tail"] = stack(B.mamba2_cache_spec(cfg, batch),
+                                          self.n_tail)
+            return out
+        raise ValueError(f)
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, max_len)
+        )
+
+    def prefill(self, params, batch, *, max_len: int | None = None):
+        """Process the prompt, returning (cache, last-position logits).
+
+        batch: tokens [B, S] (audio: [B, S, K]) (+image_embeds for vlm).
+        The cache is laid out exactly as cache_specs(B, max_len or S).
+        """
+        cfg = self.cfg
+        f = cfg.family
+        params = self._cast(params)
+        x = self._embed(params, batch["tokens"])
+        b, s = x.shape[:2]
+        ml = max_len or s
+        positions = jnp.arange(s)
+
+        if f in ("dense", "moe", "audio"):
+            def body(h, lp):
+                h, _, k, v = B.dense_block_prefill(lp, cfg, h, positions, ml)
+                return h, {"k": k, "v": v}
+
+            x, kv = jax.lax.scan(body, x, params["layers"])
+            cache = {"layers": kv}
+        elif f == "vlm":
+            img = batch["image_embeds"].astype(x.dtype)
+
+            def group(h, gp):
+                selfs, crossp = gp
+
+                def inner(h2, lp):
+                    h2, _, k, v = B.dense_block_prefill(lp, cfg, h2, positions,
+                                                        ml)
+                    return h2, {"k": k, "v": v}
+
+                h, kv = jax.lax.scan(inner, h, selfs)
+                # Cross block + its static image KV.
+                kvn = L.rmsnorm(img, crossp["xattn"]["kv_norm"], cfg.norm_eps)
+                hd = cfg.resolved_head_dim
+                if crossp["xattn"]["wk"].ndim == 3:
+                    ck = jnp.einsum("bsd,dhk->bshk", kvn, crossp["xattn"]["wk"])
+                    cv = jnp.einsum("bsd,dhk->bshk", kvn, crossp["xattn"]["wv"])
+                else:
+                    ck = (kvn @ crossp["xattn"]["wk"]).reshape(
+                        b, -1, cfg.num_kv_heads, hd)
+                    cv = (kvn @ crossp["xattn"]["wv"]).reshape(
+                        b, -1, cfg.num_kv_heads, hd)
+                h = B.cross_block_apply(crossp, cfg, h, img)
+                return h, (kv, ck, cv)
+
+            x, (kv, ck, cv) = jax.lax.scan(
+                group, x, (params["self_layers"], params["cross_layers"])
+            )
+            cache = {"self_layers": kv, "cross_k": ck, "cross_v": cv}
+        elif f == "ssm":
+            def group(h, gp):
+                mls, sls = gp
+
+                def inner(h2, lp):
+                    h2, st = B.mlstm_block_prefill(lp, cfg, h2)
+                    return h2, st
+
+                h, mstates = jax.lax.scan(inner, h, mls)
+                h, sstate = B.slstm_block_prefill(sls, cfg, h)
+                return h, (mstates, sstate)
+
+            x, (mstates, sstates) = jax.lax.scan(
+                group, x, (params["mlstm"], params["slstm"])
+            )
+            cache = {"mlstm": mstates, "slstm": sstates}
+        elif f == "hybrid":
+            def group(h, gp):
+                def inner(h2, lp):
+                    h2, st = B.mamba2_block_prefill(lp, cfg, h2)
+                    return h2, st
+
+                h, mstates = jax.lax.scan(inner, h, gp)
+                h, _, k, v = B.dense_block_prefill(params["shared_attn"], cfg,
+                                                   h, positions, ml)
+                return h, (mstates, {"k": k, "v": v})
+
+            x, (mstates, akv) = jax.lax.scan(group, x, params["mamba"])
+            cache = {"mamba": mstates, "attn": akv}
+            if self.n_tail:
+                def inner(h2, lp):
+                    h2, st = B.mamba2_block_prefill(lp, cfg, h2)
+                    return h2, st
+
+                x, tstates = jax.lax.scan(inner, x, params["mamba_tail"])
+                cache["mamba_tail"] = tstates
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = self._head_matrix(params)
+        last = x[:, -1]
+        if cfg.family == "audio":
+            logits = jnp.einsum("bd,kdv->bkv", last.astype(jnp.float32),
+                                head.astype(jnp.float32))
+        else:
+            logits = last.astype(jnp.float32) @ head.astype(jnp.float32)
+        return cache, logits
+
+    def decode_step(self, params, cache, batch):
+        """One token for every sequence.  batch: tokens [B] (audio: [B,K]),
+        lengths int32 [B].  Returns (logits [B, V] (audio [B,K,V]), cache)."""
+        cfg = self.cfg
+        f = cfg.family
+        params = self._cast(params)
+        tokens = batch["tokens"]
+        lengths = batch["lengths"]
+        x = self._embed(params, tokens[:, None] if tokens.ndim == 1
+                        else tokens[:, None, :], positions=lengths)
+        aux_positions = lengths
+
+        if f in ("dense", "moe", "audio"):
+            def body(h, xs):
+                lp, lc = xs
+                h, nc = B.dense_block_decode(lp, cfg, h, lc, aux_positions)
+                return h, nc
+
+            x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                                   cache["layers"]))
+            cache = {"layers": new_layers}
+        elif f == "vlm":
+            def group(h, xs):
+                selfs, crossp, selfc, ck, cv = xs
+
+                def inner(h2, ys):
+                    lp, lc = ys
+                    h2, nc = B.dense_block_decode(lp, cfg, h2, lc, aux_positions)
+                    return h2, nc
+
+                h, new_selfc = jax.lax.scan(inner, h, (selfs, selfc))
+                # Cross attention against precomputed image KV.
+                hq = L.rmsnorm(h, crossp["norm"], cfg.norm_eps)
+                o = _cross_decode(crossp["xattn"], cfg, hq, ck, cv)
+                h = h + o
+                hq = L.rmsnorm(h, crossp["mlp_norm"], cfg.norm_eps)
+                g = jnp.tanh(crossp["mlp_gate"].astype(jnp.float32)).astype(h.dtype)
+                h = h + g * L.mlp(crossp["mlp"], cfg, hq)
+                return h, new_selfc
+
+            x, new_selfc = jax.lax.scan(
+                group, x,
+                (params["self_layers"], params["cross_layers"],
+                 cache["self_layers"], cache["cross_k"], cache["cross_v"]),
+            )
+            cache = dict(cache, self_layers=new_selfc)
+        elif f == "ssm":
+            def group(h, xs):
+                mls, sls, mlc, slc = xs
+
+                def inner(h2, ys):
+                    lp, lc = ys
+                    h2, nc = B.mlstm_block_decode(lp, cfg, h2, lc)
+                    return h2, nc
+
+                h, new_mlc = jax.lax.scan(inner, h, (mls, mlc))
+                h, new_slc = B.slstm_block_decode(sls, cfg, h, slc)
+                return h, (new_mlc, new_slc)
+
+            x, (new_m, new_s) = jax.lax.scan(
+                group, x, (params["mlstm"], params["slstm"], cache["mlstm"],
+                           cache["slstm"]),
+            )
+            cache = {"mlstm": new_m, "slstm": new_s}
+        elif f == "hybrid":
+            def group(h, xs):
+                gp, gc, ac = xs
+
+                def inner(h2, ys):
+                    lp, lc = ys
+                    h2, nc = B.mamba2_block_decode(lp, cfg, h2, lc)
+                    return h2, nc
+
+                h, new_gc = jax.lax.scan(inner, h, (gp, gc))
+                h, new_ac = B.dense_block_decode(params["shared_attn"], cfg, h,
+                                                 ac, aux_positions)
+                return h, (new_gc, new_ac)
+
+            x, (new_m, new_a) = jax.lax.scan(
+                group, x, (params["mamba"], cache["mamba"], cache["attn"])
+            )
+            new_cache = {"mamba": new_m, "attn": new_a}
+            if self.n_tail:
+                def inner(h2, ys):
+                    lp, lc = ys
+                    h2, nc = B.mamba2_block_decode(lp, cfg, h2, lc)
+                    return h2, nc
+
+                x, new_t = jax.lax.scan(inner, x, (params["mamba_tail"],
+                                                   cache["mamba_tail"]))
+                new_cache["mamba_tail"] = new_t
+            cache = new_cache
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = self._head_matrix(params)
+        if cfg.family == "audio":
+            logits = jnp.einsum("bsd,kdv->bskv", x.astype(jnp.float32),
+                                head.astype(jnp.float32))[:, 0]
+        else:
+            logits = (x.astype(jnp.float32) @ head.astype(jnp.float32))[:, 0]
+        return logits, cache
+
+    # ------------------------------------------------------------------ #
+    # Input specs per assigned shape cell (ShapeDtypeStructs, no alloc).
+    # ------------------------------------------------------------------ #
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        i32 = jnp.int32
+        bf16 = L._dtype(cfg.compute_dtype)
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train" or shape.kind == "prefill":
+            if cfg.family == "audio":
+                toks = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+                labels = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+            else:
+                toks = jax.ShapeDtypeStruct((b, s), i32)
+                labels = jax.ShapeDtypeStruct((b, s), i32)
+            out = {"tokens": toks}
+            if shape.kind == "train":
+                out["labels"] = labels
+            if cfg.family == "vlm":
+                out["image_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_image_tokens, cfg.d_model), bf16)
+            return out
+        # decode
+        if cfg.family == "audio":
+            toks = jax.ShapeDtypeStruct((b, cfg.num_codebooks), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((b,), i32)
+        return {"tokens": toks, "lengths": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def _cross_decode(p, cfg, x, ck, cv):
+    """Cross-attention for decode: x [B,1,d] vs cached image KV."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    if p["wq"].ndim == 3:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    else:
+        q = (x @ p["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), ck.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.num_heads * hd).astype(x.dtype)
+    from repro.models.layers import _out_proj
+    out = _out_proj(p, o, b, 1)
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts FFN: dropless sort-based dispatch via ragged_dot.
+
+Tokens are sorted by routed expert and multiplied against the per-expert
+weight stack with ``jax.lax.ragged_dot`` (MegaBlocks-style grouped GEMM —
+the TPU-native dropless formulation; a one-hot capacity dispatch would
+materialize an [n, E, C] tensor measured in terabytes at our shapes).
+
+Sharding: expert weights are TP-sharded on the hidden (ff) dimension over
+the 'model' axis, so the grouped GEMMs shard like ordinary Megatron MLP
+pairs (one reduce per pair) and no all-to-all is required.  EP (sharding
+the E dimension) is an alternative explored in the perf pass.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, dense_init
+
+
+def _constrain(x, *axes):
+    """with_sharding_constraint if a mesh context is active, else no-op.
+
+    GSPMD left the capacity-dispatch GEMMs replicated over 'data' (it only
+    propagated the ff/'model' sharding), so every device computed the full
+    global token set — a mesh-data-size x FLOP waste found in §Perf cell A.
+    Constraining the slot dim to ('pod','data') restores the parallelism.
+    """
+    mesh = jax.interpreters.pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(mesh.shape[a])
+    spec = []
+    for ax, dim in zip(axes, x.shape):
+        if ax == "dp" and dp and dim % dp_size == 0:
+            spec.append(dp if len(dp) > 1 else dp[0])
+        elif ax == "model" and "model" in names and dim % int(mesh.shape["model"]) == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    d, e, ff = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_ff_expert
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    glu = cfg.activation in ("swiglu", "geglu")
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # fp32 router
+        "w_up": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[2], (e, ff, d), jnp.float32)
+                   / math.sqrt(ff)).astype(dt),
+    }
+    if glu:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, ff), jnp.float32) * scale).astype(dt)
+    return p
+
+
+def moe_ffn(p, cfg: ModelConfig, x):
+    """Dispatch on cfg.moe_impl: 'ragged' (dropless, baseline) or
+    'capacity' (sort + gather into [E, C, d], §Perf optimization — the
+    CPU lowering of ragged_dot materializes dense per-expert GEMMs, ~E/k x
+    wasted FLOPs; capacity-gather bounds FLOPs at k*cf x dense)."""
+    if getattr(cfg, "moe_impl", "ragged") == "capacity":
+        return moe_ffn_capacity(p, cfg, x)
+    return moe_ffn_ragged(p, cfg, x)
+
+
+def moe_ffn_ragged(p, cfg: ModelConfig, x):
+    """x: [B, S, d] -> ([B, S, d], aux_loss scalar).  Dropless top-k."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k = mo.top_k
+    e = mo.num_experts
+    xf = x.reshape(n, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # [n, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [n, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch-style load-balance auxiliary loss.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce) * mo.aux_loss_weight
+
+    # Sort the (token, slot) pairs by expert id.
+    flat_expert = expert_idx.reshape(-1)  # [n*k]
+    order = jnp.argsort(flat_expert)  # stable
+    inv_order = jnp.argsort(order)
+    token_of = order // k  # original token per sorted slot
+    xs = xf[token_of]  # [n*k, d] gathered (dup per slot)
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+
+    # Grouped GEMMs (dropless).
+    if "w_gate" in p:
+        act = jax.nn.silu if cfg.activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)) * \
+            jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    else:
+        h = jax.nn.gelu(jax.lax.ragged_dot(xs, p["w_up"], group_sizes),
+                        approximate=True)
+    ys = jax.lax.ragged_dot(h, p["w_down"], group_sizes)  # [n*k, d]
+
+    # Unsort, weight by gates, and sum the k slots per token.
+    ys = ys[inv_order].reshape(n, k, d)
+    y = jnp.einsum("nkd,nk->nd", ys.astype(jnp.float32), gate_vals)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dp_group_count(n: int) -> int:
+    """Static data-parallel group count from the active mesh (1 if none)."""
+    mesh = jax.interpreters.pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= int(mesh.shape[a])
+    return g if g > 1 and n % g == 0 else 1
+
+
+def moe_ffn_capacity(p, cfg: ModelConfig, x):
+    """Capacity-based gather dispatch, GROUPED PER DATA SHARD.
+
+    Experts are TP-sharded (every data shard holds every expert's ff
+    slice), so tokens never need to cross data shards: the sort /
+    capacity-gather / GEMM / scatter all happen within each of G = |dp|
+    groups, each group local to one shard.  §Perf cell A found the
+    ungrouped version all-gathering the global [E, C, d] dispatch tensor
+    (64 GB/layer) — grouping removes that traffic entirely.
+
+    FLOPs = G * E * C_loc * d * ff = (k*cf) x one dense expert pass.
+    Tokens beyond per-shard capacity are dropped (gates renormalized),
+    Switch-style; per-shard dropping differs from global dropping only in
+    boundary effects."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k = mo.top_k
+    e = mo.num_experts
+    g = _dp_group_count(n)
+    m = n // g  # tokens per group
+    cap = max(1, int(mo.capacity_factor * m * k / e))
+    xf = x.reshape(n, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [n, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce) * mo.aux_loss_weight
+
+    # Grouped views: [G, m, ...] with G sharded over the data axes.
+    xg = _constrain(xf.reshape(g, m, d), "dp", None, None)
+    eg = expert_idx.reshape(g, m * k) if k > 1 else expert_idx.reshape(g, m)
+    eg = expert_idx.reshape(g, m, k).reshape(g, m * k)
+    gg = gate_vals.reshape(g, m * k)
+
+    order = jnp.argsort(eg, axis=-1)  # [G, m*k]
+    token_of = order // k  # token index WITHIN the group
+    gate_of = jnp.take_along_axis(gg, order, axis=-1)
+
+    counts = jnp.sum(jax.nn.one_hot(eg, e, dtype=jnp.int32), axis=1)  # [G,E]
+    start = jnp.concatenate(
+        [jnp.zeros((g, 1), jnp.int32),
+         jnp.cumsum(counts, axis=-1)[:, :-1].astype(jnp.int32)], axis=-1)
+    pos = jnp.arange(cap, dtype=jnp.int32)[None, None, :]  # [1,1,C]
+    idx = start[..., None] + pos  # [G, E, C]
+    valid = pos < counts[..., None]  # [G, E, C]
+    idx = jnp.clip(idx, 0, m * k - 1)
+
+    tok_idx = jnp.take_along_axis(token_of, idx.reshape(g, -1), axis=-1
+                                  ).reshape(g, e, cap)  # [G,E,C]
+    xe = jnp.take_along_axis(
+        xg[:, :, None, :].reshape(g, m, d),
+        tok_idx.reshape(g, -1)[..., None], axis=1,
+    ).reshape(g, e, cap, d) * valid[..., None].astype(xg.dtype)
+    xe = _constrain(xe, "dp", None, None, None)
+    if "w_gate" in p:
+        act = jax.nn.silu if cfg.activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * jnp.einsum(
+            "gecd,edf->gecf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_up"]),
+                        approximate=True)
+    h = _constrain(h, "dp", None, None, "model")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])  # [G, E, C, d]
+    ye = _constrain(ye, "dp", None, None, None)
+
+    # Scatter back within each group.
+    gates = jnp.take_along_axis(gate_of, idx.reshape(g, -1), axis=-1
+                                ).reshape(g, e, cap)
+    val = (ye * (gates * valid)[..., None].astype(ye.dtype)).reshape(g, -1, d)
+    y = jnp.zeros((g, m, d), val.dtype)
+    y = jax.vmap(lambda yy, tt, vv: yy.at[tt].add(vv))(
+        y, tok_idx.reshape(g, -1), val)
+    y = _constrain(y, "dp", None, None)
+    return y.reshape(b, s, d).astype(x.dtype), aux

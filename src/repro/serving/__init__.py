@@ -1,0 +1,3 @@
+from repro.serving.engine import PagedServer, Request
+
+__all__ = ["PagedServer", "Request"]

@@ -1,0 +1,230 @@
+"""Continuous-batching serving engine over the MIND-managed paged KV pool.
+
+The engine is the end-to-end integration of the paper's technique with a
+real model: requests share prompt-prefix KV pages across sessions (and
+data-parallel replicas), the MIND in-network MMU keeps those pages
+coherent (S for shared prefixes, S->M + copy-on-write when a sequence
+appends into a shared page), and decode attention reads pages through the
+block table — the Pallas ``paged_attention`` kernel on TPU.
+
+Supports the dense/moe/audio families (per-layer KV).  Scheduler:
+admit-until-full continuous batching with page-granular allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as K
+from repro.memory.paged_pool import PagedKVPool
+from repro.models import layers as L
+from repro.models.model import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    session: int = 0  # PDID for MIND protection
+    # runtime state
+    generated: list = field(default_factory=list)
+    pages: list = field(default_factory=list)  # physical page ids
+    length: int = 0
+    done: bool = False
+
+
+class PagedServer:
+    def __init__(self, model: LM, params, *, max_batch: int = 8,
+                 page_tokens: int = 16, num_pages: int = 512,
+                 prefix_share: bool = True, num_replicas: int = 1):
+        cfg = model.cfg
+        assert cfg.family in ("dense", "moe"), \
+            "paged serving path supports per-layer-KV families"
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.page_tokens = page_tokens
+        self.prefix_share = prefix_share
+        self.pool = PagedKVPool(
+            num_layers=cfg.num_layers,
+            num_pages=num_pages,
+            page_tokens=page_tokens,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            dtype=L._dtype(cfg.compute_dtype),
+            num_replicas=num_replicas,
+        )
+        self.queue: list[Request] = []
+        self.active: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._decode_fn = jax.jit(self._decode_step_impl)
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               session: int | None = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(
+            rid=rid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            session=session if session is not None else rid + 1,
+        ))
+        return rid
+
+    # ------------------------------------------------------------------ #
+    # Prefill: run the model's prefill path, then scatter KV into pages.
+    # ------------------------------------------------------------------ #
+    def _prefill(self, req: Request) -> None:
+        s = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        cache, logits = self.model.prefill(self.params, batch)
+        # cache["layers"]: k/v [L, 1, S, Hkv, hd]
+        k = np.asarray(cache["layers"]["k"][:, 0])  # [L, S, H, hd]
+        v = np.asarray(cache["layers"]["v"][:, 0])
+        pt = self.page_tokens
+        for start in range(0, s, pt):
+            end = min(start + pt, s)
+            prefix_key = None
+            if self.prefix_share:
+                # Pages are shareable by prefix content hash.  Partial tail
+                # pages share too (identical prompts); a decode append into
+                # one triggers S->M + copy-on-write through MIND.
+                prefix_key = (bytes(req.prompt[:end].tobytes()), end - start)
+            pid = self.pool.alloc_page(req.session, prefix_key=prefix_key)
+            ref = self.pool._pages[pid]
+            if ref.refcount == 1 or prefix_key is None:
+                # Fresh page: initial population (pre-population, §4.4).
+                pid = self.pool.write_access(pid, req.session, populate=True)
+                self.pool.write_tokens(
+                    pid, 0, jnp.asarray(k[:, start:end]),
+                    jnp.asarray(v[:, start:end]))
+            else:
+                self.pool.read_access(pid, req.session)
+            req.pages.append(pid)
+        req.length = s
+        tok = int(np.argmax(np.asarray(logits[0])))
+        req.generated.append(tok)
+
+    # ------------------------------------------------------------------ #
+    # Decode: one token for the whole active batch via the paged kernel.
+    # ------------------------------------------------------------------ #
+    def _decode_step_impl(self, params, k_pool, v_pool, tokens, lengths,
+                          block_tables):
+        cfg = self.cfg
+        model = self.model
+        params = model._cast(params)
+        x = model._embed(params, tokens[:, None])  # [B,1,d]
+        positions = lengths
+
+        def body(h, xs):
+            lp, kp, vp = xs  # layer params, [P,page,H,hd] pools
+            hn = L.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = L._project_qkv(lp["attn"], cfg, hn)
+            q = L.apply_rope(q, positions[:, None], cfg.rope_theta)
+            k = L.apply_rope(k, positions[:, None], cfg.rope_theta)
+            # Write the new token's KV into its page slot.
+            page_idx = lengths // self.page_tokens
+            offset = lengths % self.page_tokens
+            pids = jnp.take_along_axis(block_tables, page_idx[:, None],
+                                       axis=1)[:, 0]
+
+            def put(pool, val):
+                # val: [B, 1, H, hd] -> scatter at (pid, offset)
+                return pool.at[pids, offset].set(val[:, 0])
+
+            kp = put(kp, k)
+            vp = put(vp, v)
+            # Paged attention over the pool (Pallas kernel).
+            o = K.paged_attention(
+                q[:, 0], kp, vp, block_tables, lengths + 1,
+            )  # [B, Hq, hd]; seq covers positions [0, pos]
+            b = h.shape[0]
+            h = h + L._out_proj(lp["attn"], o.reshape(b, 1, -1), b, 1)
+            hn = L.rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.moe is not None:
+                from repro.models.moe import moe_ffn
+                y, _ = moe_ffn(lp["moe"], cfg, hn)
+                h = h + y
+            else:
+                h = h + L.mlp(lp["mlp"], cfg, hn)
+            return h, (kp, vp)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["layers"], k_pool, v_pool))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = model._head_matrix(params)
+        logits = (x[:, 0].astype(jnp.float32) @ head.astype(jnp.float32))
+        return logits, new_k, new_v
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One engine step: admit, prefill one, decode the batch.
+        Returns number of tokens produced."""
+        # Admit.
+        while self.queue and len(self.active) < self.max_batch:
+            req = self.queue.pop(0)
+            self._prefill(req)
+            self.active.append(req)
+        if not self.active:
+            return 0
+
+        # Ensure room for the next token (page boundary -> new page or CoW).
+        for req in self.active:
+            need_slot = req.length + len(req.generated) - 1
+            page_idx = need_slot // self.page_tokens
+            if page_idx >= len(req.pages):
+                req.pages.append(self.pool.alloc_page(req.session))
+            else:
+                # Writing into the tail page: coherence write access.
+                new_pid = self.pool.write_access(req.pages[page_idx],
+                                                 req.session)
+                req.pages[page_idx] = new_pid
+
+        b = len(self.active)
+        maxp = max(len(r.pages) for r in self.active)
+        maxp = (maxp + 7) // 8 * 8  # pad to limit jit recompiles
+        block_tables = np.zeros((b, maxp), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        tokens = np.zeros((b,), np.int32)
+        for i, r in enumerate(self.active):
+            block_tables[i, : len(r.pages)] = r.pages
+            lengths[i] = r.length + len(r.generated) - 1  # pos of last token
+            tokens[i] = r.generated[-1]
+
+        logits, self.pool.k_pool, self.pool.v_pool = self._decode_fn(
+            self.params, self.pool.k_pool, self.pool.v_pool,
+            jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(block_tables),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        produced = 0
+        still = []
+        for i, r in enumerate(self.active):
+            r.generated.append(int(nxt[i]))
+            produced += 1
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+                for pid in r.pages:
+                    self.pool.free_page(pid, r.session)
+                self.finished.append(r)
+            else:
+                still.append(r)
+        self.active = still
+        return produced
+
+    def run_until_done(self, max_steps: int = 1000) -> dict:
+        steps = 0
+        total = 0
+        while (self.queue or self.active) and steps < max_steps:
+            total += self.step()
+            steps += 1
+        return {"steps": steps, "tokens": total, **self.pool.stats,
+                "directory_entries": self.pool.directory_entries()}

@@ -1,0 +1,16 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py forces
+512 placeholder devices (and it does so before importing jax)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

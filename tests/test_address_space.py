@@ -1,0 +1,101 @@
+"""Address space: range partitioning, translation, migration, pow2 split."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.types import PAGE_SIZE, pow2_split
+
+
+def make_gas(n=4):
+    gas = GlobalAddressSpace()
+    for _ in range(n):
+        gas.add_blade()
+    return gas
+
+
+def test_range_partition_one_entry_per_blade():
+    gas = make_gas(8)
+    # §4.1: a single translation entry per memory blade.
+    assert gas.num_translation_entries() == 8
+
+
+def test_translate_routes_to_home_blade():
+    gas = make_gas(4)
+    for b in range(4):
+        spec = gas.blades[b]
+        blade, pa = gas.translate(spec.va_base + 12345)
+        assert blade == b
+        assert pa == 12345
+
+
+def test_translate_out_of_range_raises():
+    gas = make_gas(2)
+    with pytest.raises(KeyError):
+        gas.home_blade(123)
+
+
+def test_blade_join_retire_reuses_slots():
+    gas = make_gas(3)
+    gas.retire_blade(1)
+    spec = gas.add_blade()
+    assert spec.blade_id == 1  # slot reuse keeps ranges compact
+
+
+def test_migration_outlier_lpm():
+    gas = make_gas(4)
+    src = gas.blades[0]
+    # Migrate 8 pages from blade 0 to blade 2 at PA 0x5000.
+    base = src.va_base + 64 * PAGE_SIZE
+    n_entries = gas.migrate(base, 8 * PAGE_SIZE, dst_blade=2, dst_pa_base=0x50000)
+    assert n_entries <= int(np.ceil(np.log2(8 * PAGE_SIZE)))
+    blade, pa = gas.translate(base + 100)
+    assert blade == 2
+    assert pa == 0x50000 + 100
+    # Addresses outside the migrated range keep their home translation.
+    blade2, _ = gas.translate(src.va_base)
+    assert blade2 == 0
+
+
+def test_outlier_coalescing():
+    gas = make_gas(2)
+    src = gas.blades[0]
+    base = src.va_base
+    # Two contiguous buddy migrations to the same target should coalesce.
+    gas.migrate(base, 4 * PAGE_SIZE, 1, 0)
+    gas.migrate(base + 4 * PAGE_SIZE, 4 * PAGE_SIZE, 1, 4 * PAGE_SIZE)
+    assert len(gas.outliers) == 1
+
+
+# ------------------------------------------------------------------ #
+# pow2_split properties (§4.4 TCAM optimization).
+# ------------------------------------------------------------------ #
+@given(
+    base=st.integers(min_value=0, max_value=1 << 40),
+    length=st.integers(min_value=1, max_value=1 << 24),
+)
+@settings(max_examples=200, deadline=None)
+def test_pow2_split_covers_exactly(base, length):
+    chunks = pow2_split(base, length)
+    # naturally aligned power-of-two chunks
+    for cb, cl in chunks:
+        assert cb % (1 << cl) == 0
+    # exact disjoint cover
+    covered = sorted((cb, cb + (1 << cl)) for cb, cl in chunks)
+    assert covered[0][0] == base
+    assert covered[-1][1] == base + length
+    for (a0, a1), (b0, b1) in zip(covered, covered[1:]):
+        assert a1 == b0
+    # paper's bound: <= 2*ceil(log2(len)) entries for arbitrary alignment
+    import math
+
+    assert len(chunks) <= 2 * max(1, math.ceil(math.log2(length + 1)))
+
+
+@given(st.integers(min_value=12, max_value=30))
+@settings(max_examples=30, deadline=None)
+def test_pow2_split_aligned_pow2_single_entry(log2len):
+    # §4.4: pow2-aligned pow2-size ranges need exactly ONE entry.
+    chunks = pow2_split(1 << log2len, 1 << log2len)
+    assert len(chunks) == 1

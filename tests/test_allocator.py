@@ -1,0 +1,93 @@
+"""Allocator: balanced placement, first-fit, fragmentation, fairness."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.allocator import MemoryAllocator
+from repro.core.types import PAGE_SIZE, Perm
+
+
+def make_alloc(blades=4, pow2=True):
+    gas = GlobalAddressSpace()
+    for _ in range(blades):
+        gas.add_blade()
+    return MemoryAllocator(gas, pow2_align=pow2)
+
+
+def test_least_allocated_placement():
+    a = make_alloc(4)
+    vmas = [a.mmap(1, 1 << 20) for _ in range(8)]
+    by_blade = a.allocation_by_blade()
+    # 8 equal allocations over 4 blades -> 2 each (§4.1 load balancing).
+    assert set(by_blade.values()) == {2 << 20}
+    assert a.jain_fairness() == pytest.approx(1.0)
+
+
+def test_pow2_rounding_and_alignment():
+    a = make_alloc(1)
+    vma = a.mmap(1, 5000)
+    assert vma.length == 8192
+    assert vma.base % 8192 == 0
+
+
+def test_first_fit_reuses_freed_range():
+    a = make_alloc(1)
+    v1 = a.mmap(1, 64 * PAGE_SIZE)
+    v2 = a.mmap(1, 64 * PAGE_SIZE)
+    a.munmap(v1.base)
+    v3 = a.mmap(1, 64 * PAGE_SIZE)
+    assert v3.base == v1.base  # address-ordered first fit
+
+
+def test_oom_raises():
+    a = make_alloc(1)
+    cap = a.blades[0].capacity
+    a.mmap(1, cap)
+    with pytest.raises(MemoryError):
+        a.mmap(1, PAGE_SIZE)
+
+
+def test_find_vma():
+    a = make_alloc(2)
+    v = a.mmap(7, 4 * PAGE_SIZE, Perm.READ)
+    assert a.find_vma(v.base + 100).pdid == 7
+    assert a.find_vma(v.base - 1) is None
+
+
+@given(
+    st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]),
+                  st.integers(min_value=1, max_value=1 << 22)),
+        min_size=1, max_size=60,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_alloc_free_invariants(ops):
+    """No overlapping vmas; accounting consistent; free returns capacity."""
+    a = make_alloc(2)
+    live = []
+    for op, size in ops:
+        if op == "alloc" or not live:
+            try:
+                v = a.mmap(1, size)
+                live.append(v)
+            except MemoryError:
+                continue
+        else:
+            v = live.pop()
+            a.munmap(v.base)
+        # no overlaps among live vmas
+        spans = sorted((v.base, v.end) for v in live)
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert e0 <= s1
+        # accounting
+        assert sum(a.allocation_by_blade().values()) == sum(
+            v.length for v in live
+        )
+    for v in live:
+        a.munmap(v.base)
+    assert sum(a.allocation_by_blade().values()) == 0
+    # capacity fully restored
+    for b in a.blades.values():
+        assert b.largest_free == b.capacity

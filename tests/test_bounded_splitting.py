@@ -1,0 +1,144 @@
+"""Bounded Splitting (§5): Theorem 5.1 bound + algorithm behaviour."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounded_splitting import (
+    BoundedSplitting,
+    worst_case_subregions,
+    worst_case_total,
+)
+from repro.core.cache import BladePageCache
+from repro.core.coherence import CoherenceEngine
+from repro.core.directory import CacheDirectory
+from repro.core.types import (
+    PAGE_SHIFT,
+    PAGE_SIZE,
+    AccessType,
+    MemAccess,
+    MSIState,
+    SwitchResources,
+)
+
+BASE = 1 << 40
+M_LOG2 = 21  # 2 MB regions as in the paper
+
+
+def test_theorem_bound_cases():
+    # Case 1: f <= t -> one region.
+    assert worst_case_subregions(5, 10.0, M_LOG2) == 1
+    # Case 2: t < f <= 2t -> 1 + log2 M  (M in pages: levels = 1+9=10)
+    levels = 1 + (M_LOG2 - PAGE_SHIFT)
+    assert worst_case_subregions(15, 10.0, M_LOG2) == levels
+    # Case 3: k = ceil(f/t) -> (k-1)(1 + log2 M)
+    assert worst_case_subregions(35, 10.0, M_LOG2) == 3 * levels
+
+
+def test_smax_closed_form():
+    # With t from Eq. 1 at c=1, S_max <= N * (1 + log2 M).
+    fs = [100, 50, 30, 20]
+    n = len(fs)
+    t = sum(fs) / n  # c = 1
+    levels = 1 + (M_LOG2 - PAGE_SHIFT)
+    assert worst_case_total(fs, t, M_LOG2) <= n * levels
+
+
+def _run_workload(engine, directory, splitter, epochs, hot_pages, rng_ops):
+    """Drive contended writes on hot pages then run splitting epochs."""
+    for ep in range(epochs):
+        for blade, page, write in rng_ops:
+            addr = BASE + (page % hot_pages) * PAGE_SIZE
+            engine.access(MemAccess(blade, 1, addr,
+                                    AccessType.WRITE if write else AccessType.READ))
+        splitter.run_epoch()
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 63), st.booleans()),
+        min_size=50, max_size=200,
+    ),
+    epochs=st.integers(2, 6),
+)
+@settings(max_examples=20, deadline=None)
+def test_directory_bounded_and_invariants(ops, epochs):
+    """Property: after any workload + epochs, (a) directory size stays
+    within SRAM capacity, (b) regions tile the space without overlap,
+    (c) no region is smaller than a page or larger than M."""
+    d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=14,
+                       resources=SwitchResources(max_directory_entries=1000))
+    caches = {b: BladePageCache(b, 1 << 20) for b in range(4)}
+    e = CoherenceEngine(d, caches)
+    s = BoundedSplitting(d, c=1.0)
+    _run_workload(e, d, s, epochs, 64, ops)
+    assert d.num_entries() <= 1000
+    spans = sorted((en.base, en.end) for en in d.entries.values())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, "overlapping regions"
+    for en in d.entries.values():
+        assert PAGE_SHIFT <= en.size_log2 <= M_LOG2
+    e.check_invariants()
+
+
+def test_hot_region_splits_down():
+    """A heavily false-invalidated region is split toward page granularity
+    while cold regions stay coarse."""
+    d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=16)
+    caches = {b: BladePageCache(b, 1 << 20) for b in range(2)}
+    e = CoherenceEngine(d, caches)
+    s = BoundedSplitting(d, c=4.0, merge_enabled=False)
+    hot = BASE
+    cold = BASE + (1 << M_LOG2) * 8
+    for ep in range(6):
+        # Hot: ping-pong writes to 16 pages in one region from 2 blades.
+        for i in range(60):
+            for b in range(2):
+                e.access(MemAccess(b, 1, hot + (i % 16) * PAGE_SIZE,
+                                   AccessType.WRITE))
+        # Cold: single-blade reads (no false invalidations).
+        e.access(MemAccess(0, 1, cold, AccessType.READ))
+        s.run_epoch()
+    hot_entry = d.lookup(hot)
+    cold_entry = d.lookup(cold)
+    assert hot_entry.size_log2 < 16, "hot region did not split"
+    assert cold_entry.size_log2 >= 14, "cold region split needlessly"
+
+
+def test_never_splits_below_page():
+    d = CacheDirectory(max_region_log2=14, initial_region_log2=PAGE_SHIFT)
+    caches = {0: BladePageCache(0, 1 << 20), 1: BladePageCache(1, 1 << 20)}
+    e = CoherenceEngine(d, caches)
+    s = BoundedSplitting(d, c=0.01)  # absurdly aggressive threshold
+    for ep in range(4):
+        for b in (0, 1):
+            e.access(MemAccess(b, 1, BASE, AccessType.WRITE))
+        s.run_epoch()
+    assert d.lookup(BASE).size_log2 == PAGE_SHIFT
+
+
+def test_merge_recovers_capacity():
+    """Cold buddies merge back, freeing SRAM slots (§5 merge variant)."""
+    d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=13)
+    caches = {0: BladePageCache(0, 1 << 20)}
+    e = CoherenceEngine(d, caches)
+    s = BoundedSplitting(d, c=1.0, merge_enabled=True)
+    for i in range(32):  # populate 32 adjacent 8 KB regions, single reader
+        e.access(MemAccess(0, 1, BASE + i * (1 << 13), AccessType.READ))
+    n0 = d.num_entries()
+    for _ in range(8):
+        s.run_epoch()
+    assert d.num_entries() < n0  # buddies merged
+
+
+def test_c_adapts_under_pressure():
+    d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=PAGE_SHIFT,
+                       resources=SwitchResources(max_directory_entries=64))
+    caches = {0: BladePageCache(0, 1 << 20), 1: BladePageCache(1, 1 << 20)}
+    e = CoherenceEngine(d, caches)
+    s = BoundedSplitting(d, c=1.0, merge_enabled=False)
+    for i in range(100):  # 100 distinct page regions > 64 slots
+        e.access(MemAccess(0, 1, BASE + i * PAGE_SIZE, AccessType.READ))
+    s.run_epoch()
+    assert s.c > 1.0  # utilization > 95% doubled c

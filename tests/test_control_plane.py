@@ -1,0 +1,92 @@
+"""Control plane: syscalls, failover snapshot/restore (§3.2), epochs."""
+
+import json
+
+from repro.core.control_plane import ControlPlane
+from repro.core.switch import make_mmu
+from repro.core.types import PAGE_SIZE, AccessType, MemAccess, Perm
+
+
+def make_cp(**kw):
+    mmu, alloc = make_mmu(num_memory_blades=4, num_compute_blades=4,
+                          cache_bytes_per_blade=1 << 20, **kw)
+    return ControlPlane(mmu, alloc), mmu, alloc
+
+
+def test_mmap_munmap_transparent_retvals():
+    cp, mmu, alloc = make_cp()
+    res = cp.sys_mmap(1, 100_000)
+    assert res.retval == res.vma.base  # same retval as local mmap
+    assert cp.sys_munmap(1, res.vma.base).retval == 0
+    assert cp.sys_munmap(1, 0xdead).retval == -1
+
+
+def test_munmap_wrong_pdid_rejected():
+    cp, *_ = make_cp()
+    v = cp.sys_mmap(1, PAGE_SIZE).vma
+    assert cp.sys_munmap(2, v.base).retval == -1
+
+
+def test_mprotect_changes_permissions():
+    cp, mmu, _ = make_cp()
+    v = cp.sys_mmap(1, 4 * PAGE_SIZE, Perm.RW).vma
+    assert mmu.protection.check(1, v.base, AccessType.WRITE)
+    cp.sys_mprotect(1, v.base, v.length, Perm.READ)
+    assert not mmu.protection.check(1, v.base, AccessType.WRITE)
+    assert mmu.protection.check(1, v.base, AccessType.READ)
+
+
+def test_munmap_invalidates_directory():
+    cp, mmu, _ = make_cp()
+    v = cp.sys_mmap(1, PAGE_SIZE, requesting_blade=0).vma
+    mmu.handle(MemAccess(0, 1, v.base, AccessType.WRITE))
+    assert mmu.engine.directory.num_entries() > 0
+    cp.sys_munmap(1, v.base)
+    assert len(mmu.engine.directory.entries_in(v.base, v.length)) == 0
+
+
+def test_blade_join_extends_capacity():
+    cp, mmu, alloc = make_cp()
+    n0 = mmu.gas.num_translation_entries()
+    b = cp.blade_join()
+    assert mmu.gas.num_translation_entries() == n0 + 1
+    assert b in alloc.blades
+
+
+def test_snapshot_restore_roundtrip():
+    """Backup-switch failover: data plane reconstructed from the control
+    plane snapshot must translate/protect/track identically."""
+    cp, mmu, alloc = make_cp()
+    v1 = cp.sys_mmap(1, 64 * PAGE_SIZE, Perm.RW, requesting_blade=0).vma
+    v2 = cp.sys_mmap(2, 8 * PAGE_SIZE, Perm.READ, requesting_blade=1).vma
+    mmu.handle(MemAccess(0, 1, v1.base, AccessType.WRITE))
+    mmu.handle(MemAccess(2, 1, v1.base + PAGE_SIZE, AccessType.READ))
+
+    snap = cp.snapshot()
+    cp2 = ControlPlane.restore(snap, cache_bytes_per_blade=1 << 20,
+                               num_compute_blades=4)
+    # translation identical
+    assert cp2.mmu.gas.translate(v1.base) == mmu.gas.translate(v1.base)
+    assert cp2.mmu.gas.translate(v2.base + 5) == mmu.gas.translate(v2.base + 5)
+    # protection identical
+    for pdid, addr, acc in [(1, v1.base, AccessType.WRITE),
+                            (2, v1.base, AccessType.READ),
+                            (2, v2.base, AccessType.READ),
+                            (2, v2.base, AccessType.WRITE)]:
+        assert (cp2.mmu.protection.check(pdid, addr, acc)
+                == mmu.protection.check(pdid, addr, acc))
+    # directory state identical
+    d1 = sorted(mmu.engine.directory.export_tables())
+    d2 = sorted(cp2.mmu.engine.directory.export_tables())
+    assert d1 == d2
+    # allocator accounting identical
+    assert cp2.allocator.allocation_by_blade() == alloc.allocation_by_blade()
+
+
+def test_dataplane_export_shapes():
+    cp, mmu, _ = make_cp()
+    cp.sys_mmap(1, PAGE_SIZE, requesting_blade=0)
+    t = mmu.export_dataplane_tables()
+    assert t["translate"].shape[1] == 4
+    assert t["protect"].shape[1] == 4
+    assert t["directory"].shape[1] == 5

@@ -1,0 +1,131 @@
+"""Directory + MSI coherence: protocol transitions, invariants, false
+invalidations, capacity pressure."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import BladePageCache
+from repro.core.coherence import CoherenceEngine
+from repro.core.directory import CacheDirectory
+from repro.core.types import (
+    PAGE_SIZE,
+    AccessType,
+    MemAccess,
+    MSIState,
+    SwitchResources,
+)
+
+BASE = 1 << 40
+
+
+def make_engine(nblades=4, max_entries=30_000, initial_log2=14):
+    d = CacheDirectory(initial_region_log2=initial_log2,
+                       resources=SwitchResources(max_directory_entries=max_entries))
+    caches = {b: BladePageCache(b, 1 << 20) for b in range(nblades)}
+    return CoherenceEngine(d, caches), d, caches
+
+
+def acc(engine, blade, addr, write):
+    return engine.access(MemAccess(blade, 1, addr,
+                                   AccessType.WRITE if write else AccessType.READ))
+
+
+def test_read_miss_I_to_S():
+    e, d, c = make_engine()
+    acts, rec = acc(e, 0, BASE, write=False)
+    assert rec.kind == "I->S"
+    assert acts.fetch_from_memory
+    entry = d.lookup(BASE)
+    assert entry.state == MSIState.S and entry.sharers == 0b1
+
+
+def test_write_miss_I_to_M():
+    e, d, c = make_engine()
+    acts, rec = acc(e, 1, BASE, write=True)
+    assert rec.kind == "I->M"
+    entry = d.lookup(BASE)
+    assert entry.state == MSIState.M and entry.owner == 1
+
+
+def test_S_to_M_invalidates_sharers_parallel():
+    e, d, c = make_engine()
+    acc(e, 0, BASE, write=False)
+    acc(e, 1, BASE, write=False)
+    acc(e, 2, BASE, write=False)
+    acts, rec = acc(e, 3, BASE, write=True)
+    assert rec.kind == "S->M"
+    assert rec.parallel_invalidation  # Fig. 8: ~9us path
+    assert acts.invalidate == 0b0111  # all other sharers multicast
+    entry = d.lookup(BASE)
+    assert entry.state == MSIState.M and entry.owner == 3
+    # sharers' cached copies dropped
+    for b in range(3):
+        assert not c[b].has(BASE)
+
+
+def test_M_to_S_sequential_owner_flush():
+    e, d, c = make_engine()
+    acc(e, 0, BASE, write=True)
+    acts, rec = acc(e, 1, BASE, write=False)
+    assert rec.kind == "M->S"
+    assert rec.sequential_invalidation  # Fig. 8: ~18us path
+    assert acts.fetch_from_owner == 0
+
+
+def test_owner_rereads_locally():
+    e, d, c = make_engine()
+    acc(e, 0, BASE, write=True)
+    acts, _ = acc(e, 0, BASE, write=False)
+    assert acts.hit_local
+
+
+def test_false_invalidation_counting():
+    """Pages cached in the same region (≠ requested page) count as false
+    invalidations when the region is invalidated (§4.3.1)."""
+    e, d, c = make_engine(initial_log2=16)  # 64 KB regions = 16 pages
+    for i in range(8):  # blade 0 caches 8 pages of one region
+        acc(e, 0, BASE + i * PAGE_SIZE, write=True)
+    before = e.stats.false_invalidated_pages
+    acc(e, 1, BASE, write=True)  # invalidates the whole region at blade 0
+    assert e.stats.false_invalidated_pages - before == 7  # 8 minus requested
+
+
+def test_prepopulation_gives_owner_local_access():
+    e, d, c = make_engine()
+    e.prepopulate(BASE, 4 * PAGE_SIZE, owner_blade=2)
+    acts, _ = acc(e, 2, BASE, write=True)
+    assert acts.hit_local  # zero-fill, no fetch (§4.4 p-local)
+    acts2, _ = acc(e, 0, BASE, write=False)
+    assert not acts2.hit_local  # other blades trigger coherence
+
+
+def test_capacity_eviction_invalidates_sharers():
+    e, d, c = make_engine(max_entries=4, initial_log2=14)
+    for i in range(8):
+        acc(e, 0, BASE + i * (1 << 14), write=False)
+    assert d.num_entries() <= 4
+    assert d.capacity_evictions > 0
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 15), st.booleans()),
+        min_size=1, max_size=200,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_msi_invariants_random_traffic(ops):
+    """Property: single-writer/multi-reader invariant always holds, and a
+    page cached dirty at a blade implies that blade owns the region."""
+    e, d, caches = make_engine()
+    for blade, page, write in ops:
+        acc(e, blade, BASE + page * PAGE_SIZE, write)
+        e.check_invariants()
+    # dirty page => its region is M-owned by that blade
+    for b, cache in caches.items():
+        for pg, dirty in cache.pages.items():
+            if dirty:
+                entry = d.lookup(pg)
+                assert entry is not None
+                assert entry.state == MSIState.M and entry.owner == b

@@ -1,0 +1,141 @@
+"""HLO cost parser correctness + chunked linear recurrence oracle tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.hlo_analysis import analyze_hlo_text
+from repro.models.linear_recurrence import (
+    chunked_linear_attention,
+    recurrent_step,
+)
+
+
+# ------------------------------------------------------------------ #
+# HLO parser: trip-count-aware FLOPs on known computations.
+# ------------------------------------------------------------------ #
+def _flops_of(fn, *specs):
+    comp = jax.jit(fn).lower(*specs).compile()
+    return analyze_hlo_text(comp.as_text()).flops
+
+
+def test_scan_matmul_flops_exact():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+    got = _flops_of(f, x, ws)
+    assert got == 7 * 2 * 128 * 256 * 256
+
+
+def test_nested_scan_flops_exact():
+    def g(x, ws):
+        def outer(c, grp):
+            def inner(c2, w):
+                return jnp.tanh(c2 @ w), None
+            return jax.lax.scan(inner, c, grp)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 4, 128, 128), jnp.float32)
+    assert _flops_of(g, x, ws) == 12 * 2 * 64 * 128 * 128
+
+
+def test_grad_flops_counted():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        return (jax.lax.scan(body, x, w)[0] ** 2).sum()
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    got = _flops_of(jax.grad(f, argnums=1), x, w)
+    assert got == 3 * 5 * 2 * 64 * 128 * 128  # fwd + dx + dw
+
+
+def test_batched_einsum_flops():
+    def e(a, b):
+        return jnp.einsum("bhqd,bhkd->bhqk", a, b)
+
+    a = jax.ShapeDtypeStruct((2, 4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((2, 4, 96, 32), jnp.float32)
+    assert _flops_of(e, a, b) == 2 * 2 * 4 * 64 * 96 * 32
+
+
+# ------------------------------------------------------------------ #
+# Chunked linear recurrence vs naive sequential (mLSTM/Mamba2 substrate).
+# ------------------------------------------------------------------ #
+def _naive(q, k, v, la, lb, norm):
+    B, H, T, Dk = q.shape
+    Dv = v.shape[-1]
+    S = np.zeros((B, H, Dk, Dv))
+    N = np.zeros((B, H, Dk))
+    ys = np.zeros((B, H, T, Dv))
+    for t in range(T):
+        a = np.exp(la[:, :, t])[..., None, None]
+        bb = np.exp(lb[:, :, t])[..., None, None]
+        S = S * a + bb * (k[:, :, t, :, None] * v[:, :, t, None, :])
+        N = N * a[..., 0] + bb[..., 0] * k[:, :, t]
+        y = np.einsum("bhd,bhdv->bhv", q[:, :, t], S)
+        if norm:
+            den = np.einsum("bhd,bhd->bh", q[:, :, t], N)
+            y = y / np.maximum(np.abs(den), 1.0)[..., None]
+        ys[:, :, t] = y
+    return ys, S, N
+
+
+@given(
+    t_log=st.integers(3, 6),
+    chunk_log=st.integers(1, 4),
+    dk=st.sampled_from([4, 8]),
+    dv=st.sampled_from([4, 16]),
+    norm=st.booleans(),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_chunked_matches_naive(t_log, chunk_log, dk, dv, norm, seed):
+    t, c = 1 << t_log, 1 << min(chunk_log, t_log)
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((1, 2, t, dk)).astype(np.float32) * 0.3
+    k = rng.standard_normal((1, 2, t, dk)).astype(np.float32) * 0.3
+    v = rng.standard_normal((1, 2, t, dv)).astype(np.float32)
+    la = -np.abs(rng.standard_normal((1, 2, t)).astype(np.float32)) * 0.3
+    lb = -np.abs(rng.standard_normal((1, 2, t)).astype(np.float32)) * 0.5
+    y, s_fin, n_fin = chunked_linear_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(la),
+        jnp.array(lb), chunk_size=c, normalize=norm)
+    ys, S, N = _naive(q, k, v, la, lb, norm)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), S, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_continues_prefill_state():
+    """chunked(T) == chunked(T-1) + recurrent_step — the serve-path glue."""
+    rng = np.random.default_rng(0)
+    B, H, T, Dk, Dv = 1, 2, 17, 8, 8  # prefill 16 (2 chunks) + 1 decode
+    q = rng.standard_normal((B, H, T, Dk)).astype(np.float32) * 0.3
+    k = rng.standard_normal((B, H, T, Dk)).astype(np.float32) * 0.3
+    v = rng.standard_normal((B, H, T, Dv)).astype(np.float32)
+    la = -np.abs(rng.standard_normal((B, H, T))).astype(np.float32) * 0.3
+    lb = -np.abs(rng.standard_normal((B, H, T))).astype(np.float32) * 0.5
+
+    y_full, s_full, n_full = chunked_linear_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(la),
+        jnp.array(lb), chunk_size=8, normalize=True)
+    y_pre, s_pre, n_pre = chunked_linear_attention(
+        jnp.array(q[:, :, :T - 1]), jnp.array(k[:, :, :T - 1]),
+        jnp.array(v[:, :, :T - 1]), jnp.array(la[:, :, :T - 1]),
+        jnp.array(lb[:, :, :T - 1]), chunk_size=8, normalize=True)
+    y_t, s_t, n_t = recurrent_step(
+        jnp.array(q[:, :, -1]), jnp.array(k[:, :, -1]),
+        jnp.array(v[:, :, -1]), jnp.array(la[:, :, -1]),
+        jnp.array(lb[:, :, -1]), s_pre, n_pre, normalize=True)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, :, -1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,98 @@
+"""Network model (Fig. 8 calibration) + rack emulator (§7 methodology)."""
+
+import numpy as np
+import pytest
+
+from repro.core.coherence import TransitionRecord
+from repro.core.emulator import DisaggregatedRack, run_workload
+from repro.core.network_model import NetworkModel
+from repro.core.types import CoherenceActions, NetworkConstants
+
+
+def test_fig8_left_latency_calibration():
+    """Transition latencies must match the paper's Fig. 8 (left) shape:
+    ~9us without invalidation, ~18us for sequential M-transitions."""
+    net = NetworkModel()
+    # I->S / S->S: single RDMA fetch.
+    lb = net.latency(CoherenceActions(fetch_from_memory=True),
+                     TransitionRecord("I->S", False, False))
+    assert 8.0 <= lb.total_us <= 11.0
+    # S->M: invalidation parallel with fetch (~9us).
+    lb = net.latency(CoherenceActions(fetch_from_memory=True, invalidate=0b110),
+                     TransitionRecord("S->M", False, True, 2))
+    assert 8.0 <= lb.total_us <= 12.0
+    # M->M at another blade: sequential flush + fetch (~18us + TLB).
+    lb = net.latency(CoherenceActions(fetch_from_owner=1, invalidate=0b10),
+                     TransitionRecord("M->M", True, False, 1))
+    assert 17.0 <= lb.total_us <= 26.0
+    # local: sub-microsecond.
+    lb = net.latency(CoherenceActions(hit_local=True),
+                     TransitionRecord("M->M", False, False))
+    assert lb.total_us < 0.2
+
+
+def test_queueing_grows_with_invalidations():
+    net = NetworkModel()
+    lb1 = net.latency(CoherenceActions(fetch_from_owner=0, invalidate=0b1),
+                      TransitionRecord("M->M", True, False, 1))
+    for _ in range(50):
+        net.latency(CoherenceActions(fetch_from_owner=0, invalidate=0b1),
+                    TransitionRecord("M->M", True, False, 1))
+    lb2 = net.latency(CoherenceActions(fetch_from_owner=0, invalidate=0b1),
+                      TransitionRecord("M->M", True, False, 1))
+    assert lb2.queue_us > lb1.queue_us  # Fig. 8 right 'Inv. (queue)'
+
+
+@pytest.mark.parametrize("system", ["mind", "gam", "fastswap", "mind-pso"])
+def test_emulator_runs_all_systems(system):
+    nb = 1 if system == "fastswap" else 2
+    r = run_workload(system, "GC", num_compute_blades=nb,
+                     threads_per_blade=2, accesses_per_thread=500)
+    assert r.stats.accesses == nb * 2 * 500
+    assert r.runtime_us > 0
+    assert r.performance > 0
+
+
+def test_workload_shape_tf_vs_gc():
+    """TF is mostly-local; GC is contended — the §7.1 explanation."""
+    tf = run_workload("mind", "TF", 2, threads_per_blade=2,
+                      accesses_per_thread=1500)
+    gc = run_workload("mind", "GC", 2, threads_per_blade=2,
+                      accesses_per_thread=1500)
+    tf_local = tf.stats.local_hits / tf.stats.accesses
+    gc_local = gc.stats.local_hits / gc.stats.accesses
+    assert tf_local > gc_local
+    assert gc.stats.invalidations > tf.stats.invalidations
+
+
+def test_pso_helps_write_heavy_workloads():
+    """§7.1: PSO (async writes) outperforms TSO under write contention."""
+    tso = run_workload("mind", "M_A", 2, threads_per_blade=2,
+                       accesses_per_thread=1500)
+    pso = run_workload("mind-pso", "M_A", 2, threads_per_blade=2,
+                       accesses_per_thread=1500)
+    assert pso.performance > tso.performance
+
+
+def test_infinite_directory_reduces_false_invalidations():
+    small = run_workload("mind", "M_A", 2, threads_per_blade=2,
+                         accesses_per_thread=1500,
+                         max_directory_entries=64)
+    big = run_workload("mind-pso+", "M_A", 2, threads_per_blade=2,
+                       accesses_per_thread=1500)
+    assert big.stats.false_invalidated_pages <= small.stats.false_invalidated_pages
+
+
+def test_prepopulation_reduces_first_touch_fetches():
+    """§4.4: allocation pre-population means single-blade workloads mostly
+    hit locally on first touch."""
+    r = run_workload("mind", "TF", 1, threads_per_blade=2,
+                     accesses_per_thread=1000)
+    assert r.stats.local_hits / r.stats.accesses > 0.8
+
+
+def test_directory_timeline_recorded():
+    r = run_workload("mind", "GC", 2, threads_per_blade=2,
+                     accesses_per_thread=2000, epoch_us=2000.0)
+    assert len(r.directory_timeline) >= 1
+    assert all(x >= 0 for x in r.directory_timeline)

@@ -1,0 +1,99 @@
+"""Decoupled protection: grant/check/revoke, pow2 entries, coalescing."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.protection import ProtectionTable
+from repro.core.types import PAGE_SIZE, AccessType, Perm
+
+
+def test_grant_and_check():
+    t = ProtectionTable()
+    t.grant(1, 1 << 20, 64 * PAGE_SIZE, Perm.RW)
+    assert t.check(1, (1 << 20) + 5, AccessType.READ)
+    assert t.check(1, (1 << 20) + 5, AccessType.WRITE)
+    assert not t.check(2, (1 << 20) + 5, AccessType.READ)  # isolation
+    assert not t.check(1, (1 << 20) - 1, AccessType.READ)  # bounds
+
+
+def test_read_only_rejects_write():
+    t = ProtectionTable()
+    t.grant(1, 0x10000, PAGE_SIZE, Perm.READ)
+    assert t.check(1, 0x10000, AccessType.READ)
+    assert not t.check(1, 0x10000, AccessType.WRITE)
+
+
+def test_pow2_entry_bound():
+    t = ProtectionTable()
+    # Arbitrary (unaligned, odd-size) range: <= 2*ceil(log2 s) entries.
+    base, length = 0x12345000, 37 * PAGE_SIZE
+    added = t.grant(1, base, length, Perm.RW)
+    assert t.num_entries() <= 2 * math.ceil(math.log2(length))
+
+
+def test_coalescing_merges_buddies():
+    t = ProtectionTable()
+    t.grant(1, 0x100000, 4 * PAGE_SIZE, Perm.RW)
+    t.grant(1, 0x100000 + 4 * PAGE_SIZE, 4 * PAGE_SIZE, Perm.RW)
+    assert t.num_entries() == 1  # merged into one 8-page entry
+
+
+def test_revoke_full_and_partial():
+    t = ProtectionTable()
+    t.grant(1, 0x200000, 8 * PAGE_SIZE, Perm.RW)
+    t.revoke(1, 0x200000, 8 * PAGE_SIZE)
+    assert not t.check(1, 0x200000, AccessType.READ)
+    # partial revoke splits the covering entry
+    t.grant(1, 0x400000, 8 * PAGE_SIZE, Perm.RW)
+    t.revoke(1, 0x400000, 2 * PAGE_SIZE)
+    assert not t.check(1, 0x400000, AccessType.READ)
+    assert t.check(1, 0x400000 + 2 * PAGE_SIZE, AccessType.READ)
+
+
+def test_session_protection_domains():
+    """§4.2: per-session PDIDs prevent cross-session access."""
+    t = ProtectionTable()
+    t.grant(100, 0x300000, 4 * PAGE_SIZE, Perm.RW)  # session 100
+    t.grant(200, 0x304000, 4 * PAGE_SIZE, Perm.RW)  # session 200
+    assert t.check(100, 0x300000, AccessType.WRITE)
+    assert not t.check(200, 0x300000, AccessType.READ)
+    assert not t.check(100, 0x304000 + PAGE_SIZE * 3, AccessType.READ)
+
+
+@given(
+    grants=st.lists(
+        st.tuples(
+            st.integers(1, 3),  # pdid
+            st.integers(0, 63),  # page index
+            st.integers(1, 32),  # pages
+            st.sampled_from([Perm.READ, Perm.RW]),
+        ),
+        min_size=1, max_size=12,
+    ),
+    probes=st.lists(
+        st.tuples(st.integers(1, 3), st.integers(0, 100),
+                  st.sampled_from([AccessType.READ, AccessType.WRITE])),
+        min_size=1, max_size=30,
+    ),
+)
+@settings(max_examples=40, deadline=None)
+def test_check_matches_naive_model(grants, probes):
+    """Data-plane check == naive 'latest covering grant allows' model.
+
+    Later grants overwrite earlier ones for overlapping chunks, so the
+    naive model applies grants in order to a page-permission map."""
+    t = ProtectionTable()
+    pages: dict[tuple[int, int], Perm] = {}
+    base0 = 1 << 30
+    for pdid, pg, n, perm in grants:
+        t.grant(pdid, base0 + pg * PAGE_SIZE, n * PAGE_SIZE, perm)
+        for i in range(pg, pg + n):
+            pages[(pdid, i)] = perm
+    for pdid, pg, acc in probes:
+        got = t.check(pdid, base0 + pg * PAGE_SIZE + 7, acc)
+        perm = pages.get((pdid, pg))
+        need = Perm.WRITE if acc == AccessType.WRITE else Perm.READ
+        want = perm is not None and bool(perm & need)
+        assert got == want, (pdid, pg, acc, perm)
