@@ -27,3 +27,29 @@ def save_json(name: str, obj) -> Path:
     p = RESULTS / f"{name}.json"
     p.write_text(json.dumps(obj, indent=2))
     return p
+
+
+def engine_from_argv(default: str = "scalar") -> str:
+    """Shared ``--engine scalar|batched`` flag for the fig benchmarks."""
+    import argparse
+
+    p = argparse.ArgumentParser(add_help=False)
+    p.add_argument("--engine", choices=("scalar", "batched"), default=default)
+    args, _ = p.parse_known_args()
+    return args.engine
+
+
+def run_workload_with_engine(engine: str, system: str, workload: str, **kw):
+    """run_workload that degrades to the scalar engine when the batched
+    data plane refuses a (system, workload) combination (e.g. GAM has no
+    switch, or the trace needs cache/directory evictions)."""
+    from repro.core.emulator import run_workload
+    from repro.dataplane import UnsupportedByBatchedEngine
+
+    if engine == "batched":
+        try:
+            return run_workload(system, workload, engine="batched", **kw)
+        except UnsupportedByBatchedEngine as e:
+            print(f"# batched engine unavailable for {system}/{workload} "
+                  f"({e}); falling back to scalar")
+    return run_workload(system, workload, **kw)

@@ -8,20 +8,22 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, save_json
-from repro.core.emulator import run_workload
+from benchmarks.common import (emit, engine_from_argv, save_json,
+                               run_workload_with_engine)
 
 ACCESSES = 500
 
 
-def intra_blade(workloads=("TF", "GC"), threads=(1, 4, 10)):
+def intra_blade(workloads=("TF", "GC"), threads=(1, 4, 10),
+                engine="scalar"):
     rows = []
     for wl in workloads:
         base = None
         for th in threads:
             for system in ("mind", "gam", "fastswap"):
                 t0 = time.perf_counter()
-                r = run_workload(system, wl, num_compute_blades=1,
+                r = run_workload_with_engine(
+                    engine, system, wl, num_compute_blades=1,
                                  threads_per_blade=th,
                                  accesses_per_thread=ACCESSES)
                 wall = (time.perf_counter() - t0) * 1e6
@@ -36,14 +38,15 @@ def intra_blade(workloads=("TF", "GC"), threads=(1, 4, 10)):
 
 
 def inter_blade(workloads=("TF", "GC", "M_A", "M_C"), blades=(1, 2, 4, 8),
-                threads=4):
+                threads=4, engine="scalar"):
     rows = []
     for wl in workloads:
         base = None
         for nb in blades:
             for system in ("mind", "mind-pso", "mind-pso+", "gam"):
                 t0 = time.perf_counter()
-                r = run_workload(system, wl, num_compute_blades=nb,
+                r = run_workload_with_engine(
+                    engine, system, wl, num_compute_blades=nb,
                                  threads_per_blade=threads,
                                  accesses_per_thread=ACCESSES)
                 wall = (time.perf_counter() - t0) * 1e6
@@ -60,7 +63,9 @@ def inter_blade(workloads=("TF", "GC", "M_A", "M_C"), blades=(1, 2, 4, 8),
 
 
 def main() -> None:
-    rows = {"intra": intra_blade(), "inter": inter_blade()}
+    engine = engine_from_argv()
+    rows = {"engine": engine, "intra": intra_blade(engine=engine),
+            "inter": inter_blade(engine=engine)}
     save_json("fig6_scaling", rows)
 
 

@@ -5,16 +5,18 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, save_json
-from repro.core.emulator import run_workload
+from benchmarks.common import (emit, engine_from_argv, save_json,
+                               run_workload_with_engine)
 
 
 def main() -> None:
+    engine = engine_from_argv()
     rows = []
     for wl in ("TF", "GC", "M_A", "M_C"):
         for nb in (2, 4, 8):
             t0 = time.perf_counter()
-            r = run_workload("mind", wl, num_compute_blades=nb,
+            r = run_workload_with_engine(
+                engine, "mind", wl, num_compute_blades=nb,
                              threads_per_blade=4, accesses_per_thread=600)
             wall = (time.perf_counter() - t0) * 1e6
             n = max(1, r.stats.accesses)

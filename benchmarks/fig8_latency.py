@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, engine_from_argv, save_json
 from repro.core.cache import BladePageCache
 from repro.core.coherence import CoherenceEngine
 from repro.core.directory import CacheDirectory
@@ -55,14 +55,14 @@ def transition_latencies():
     return rows
 
 
-def throughput_grid():
+def throughput_grid(engine="scalar"):
     """Fig. 8 (center): memory throughput vs read ratio x sharing ratio."""
     rows = []
     for read_ratio in (0.0, 0.5, 1.0):
         for sharing in (0.0, 0.5, 1.0):
             t0 = time.perf_counter()
             rack = DisaggregatedRack("mind", num_compute_blades=8,
-                                     threads_per_blade=1)
+                                     threads_per_blade=1, engine=engine)
             tr = uniform_trace(8, read_ratio, sharing,
                                accesses_per_thread=400,
                                working_set_pages=40_000)
@@ -76,19 +76,19 @@ def throughput_grid():
     return rows
 
 
-def latency_breakdown():
+def latency_breakdown(engine="scalar"):
     """Fig. 8 (right): end-to-end latency components at sharing=1."""
     rows = []
     for read_ratio in (0.0, 0.5, 1.0):
         for nb in (2, 4, 8):
             rack = DisaggregatedRack("mind", num_compute_blades=nb,
-                                     threads_per_blade=1)
+                                     threads_per_blade=1, engine=engine)
             tr = uniform_trace(nb, read_ratio, 1.0, accesses_per_thread=400,
                                working_set_pages=40_000)
             r = rack.run(tr)
             n = max(1, r.stats.accesses)
             bd = {k: v / n for k, v in r.latency_breakdown_us.items()}
-            mean_us = r.runtime_us * nb / n
+            mean_us = r.mean_access_us  # busy thread-time per access
             rows.append({"read_ratio": read_ratio, "blades": nb,
                          "mean_us": mean_us, **bd})
             emit(f"fig8_right/R{read_ratio}/b{nb}", mean_us,
@@ -98,10 +98,12 @@ def latency_breakdown():
 
 
 def main() -> None:
+    engine = engine_from_argv()
     out = {
+        "engine": engine,
         "left": transition_latencies(),
-        "center": throughput_grid(),
-        "right": latency_breakdown(),
+        "center": throughput_grid(engine=engine),
+        "right": latency_breakdown(engine=engine),
     }
     save_json("fig8_latency", out)
 

@@ -19,6 +19,7 @@ MODULES = [
     "fig8_latency",  # Fig. 8  transition latency / throughput / breakdown
     "fig9_resources",  # Fig. 9  switch resources + fairness
     "fig10_splitting",  # Fig. 10 bounded splitting
+    "dataplane_bench",  # batched data-plane engine vs scalar emulator
     "kernel_bench",  # Pallas kernels microbench
     "serving_bench",  # MIND paged-KV serving integration
     "roofline",  # §Roofline collation from the dry-run
@@ -28,6 +29,10 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", choices=("scalar", "batched"),
+                    default="scalar",
+                    help="data-plane engine for fig6/7/8 (modules re-read "
+                         "it from argv via benchmarks.common)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0

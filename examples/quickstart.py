@@ -66,4 +66,23 @@ for i in range(3000):
         rep = cp.splitting.run_epoch()
         print(f"epoch {rep.epoch}: dir={rep.directory_entries} "
               f"splits={rep.splits} merges={rep.merges} t={rep.threshold:.1f}")
+
+# --- batched data-plane engine: the same replay, vectorized ---------------
+# One rack, one zipfian trace, both engines; the batched pipeline
+# (repro.dataplane) pushes whole batches through the Pallas switch
+# kernels and must agree with the scalar oracle exactly.
+from repro.core import traces as T
+from repro.core.emulator import DisaggregatedRack
+
+trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                     accesses_per_thread=250, store_mb=4)
+kw = dict(num_compute_blades=2, threads_per_blade=2, splitting_enabled=False)
+scalar = DisaggregatedRack(system="mind", engine="scalar", **kw).run(trace)
+batched = DisaggregatedRack(system="mind", engine="batched", **kw).run(trace)
+print(f"scalar  engine: {scalar.stats.local_hits} hits, "
+      f"{scalar.stats.invalidations} invalidations, "
+      f"runtime {scalar.runtime_us:.0f}us")
+print(f"batched engine: {batched.stats.local_hits} hits, "
+      f"{batched.stats.invalidations} invalidations, "
+      f"runtime {batched.runtime_us:.0f}us  (identical by construction)")
 print("done — see examples/train_lm.py and examples/serve_paged.py next")

@@ -53,12 +53,15 @@ class EmulationResult:
     epoch_reports: list = field(default_factory=list)
     latency_breakdown_us: dict[str, float] = field(default_factory=dict)
     transition_latencies: dict[str, list[float]] = field(default_factory=dict)
+    total_thread_us: float = 0.0  # sum of all per-thread clock time
+    engine: str = "scalar"  # which data-plane engine produced this result
 
     @property
     def mean_access_us(self) -> float:
-        return self.runtime_us * self.num_blades * self.threads_per_blade / max(
-            1, self.stats.accesses
-        )
+        # Mean latency is busy thread-time over accesses.  (runtime_us is
+        # the *max* thread clock; multiplying it by the thread count would
+        # overstate the mean whenever threads run concurrently.)
+        return self.total_thread_us / max(1, self.stats.accesses)
 
 
 class DisaggregatedRack:
@@ -79,9 +82,14 @@ class DisaggregatedRack:
         constants: NetworkConstants | None = None,
         downgrade_keeps_copy: bool = False,
         gam_sw_cores: int = 4,
+        engine: str = "scalar",
+        engine_options: dict | None = None,
     ):
         assert system in ("mind", "mind-pso", "mind-pso+", "gam", "fastswap")
+        assert engine in ("scalar", "batched")
         self.system = system
+        self.engine = engine
+        self.engine_options = dict(engine_options or {})
         self.nb = num_compute_blades
         self.tpb = threads_per_blade
         self.epoch_us = epoch_us
@@ -131,6 +139,20 @@ class DisaggregatedRack:
                     segs.append((shared + t * per, shared + (t + 1) * per, vma.base))
         return sorted(segs)
 
+    def _to_vaddr_batch(self, segs, arena_offs: np.ndarray) -> np.ndarray:
+        """Vectorized arena-offset -> vaddr mapping (batched data plane)."""
+        starts = np.array([s for s, _, _ in segs], np.int64)
+        ends = np.array([e for _, e, _ in segs], np.int64)
+        bases = np.array([b for _, _, b in segs], np.int64)
+        offs = np.asarray(arena_offs, np.int64)
+        idx = np.searchsorted(starts, offs, side="right") - 1
+        idx = np.clip(idx, 0, len(segs) - 1)
+        # Clamp offsets beyond the covered prefix into the containing /
+        # last segment, mirroring the scalar `_to_vaddr` fallback.
+        rel = np.minimum(offs - starts[idx], ends[idx] - starts[idx] - 1)
+        rel = np.maximum(rel, 0)
+        return bases[idx] + rel
+
     def _to_vaddr(self, segs, arena_off: int) -> int:
         # Binary search over segments.
         lo, hi = 0, len(segs) - 1
@@ -149,6 +171,15 @@ class DisaggregatedRack:
 
     # ------------------------------------------------------------------ #
     def run(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
+        if self.engine == "batched":
+            from repro.dataplane.engine import BatchedDataPlane
+
+            return BatchedDataPlane(self, **self.engine_options).run(
+                trace, max_accesses
+            )
+        return self._run_scalar(trace, max_accesses)
+
+    def _run_scalar(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
         segs = self._map_arena(trace)
         nthreads = self.nb * self.tpb
         clocks = np.zeros(nthreads)
@@ -195,6 +226,8 @@ class DisaggregatedRack:
             epoch_reports=list(self.cp.epoch_reports),
             latency_breakdown_us=breakdown,
             transition_latencies=trans_lat,
+            total_thread_us=float(clocks.sum()),
+            engine="scalar",
         )
 
     # ------------------------------------------------------------------ #

@@ -79,7 +79,14 @@ class InNetworkMMU:
     def export_dataplane_tables(self) -> dict[str, np.ndarray]:
         """Materialize every match-action table as dense arrays, the form
         the Pallas data-plane kernels consume (and that a P4 compiler
-        would install as table entries)."""
+        would install as table entries).
+
+        ``directory`` rows are (base, log2, state, sharers, owner) with the
+        smallest regions first (LPM order); ``directory_prepop`` is the
+        per-row pre-population flag (§4.4) aligned with those rows — the
+        batched data plane (repro.dataplane) needs it to decide local hits
+        for never-fetched pages of freshly allocated regions.
+        """
         trans = self.gas.export_tables()
         prot = self.protection.export_tables()
         dirs = self.engine.directory.export_tables()
@@ -87,6 +94,11 @@ class InNetworkMMU:
         out["translate"] = np.asarray(trans, dtype=np.int64).reshape(-1, 4)
         out["protect"] = np.asarray(prot, dtype=np.int64).reshape(-1, 4)
         out["directory"] = np.asarray(dirs, dtype=np.int64).reshape(-1, 5)
+        prepop = self.engine._prepopulated
+        out["directory_prepop"] = np.asarray(
+            [int((int(r[0]), int(r[1])) in prepop) for r in out["directory"]],
+            dtype=np.int64,
+        )
         return out
 
 

@@ -1,0 +1,51 @@
+"""Batched in-network data-plane engine: vectorized trace replay.
+
+MIND's switch ASIC handles address translation, protection and the
+cache-coherence directory *at line rate* on batches of in-flight packets
+(MIND §4-§6).  The scalar emulator (:mod:`repro.core.emulator`) replays
+every access through a per-access Python loop; this package is the
+batch-oriented realization of the same pipeline on top of the Pallas
+switch kernels:
+
+  1. **Table export** (:mod:`repro.dataplane.tables`): the MMU's
+     VMA/protection/directory state is materialized as dense device
+     arrays via ``InNetworkMMU.export_dataplane_tables`` — the software
+     analogue of a P4 compiler installing match-action entries.
+  2. **Pipeline** (:mod:`repro.dataplane.engine`): each access batch
+     flows through range-match LPM translation -> protection check (the
+     Pallas TCAM kernels of :mod:`repro.kernels.range_match`) -> MSI
+     directory transitions + blade-cache bookkeeping, compiled as one
+     fused XLA program.
+  3. **Conflict scheduler** (:mod:`repro.dataplane.scheduler`): regions
+     are partitioned across parallel *lanes*; packets for the same
+     region always share a lane and execute in serialized *waves*
+     (preserving the scalar emulator's packet-serialization semantics),
+     while independent regions stream through the other lanes
+     concurrently — exactly how the switch pipelines independent
+     packets but recirculates same-region ones.
+
+Per-thread logical clocks, latency breakdowns and coherence statistics
+are accumulated as ``jnp`` reductions and assembled into the same
+:class:`repro.core.emulator.EmulationResult` the scalar path produces,
+so the scalar engine remains the reference oracle (see
+tests/test_dataplane.py for the parity suite).
+
+The engine refuses (raises :class:`UnsupportedByBatchedEngine`) when the
+replay would hit behaviour that is inherently per-access-sequential —
+blade-cache capacity evictions or directory SRAM exhaustion — instead of
+silently diverging from the oracle.
+"""
+
+from repro.dataplane.engine import BatchedDataPlane, UnsupportedByBatchedEngine
+from repro.dataplane.scheduler import WaveSchedule, build_wave_schedule
+from repro.dataplane.tables import DataPlaneState, PageMap, RegionTable
+
+__all__ = [
+    "BatchedDataPlane",
+    "DataPlaneState",
+    "PageMap",
+    "RegionTable",
+    "UnsupportedByBatchedEngine",
+    "WaveSchedule",
+    "build_wave_schedule",
+]

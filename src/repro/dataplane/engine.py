@@ -1,0 +1,561 @@
+"""The batched data-plane engine: fused device replay of access batches.
+
+One :class:`BatchedDataPlane` wraps a :class:`~repro.core.emulator.DisaggregatedRack`
+and replays a trace through the same switch pipeline the scalar emulator
+models, but batch-at-a-time:
+
+  stage 1  protection check     — Pallas TCAM range-match kernel
+  stage 2  LPM translation      — Pallas TCAM range-match kernel
+  stage 3  MSI directory + blade-cache bookkeeping — one fused XLA
+           program per batch: ``lanes`` parallel lanes (vmapped), each a
+           compiled sequential loop over its *waves* (see
+           :mod:`repro.dataplane.scheduler`).
+
+Stage 3 carries the directory rows and the per-blade page caches as
+packed bitmap planes (32 pages/word over the dense page index of
+:class:`~repro.dataplane.tables.PageMap`); a region invalidation is a
+masked word-clear, false-invalidation accounting a popcount — the same
+trade the switch makes by materializing state instead of computing it.
+The loop emits per-access action descriptors (multicast masks + packed
+transition flags); per-thread logical clocks, the Fig. 8 latency
+breakdown and queueing delays are then reconstructed *exactly in trace
+order* by a vectorized host pass, so results are bit-compatible with the
+scalar oracle for any lane count (tests/test_dataplane.py).
+
+Known, deliberate approximation: Bounded-Splitting epochs fire at batch
+boundaries, not at the exact access whose clock crossed the epoch; the
+engine adapts its batch size to land near epoch boundaries, but traces
+whose emulated time spans many epochs can see slightly different
+split/merge timing than the scalar engine (coherence semantics are
+unaffected — only which accesses fall before/after a split differs).
+
+The engine *refuses* (raises :class:`UnsupportedByBatchedEngine`) when
+replay would need blade-cache capacity evictions or directory SRAM
+evictions — those are inherently per-access-sequential LRU behaviours;
+the scalar engine remains the oracle for them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import MSIState, next_pow2
+from repro.dataplane.scheduler import build_wave_schedule
+from repro.dataplane.tables import (
+    TableExportError,
+    UnsupportedByBatchedEngine,
+    build_dataplane_state,
+    build_region_table,
+)
+
+_KINDS = ("I->S", "I->M", "S->S", "S->M", "M->M", "M->S")
+
+
+# --------------------------------------------------------------------- #
+# Stage 3: the fused directory/cache wave loop.
+# --------------------------------------------------------------------- #
+def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
+                 dirrows, cmask, planes):
+    """Replay one lane's waves sequentially (vmapped across lanes).
+
+    Shapes: streams [L]; dirrows [S, 4] = (state, sharers, owner,
+    prepop); cmask [S, SPAN] region bit-masks; planes [2*NB, W] packed
+    presence (rows :NB) and dirty (rows NB:) bitmaps.
+
+    The loop carries only what is order-dependent — directory rows and
+    cache bitmaps — and emits per-access action words; latency (incl.
+    cross-lane queueing) is reconstructed on the host in trace order.
+    """
+    L = slot.shape[0]
+    NB = planes.shape[0] // 2
+    stats = jnp.zeros((7,), jnp.int32)
+    fac = jnp.zeros((dirrows.shape[0],), jnp.int32)
+    acnt = jnp.zeros((dirrows.shape[0],), jnp.int32)
+    flags = jnp.zeros((L,), jnp.int32)
+    invals = jnp.zeros((L,), jnp.int32)
+    blades_iota = jax.lax.broadcasted_iota(jnp.int32, (NB,), 0)
+    span = cmask.shape[1]
+
+    def body(i, c):
+        dirrows, planes, fac, acnt, stats, flags, invals = c
+        s = slot[i]
+        b = blade[i]
+        w = write[i]
+        v = valid[i]
+        w0i = w0[i]
+        rwi = rw[i]
+        biti = bit[i]
+        me = jnp.int32(1) << b
+
+        # ---- MAU stage 1: directory lookup ---------------------------
+        drow = jax.lax.dynamic_slice(dirrows, (s, 0), (1, 4))[0]
+        cst, csh, cow, cpp = drow[0], drow[1], drow[2], drow[3]
+        mask = jax.lax.dynamic_slice(cmask, (s, 0), (1, span))[0]
+        win = jax.lax.dynamic_slice(planes, (0, w0i), (2 * NB, span))
+        win_p = win[:NB]
+        win_d = win[NB:]
+        has = ((win_p[b, rwi] >> biti) & 1) == 1
+
+        # ---- MAU stage 2: transition decode (CoherenceEngine oracle) -
+        wr = w == 1
+        others = csh & ~me
+        is_i = cst == 0
+        is_s = cst == 1
+        is_m = cst == 2
+        is_ow = cow == b
+        in_sh = ((csh >> b) & 1) == 1
+        m_other = is_m & ~is_ow
+        hit = jnp.where(is_s, in_sh & has, is_m & is_ow & (has | (cpp == 1)))
+        inval = jnp.where(
+            is_s & wr, others,
+            jnp.where(m_other, jnp.int32(1) << jnp.maximum(cow, 0), 0))
+        fetch = ~hit  # fetch from home blade, or from the owner (m_other)
+        seq = m_other  # owner flush precedes the fetch (M->S / M->M)
+        par = is_s & wr & (others != 0)  # multicast overlaps the fetch
+        new_st = jnp.where(wr | (is_m & is_ow), jnp.int32(2), jnp.int32(1))
+        new_sh = jnp.where(is_m & is_ow, csh,
+                           jnp.where(is_s & ~wr, csh | me, me))
+        new_ow = jnp.where(is_m & is_ow, cow,
+                           jnp.where(wr, b, jnp.int32(-1)))
+        new_pp = jnp.where(m_other | (is_s & wr), jnp.int32(0), cpp)
+        kind = jnp.where(
+            is_i, jnp.where(wr, 1, 0),
+            jnp.where(is_s, jnp.where(wr, 3, 2),
+                      jnp.where(m_other & ~wr, 5, 4)))
+
+        # ---- egress multicast: invalidation + false-inval accounting -
+        sel = ((inval >> blades_iota) & 1) == 1  # [NB]
+        pcnt = jax.lax.population_count(win_p & mask[None, :]).sum(axis=-1)
+        dcnt = jax.lax.population_count(win_d & mask[None, :]).sum(axis=-1)
+        reqb = (win_p[:, rwi] >> biti) & 1
+        dropped = jnp.sum(jnp.where(sel, pcnt, 0))
+        flushed = jnp.sum(jnp.where(sel, dcnt, 0))
+        nfalse = jnp.sum(jnp.where(sel, pcnt - reqb, 0))
+        ninv = jnp.sum(sel.astype(jnp.int32))
+        win_p = jnp.where(sel[:, None], win_p & ~mask[None, :], win_p)
+        win_d = jnp.where(sel[:, None], win_d & ~mask[None, :], win_d)
+
+        # ---- requester-side data movement (insert / mark dirty) ------
+        old_dirty = (win_d[b, rwi] >> biti) & 1
+        new_dirty = jnp.where(has, old_dirty, 0) | w
+        one = jnp.int32(1) << biti
+        win_p = win_p.at[b, rwi].set(win_p[b, rwi] | one)
+        win_d = win_d.at[b, rwi].set((win_d[b, rwi] & ~one) | (new_dirty << biti))
+
+        # ---- write-back (fused recirculation) ------------------------
+        vi = v.astype(jnp.int32)
+        newwin = jnp.where(v, jnp.concatenate([win_p, win_d], axis=0), win)
+        planes = jax.lax.dynamic_update_slice(planes, newwin, (0, w0i))
+        newrow = jnp.where(
+            v, jnp.stack([new_st, new_sh, new_ow, new_pp]), drow)
+        dirrows = jax.lax.dynamic_update_slice(dirrows, newrow[None], (s, 0))
+        fac = fac.at[s].add(nfalse * vi)
+        acnt = acnt.at[s].add(vi)
+        stats = stats + vi * jnp.stack(
+            [jnp.int32(1), hit.astype(jnp.int32), (~hit).astype(jnp.int32),
+             ninv, dropped, flushed, nfalse])
+        word_out = (
+            hit.astype(jnp.int32)
+            | (fetch.astype(jnp.int32) << 1)
+            | (seq.astype(jnp.int32) << 2)
+            | (par.astype(jnp.int32) << 3)
+            | (kind << 4))
+        flags = flags.at[i].set(word_out)
+        invals = invals.at[i].set(inval)
+        return (dirrows, planes, fac, acnt, stats, flags, invals)
+
+    init = (dirrows, planes, fac, acnt, stats, flags, invals)
+    # Traced upper bound: streams are padded to a pow2 compile bucket,
+    # but only the first `nwaves` of them are real packets.
+    return jax.lax.fori_loop(0, jnp.minimum(nwaves, L), body, init)
+
+
+_replay = jax.jit(jax.vmap(
+    _lane_replay, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)))
+
+
+# --------------------------------------------------------------------- #
+class BatchedDataPlane:
+    """Batched replay engine bound to one DisaggregatedRack."""
+
+    def __init__(self, rack, chunk_size: int = 32768, lanes: int = 4):
+        if rack.system not in ("mind", "mind-pso", "mind-pso+"):
+            raise UnsupportedByBatchedEngine(
+                f"batched engine models the in-network MMU; {rack.system!r} "
+                "has no switch data plane — use engine='scalar'")
+        if rack.mmu.engine.downgrade_keeps_copy:
+            raise UnsupportedByBatchedEngine(
+                "downgrade_keeps_copy is a scalar-engine-only variant")
+        self.rack = rack
+        self.chunk_size = int(chunk_size)
+        self.lanes = int(lanes)
+        self._rt = None  # RegionTable cache, invalidated on installs/epochs
+
+    # ------------------------------------------------------------------ #
+    def run(self, trace, max_accesses: int | None = None):
+        from repro.core.emulator import EmulationResult
+
+        rack = self.rack
+        segs = rack._map_arena(trace)
+        n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
+        nthreads = rack.nb * rack.tpb
+        mmu = rack.mmu
+        knet = mmu.network.k
+        pso = rack.system in ("mind-pso", "mind-pso+")
+
+        threads = (trace.threads[:n].astype(np.int64) % nthreads).astype(np.int32)
+        blades = (threads // rack.tpb).astype(np.int32)
+        writes = trace.ops[:n].astype(np.int32)
+        vaddrs = (rack._to_vaddr_batch(segs, trace.offsets[:n])
+                  if n else np.zeros(0, np.int64))
+
+        state = build_dataplane_state(mmu, segs, rack.nb)
+        self.state = state
+        self._rt = state.regions
+        dense = state.page_map.dense_of(vaddrs)
+        self._check_cache_capacity(blades, dense, state)
+        self._check_directory_capacity(vaddrs)
+
+        # Pipeline stages 1+2 over the whole trace: the Pallas TCAM
+        # kernels (protection in parallel with translation, §3.2).
+        faults = np.zeros(n, bool)
+        if n:
+            from repro.kernels import ops as K
+            from repro.kernels.range_match import NO_MATCH
+
+            need = np.where(writes == 1, 2, 1).astype(np.int32)
+            allow = K.protect_check(
+                np.ones(n, np.int32), vaddrs, need, state.protect)
+            _, rows = K.translate_lookup(vaddrs, state.translate)
+            if (np.asarray(rows) == NO_MATCH).any():
+                raise UnsupportedByBatchedEngine(
+                    "trace touches vaddrs outside every blade range")
+            faults = ~np.asarray(allow)
+
+        stats = mmu.engine.stats
+        clocks = np.zeros(nthreads, np.float64)
+        breakdown = {"fetch": 0.0, "invalidation": 0.0, "tlb": 0.0,
+                     "queue": 0.0, "switch": 0.0, "local": 0.0,
+                     "software": 0.0}
+        trans_lat: dict[str, list[float]] = {}
+        dir_timeline: list[int] = []
+        # Queueing state lives in the shared NetworkModel so back-to-back
+        # replays on one rack see the same inflight counts as scalar.
+        inflight = np.array(
+            [mmu.network._inflight.get(b, 0) for b in range(rack.nb)],
+            np.int32)
+        next_epoch_at = rack.epoch_us
+        kvec = (knet.local_dram_ns / 1000.0, knet.rdma_fetch_us,
+                knet.invalidation_us, knet.tlb_shootdown_us,
+                knet.queue_service_us, knet.switch_pipeline_ns / 1000.0)
+
+        switch_us = kvec[5]
+        nfaults = int(faults.sum())
+        if nfaults:
+            stats.faults += nfaults
+            np.add.at(clocks, threads[faults], switch_us)
+            breakdown["switch"] += nfaults * switch_us
+
+        keep = ~faults
+        lo = 0
+        while lo < n:
+            hi = min(n, lo + self._next_chunk_size(clocks, next_epoch_at, lo))
+            m = keep[lo:hi]
+            if m.any():
+                self._process_chunk(
+                    vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
+                    writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
+                    breakdown, trans_lat, inflight)
+            if rack.splitting_enabled and nthreads:
+                while clocks.mean() >= next_epoch_at:
+                    rack.cp.maybe_run_epoch(now_us=next_epoch_at)
+                    dir_timeline.append(mmu.engine.directory.num_entries())
+                    mmu.network.begin_window()
+                    inflight[:] = 0
+                    next_epoch_at += rack.epoch_us
+                    self._rt = None  # splits/merges re-shape the table
+            lo = hi
+
+        mmu.network._inflight = {
+            b: int(v) for b, v in enumerate(inflight) if v
+        }
+        runtime = float(clocks.max()) if n else 0.0
+        trans_lat = {
+            k: np.concatenate(v).tolist() for k, v in trans_lat.items()
+        }
+        return EmulationResult(
+            system=rack.system,
+            workload=trace.name,
+            num_blades=rack.nb,
+            threads_per_blade=rack.tpb,
+            runtime_us=runtime,
+            performance=(n / runtime) if runtime > 0 else 0.0,
+            stats=stats,
+            directory_timeline=dir_timeline,
+            epoch_reports=list(rack.cp.epoch_reports),
+            latency_breakdown_us=breakdown,
+            transition_latencies=trans_lat,
+            total_thread_us=float(clocks.sum()),
+            engine="batched",
+        )
+
+    # ------------------------------------------------------------------ #
+    def _next_chunk_size(self, clocks, next_epoch_at, done: int) -> int:
+        """Adapt the batch so epoch boundaries land near batch ends,
+        keeping Bounded-Splitting timing close to the scalar engine."""
+        if not self.rack.splitting_enabled:
+            return self.chunk_size
+        if done == 0:
+            return min(self.chunk_size, 256)  # bootstrap the rate estimate
+        mean = clocks.mean()
+        rate = mean / done  # emulated us of mean-clock per access so far
+        if rate <= 0:
+            return self.chunk_size
+        est = int((next_epoch_at - mean) / rate) + 8
+        return max(64, min(self.chunk_size, est))
+
+    # ------------------------------------------------------------------ #
+    def _check_cache_capacity(self, blades, dense, state) -> None:
+        """No-eviction precondition: every blade's touched working set
+        must fit its page cache (LRU eviction order is inherently
+        per-access-sequential — scalar engine territory)."""
+        if len(dense) == 0:
+            return
+        if (dense < 0).any():
+            raise UnsupportedByBatchedEngine("trace touches unmapped vaddrs")
+        tp = max(1, state.page_map.total_pages)
+        key = blades.astype(np.int64) * tp + dense
+        uniq = np.unique(key)
+        per_blade = np.bincount(uniq // tp, minlength=self.rack.nb)
+        caps = [c.capacity_pages for c in self.rack.mmu.engine.caches.values()]
+        if (per_blade > np.array(caps)[: len(per_blade)]).any():
+            raise UnsupportedByBatchedEngine(
+                "working set exceeds a blade page cache; replay would need "
+                "LRU evictions — use engine='scalar'")
+
+    # ------------------------------------------------------------------ #
+    def _check_directory_capacity(self, vaddrs) -> None:
+        """Upfront gate, before anything is replayed: every region the
+        trace will create (at the initial granularity) must fit the
+        directory's SRAM slots.  Bounded Splitting can still fill the
+        directory mid-run; that rarer case raises from
+        _install_missing_regions instead."""
+        if len(vaddrs) == 0:
+            return
+        d = self.rack.mmu.engine.directory
+        rt = self._region_table()
+        rows = rt.lookup(vaddrs)
+        log2 = d.initial_region_log2
+        new = np.unique(vaddrs[rows < 0] >> log2)
+        if len(d.entries) + len(new) > d.resources.max_directory_entries:
+            raise UnsupportedByBatchedEngine(
+                "trace needs more directory entries than the switch SRAM "
+                "holds; capacity evictions are scalar-engine territory — "
+                "replay on a fresh rack with engine='scalar'")
+
+    # ------------------------------------------------------------------ #
+    def _region_table(self):
+        if self._rt is None:
+            mmu = self.rack.mmu
+            self._rt = build_region_table(
+                mmu.engine.directory, mmu.engine._prepopulated)
+        return self._rt
+
+    def _install_missing_regions(self, vaddrs) -> None:
+        """Directory-miss path (§6.3) for the whole batch at once."""
+        d = self.rack.mmu.engine.directory
+        rt = self._region_table()
+        rows = rt.lookup(vaddrs)
+        miss = rows < 0
+        if not miss.any():
+            return
+        log2 = d.initial_region_log2
+        windows = np.unique(vaddrs[miss] >> log2) << log2
+        free = d.resources.max_directory_entries - len(d.entries)
+        if len(windows) > free:
+            raise UnsupportedByBatchedEngine(
+                "directory SRAM exhausted mid-replay (Bounded Splitting "
+                "grew the directory); rack state is partially replayed — "
+                "re-run on a FRESH rack with engine='scalar'")
+        for base in windows.tolist():
+            if rt.overlaps(base, 1 << log2):
+                raise TableExportError(
+                    "new initial region overlaps a split region")
+            d._install(base, log2)
+        self._rt = None
+
+    # ------------------------------------------------------------------ #
+    def _process_chunk(self, vaddr, dense, blade, write, thread, kvec, pso,
+                       clocks, breakdown, trans_lat, inflight) -> None:
+        rack = self.rack
+        nb, nthreads = rack.nb, rack.nb * rack.tpb
+        d = rack.mmu.engine.directory
+        engine = rack.mmu.engine
+        state = self.state
+        pm = state.page_map
+
+        self._install_missing_regions(vaddr)
+        rt = self._region_table()
+        rows = rt.lookup(vaddr)
+        act_rows, slot_of_acc = np.unique(rows, return_inverse=True)
+        sa = len(act_rows)
+        slot_of_acc = slot_of_acc.astype(np.int32)
+
+        # Dense spans + clear-masks of the active regions.
+        d0, npages = pm.region_dense_span(
+            rt.bases[act_rows], (1 << rt.log2s[act_rows].astype(np.int64)))
+        bitoff = (d0 & 31).astype(np.int64)
+        w0 = (d0 >> 5).astype(np.int32)
+        span = max(1, next_pow2(int(((bitoff + npages + 31) // 32).max())))
+        j32 = np.arange(span, dtype=np.int64)[None, :] * 32
+        sbit = np.clip(bitoff[:, None] - j32, 0, 32).astype(np.uint64)
+        ebit = np.clip((bitoff + npages)[:, None] - j32, 0, 32).astype(np.uint64)
+        below = lambda k: (np.uint64(1) << k) - np.uint64(1)  # noqa: E731
+        cmask = ((below(ebit) ^ below(sbit)) & np.uint64(0xFFFFFFFF)).astype(
+            np.uint32).view(np.int32)
+
+        sched = build_wave_schedule(slot_of_acc, sa, lanes=self.lanes)
+        g = sched.lanes
+        s_dev = next_pow2(sched.slots_per_lane + 1)
+        l_dev = max(1, next_pow2(sched.num_waves))
+        dummy = s_dev - 1
+        words = state.planes.shape[1]
+
+        def lane_stream(per_acc, fill, dtype=np.int32):
+            out = np.full((g, l_dev), fill, dtype)
+            out[:, : sched.num_waves][sched.acc_valid] = per_acc[
+                sched.acc_index[sched.acc_valid]]
+            return out
+
+        acc_slot = lane_stream(sched.local_of_slot[slot_of_acc], dummy)
+        acc_blade = lane_stream(blade, 0)
+        acc_write = lane_stream(write, 0)
+        acc_w0 = lane_stream(w0[slot_of_acc], words)  # dummy -> pad words
+        acc_rw = lane_stream(((dense >> 5) - w0[slot_of_acc].astype(np.int64)
+                              ).astype(np.int32), 0)
+        acc_bit = lane_stream((dense & 31).astype(np.int32), 0)
+        acc_valid = np.zeros((g, l_dev), bool)
+        acc_valid[:, : sched.num_waves] = sched.acc_valid
+
+        # Per-lane directory rows + clear-masks + plane copies.
+        lane_idx = sched.lane_of_slot
+        local_idx = sched.local_of_slot
+        dir_pre = np.stack(
+            [rt.state[act_rows], rt.sharers[act_rows], rt.owner[act_rows],
+             rt.prepop[act_rows].astype(np.int32)], axis=1)
+        dirrows = np.zeros((g, s_dev, 4), np.int32)
+        dirrows[lane_idx, local_idx] = dir_pre
+        cm_dev = np.zeros((g, s_dev, span), np.int32)
+        cm_dev[lane_idx, local_idx] = cmask
+        planes = np.zeros((g, 2 * nb, words + span), np.int32)
+        planes[:, :, :words] = state.planes[None]
+
+        out = _replay(
+            jnp.asarray(np.int32(sched.num_waves)),
+            jnp.asarray(acc_slot), jnp.asarray(acc_blade),
+            jnp.asarray(acc_write), jnp.asarray(acc_valid),
+            jnp.asarray(acc_w0), jnp.asarray(acc_rw), jnp.asarray(acc_bit),
+            jnp.asarray(dirrows), jnp.asarray(cm_dev), jnp.asarray(planes))
+        (dir_o, planes_o, fac_o, acnt_o, stats_o, flags_o, invals_o) = map(
+            np.asarray, out)
+
+        # ---- merge lane planes by bit ownership ------------------------
+        own = np.zeros((g, words + span), np.int32)
+        for j in range(span):
+            np.bitwise_or.at(own, (lane_idx, w0 + j), cmask[:, j])
+        all_owned = np.bitwise_or.reduce(own, axis=0) if sa else np.zeros(
+            words + span, np.int32)
+        merged = state.planes & ~all_owned[:words]
+        for gg in range(g):
+            merged |= planes_o[gg, :, :words] & own[gg, :words]
+        state.planes = merged
+
+        # ---- write-back: directory entries + per-region epoch stats ---
+        dir_n = dir_o[lane_idx, local_idx]
+        fac_n = fac_o[lane_idx, local_idx]
+        acnt_n = acnt_o[lane_idx, local_idx]
+        changed = (dir_n != dir_pre).any(axis=1)
+        for j in np.flatnonzero(changed).tolist():
+            key = rt.keys[act_rows[j]]
+            e = d.entries[key]
+            e.state = MSIState(int(dir_n[j, 0]))
+            e.sharers = int(dir_n[j, 1])
+            e.owner = int(dir_n[j, 2])
+            if not dir_n[j, 3]:
+                engine._prepopulated.discard(key)
+        if rack.splitting_enabled:  # RegionStats only feed Bounded Splitting
+            for j in np.flatnonzero((fac_n > 0) | (acnt_n > 0)).tolist():
+                rst = d.stats.get(rt.keys[act_rows[j]])
+                if rst is not None:
+                    rst.false_invalidations += int(fac_n[j])
+                    rst.accesses += int(acnt_n[j])
+        rt.state[act_rows] = dir_n[:, 0]
+        rt.sharers[act_rows] = dir_n[:, 1]
+        rt.owner[act_rows] = dir_n[:, 2]
+        rt.prepop[act_rows] = dir_n[:, 3].astype(bool)
+
+        # ---- reductions: coherence stats ------------------------------
+        stats = engine.stats
+        tot = stats_o.sum(axis=0)
+        stats.accesses += int(tot[0])
+        stats.local_hits += int(tot[1])
+        stats.remote_fetches += int(tot[2])
+        stats.invalidations += int(tot[3])
+        stats.invalidated_pages += int(tot[4])
+        stats.flushed_pages += int(tot[5])
+        stats.false_invalidated_pages += int(tot[6])
+
+        # ---- exact-order latency reconstruction -----------------------
+        # The lanes emitted per-access action words; queueing delay
+        # depends on the original cross-lane interleaving, so rebuild it
+        # here (NetworkModel.latency, vectorized over the chunk).
+        bk = len(vaddr)
+        vmask = sched.acc_valid
+        pos = sched.acc_index[vmask]
+        flags = np.empty(bk, np.int32)
+        invals = np.empty(bk, np.int32)
+        flags[pos] = flags_o[:, : sched.num_waves][vmask]
+        invals[pos] = invals_o[:, : sched.num_waves][vmask]
+        hit = (flags & 1) == 1
+        fetch = ((flags >> 1) & 1) == 1
+        seq = ((flags >> 2) & 1) == 1
+        par = ((flags >> 3) & 1) == 1
+        kind = flags >> 4
+        has_inv = invals != 0
+        ind = ((invals[:, None] >> np.arange(nb)) & 1).astype(np.int64)
+        cum_excl = np.cumsum(ind, axis=0) - ind + inflight[None, :]
+        q = np.where(ind > 0, cum_excl, 0).max(axis=1).astype(np.float64)
+        k_local, k_rdma, k_inval, k_tlb, k_queue, k_switch = kvec
+        queue_f = np.where(has_inv, k_queue * q, 0.0)
+        tlb_f = np.where(has_inv, k_tlb, 0.0)
+        inv_f = np.where(has_inv, k_inval, 0.0)
+        fetch_f = np.where(fetch, k_rdma, 0.0)
+        pure_local = hit & ~has_inv
+        lb_fetch = np.where(
+            pure_local, k_local,
+            np.where(par, np.maximum(fetch_f, inv_f + queue_f), fetch_f))
+        lb_inv = np.where(seq, inv_f, 0.0)
+        lb_tlb = np.where(par | pure_local, 0.0, tlb_f)
+        lb_queue = np.where(par | pure_local, 0.0, queue_f)
+        lb_switch = np.where(pure_local, 0.0, k_switch)
+        total = lb_fetch + lb_inv + lb_tlb + lb_queue + lb_switch
+        if pso:
+            charged = np.where(
+                (write == 1) & ~hit, k_switch + lb_queue, total)
+        else:
+            charged = total
+        np.add.at(clocks, thread, charged)
+        breakdown["fetch"] += float(lb_fetch.sum())
+        breakdown["invalidation"] += float(lb_inv.sum())
+        breakdown["tlb"] += float(lb_tlb.sum())
+        breakdown["queue"] += float(lb_queue.sum())
+        breakdown["switch"] += float(lb_switch.sum())
+        inflight += ind.sum(axis=0).astype(np.int32)
+        # Per-kind latency samples: keep arrays per chunk, flattened to
+        # plain lists once at the end of run().
+        for code, kname in enumerate(_KINDS):
+            m = kind == code
+            if m.any():
+                trans_lat.setdefault(kname, []).append(total[m])

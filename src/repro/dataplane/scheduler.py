@@ -1,0 +1,110 @@
+"""Conflict scheduler: lanes of serialized waves for the batched pipeline.
+
+The switch processes independent packets at line rate but serializes
+packets that hit the same directory region (the recirculation path,
+§6.3).  The scheduler reproduces that: the active regions of a batch are
+partitioned across ``lanes`` parallel lanes, every access to a region is
+routed to that region's lane, and each lane replays its packets strictly
+in trace order.  Step ``i`` of the engine's compiled loop is therefore
+one *wave*: at most ``lanes`` packets, all guaranteed to touch distinct
+regions (conflict-free), while consecutive accesses to a shared region
+sit in consecutive waves of the same lane (serialized).
+
+Lane assignment is longest-processing-time greedy: regions sorted by
+batch access count, each placed on the least-loaded lane, which keeps
+the hottest (most serialized) regions on separate lanes and bounds the
+wave count by the hottest region's access count rather than the batch
+size.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class WaveSchedule:
+    """Device-ready wave schedule for one batch.
+
+    ``acc_index``/``acc_valid`` are ``[lanes, num_waves]``: wave ``i`` of
+    lane ``g`` replays original batch position ``acc_index[g, i]`` (``-1``
+    padding where ``acc_valid`` is False).  The engine gathers whatever
+    per-access streams it needs through ``acc_index``; per-region state
+    is addressed by the ``lane_of_slot``/``local_of_slot`` maps.
+    """
+
+    lanes: int
+    num_waves: int
+    slots_per_lane: int  # max lane-local slots (without dummy)
+    lane_of_slot: np.ndarray  # int32 [S_active]
+    local_of_slot: np.ndarray  # int32 [S_active]
+    lane_len: np.ndarray  # int32 [lanes]
+    acc_valid: np.ndarray  # bool  [lanes, num_waves]
+    acc_index: np.ndarray  # int64 [lanes, num_waves] original batch pos
+
+
+def build_wave_schedule(
+    slot_of_acc: np.ndarray,
+    num_slots: int,
+    lanes: int = 4,
+) -> WaveSchedule:
+    """Build the wave schedule for one batch.
+
+    Args:
+      slot_of_acc: int array [B] of active-slot ids (0..num_slots-1) in
+        trace order.
+      num_slots: number of active slots in the batch.
+      lanes: parallel lane count.
+    """
+    b = len(slot_of_acc)
+    counts = np.bincount(slot_of_acc, minlength=num_slots)
+    # Longest-processing-time greedy: hottest regions first, each to the
+    # least-loaded lane, so the wave count approaches the hottest
+    # region's serialization floor instead of the batch size.
+    order = np.argsort(-counts, kind="stable")
+    lane_of_slot = np.empty(num_slots, np.int32)
+    if num_slots:
+        load = [(0, g) for g in range(lanes)]
+        heapq.heapify(load)
+        for s in order.tolist():
+            cnt, g = heapq.heappop(load)
+            lane_of_slot[s] = g
+            heapq.heappush(load, (cnt + int(counts[s]), g))
+    # Lane-local dense slot ids.
+    by_lane = np.argsort(lane_of_slot, kind="stable")
+    lane_sorted = lane_of_slot[by_lane]
+    lane_starts = np.searchsorted(lane_sorted, np.arange(lanes))
+    local_of_slot = np.empty(num_slots, np.int32)
+    local_of_slot[by_lane] = (
+        np.arange(num_slots, dtype=np.int32) - lane_starts[lane_sorted]
+    )
+    slots_per_lane = (
+        int(np.bincount(lane_of_slot, minlength=lanes).max()) if num_slots else 0
+    )
+
+    lane_of_acc = lane_of_slot[slot_of_acc] if b else np.zeros(0, np.int32)
+    lane_len = np.bincount(lane_of_acc, minlength=lanes).astype(np.int32)
+    num_waves = int(lane_len.max()) if b else 0
+
+    shape = (lanes, num_waves)
+    acc_valid = np.zeros(shape, bool)
+    acc_index = np.full(shape, -1, np.int64)
+    for g in range(lanes):
+        idx = np.flatnonzero(lane_of_acc == g)  # ascending == trace order
+        k = len(idx)
+        acc_valid[g, :k] = True
+        acc_index[g, :k] = idx
+
+    return WaveSchedule(
+        lanes=lanes,
+        num_waves=num_waves,
+        slots_per_lane=slots_per_lane,
+        lane_of_slot=lane_of_slot,
+        local_of_slot=local_of_slot,
+        lane_len=lane_len,
+        acc_valid=acc_valid,
+        acc_index=acc_index,
+    )

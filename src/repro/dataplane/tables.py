@@ -1,0 +1,229 @@
+"""Dense-array views of the switch state for the batched data plane.
+
+Three exports bridge the Python control plane and the device pipeline:
+
+* :class:`RegionTable` — the cache directory as parallel arrays sorted by
+  region base (disjoint intervals, so a vectorized ``searchsorted``
+  replaces the scalar per-access buddy probe).
+* :class:`PageMap` — a dense page index over the VA ranges the trace can
+  touch, so per-blade cache presence/dirty state lives in flat numpy
+  planes instead of per-blade ``OrderedDict``s.
+* :class:`DataPlaneState` — the combination, plus the translate/protect
+  match-action tables from ``InNetworkMMU.export_dataplane_tables``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.types import PAGE_SHIFT, PAGE_SIZE
+
+
+class UnsupportedByBatchedEngine(RuntimeError):
+    """Replay needs behaviour only the scalar engine models."""
+
+
+class TableExportError(UnsupportedByBatchedEngine):
+    """The directory cannot be expressed as disjoint dense intervals."""
+
+
+@dataclass
+class RegionTable:
+    """The directory's regions as sorted parallel arrays.
+
+    Regions are disjoint, pow2-sized, naturally aligned intervals; rows
+    are sorted by ``bases`` so containment lookup is one searchsorted.
+    ``keys`` aligns rows with the directory's ``(base, log2)`` entry keys
+    for write-back after a batch.
+    """
+
+    bases: np.ndarray  # int64 [S]
+    ends: np.ndarray  # int64 [S]
+    log2s: np.ndarray  # int32 [S]
+    state: np.ndarray  # int32 [S]
+    sharers: np.ndarray  # int32 [S]
+    owner: np.ndarray  # int32 [S]
+    prepop: np.ndarray  # bool  [S]
+    keys: list = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.bases)
+
+    # ------------------------------------------------------------------ #
+    def lookup(self, vaddrs: np.ndarray) -> np.ndarray:
+        """Row index containing each vaddr, -1 when uncovered."""
+        v = np.asarray(vaddrs, np.int64)
+        idx = np.searchsorted(self.bases, v, side="right") - 1
+        clip = np.clip(idx, 0, max(0, len(self.bases) - 1))
+        covered = (idx >= 0) & (len(self) > 0)
+        covered &= v < self.ends[clip]
+        return np.where(covered, clip, -1)
+
+    def overlaps(self, base: int, size: int) -> bool:
+        """True when [base, base+size) intersects any existing region."""
+        if len(self) == 0:
+            return False
+        j = int(np.searchsorted(self.bases, base + size, side="left")) - 1
+        return j >= 0 and int(self.ends[j]) > base
+
+
+def build_region_table(directory, prepopulated: set) -> RegionTable:
+    """Materialize the directory as a :class:`RegionTable`.
+
+    Raises :class:`TableExportError` when entries overlap — that only
+    happens after capacity evictions punched holes the scalar engine then
+    re-covered at a coarser granularity, which the batched engine gates
+    out up front anyway.
+    """
+    entries = sorted(directory.entries.values(), key=lambda e: e.base)
+    bases = np.array([e.base for e in entries], np.int64)
+    ends = np.array([e.end for e in entries], np.int64)
+    if len(entries) > 1 and (ends[:-1] > bases[1:]).any():
+        raise TableExportError("directory contains overlapping regions")
+    return RegionTable(
+        bases=bases,
+        ends=ends,
+        log2s=np.array([e.size_log2 for e in entries], np.int32),
+        state=np.array([int(e.state) for e in entries], np.int32),
+        sharers=np.array([e.sharers for e in entries], np.int32),
+        owner=np.array([e.owner for e in entries], np.int32),
+        prepop=np.array(
+            [(e.base, e.size_log2) in prepopulated for e in entries], bool
+        ),
+        keys=[(e.base, e.size_log2) for e in entries],
+    )
+
+
+# --------------------------------------------------------------------- #
+@dataclass
+class PageMap:
+    """Dense page index over the VA segments a trace can touch.
+
+    Cache presence/dirty state is stored as ``[num_blades, total_pages]``
+    bool planes indexed by this map; region windows translate to runs of
+    dense indices (VA-adjacent segments get adjacent index ranges, so a
+    region spanning two abutting vmas stays contiguous).
+    """
+
+    va_starts: np.ndarray  # int64 [K], page-aligned, sorted
+    va_ends: np.ndarray  # int64 [K]
+    dense_base: np.ndarray  # int64 [K]
+    total_pages: int
+    # Maximal runs of VA-abutting segments (dense indices are contiguous
+    # within a run): the unit over which a region's pages are guaranteed
+    # a contiguous dense range.
+    run_starts: np.ndarray = None  # int64 [R]
+    run_ends: np.ndarray = None  # int64 [R]
+    run_dense: np.ndarray = None  # int64 [R]
+
+    def dense_of(self, vaddrs: np.ndarray) -> np.ndarray:
+        """Dense page index per vaddr; -1 for unmapped addresses."""
+        v = np.asarray(vaddrs, np.int64)
+        idx = np.searchsorted(self.va_starts, v, side="right") - 1
+        clip = np.clip(idx, 0, max(0, len(self.va_starts) - 1))
+        ok = (idx >= 0) & (self.total_pages > 0)
+        ok &= v < self.va_ends[clip]
+        dense = self.dense_base[clip] + ((v - self.va_starts[clip]) >> PAGE_SHIFT)
+        return np.where(ok, dense, -1)
+
+    def region_dense_span(
+        self, bases: np.ndarray, sizes: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Map region windows to dense page spans.
+
+        Returns ``(d0, npages)`` per region: the dense index of the first
+        mapped page and the mapped page count (clamped to the containing
+        run; window parts outside mapped VA hold no cacheable pages).
+        Raises :class:`TableExportError` when a region's mapped pages
+        straddle two runs — dense indices would not be contiguous and
+        the packed-bitmap data plane cannot express it.
+        """
+        bases = np.asarray(bases, np.int64)
+        ends = bases + np.asarray(sizes, np.int64)
+        r = np.searchsorted(self.run_starts, bases, side="right") - 1
+        rc = np.clip(r, 0, max(0, len(self.run_starts) - 1))
+        in_run = (r >= 0) & (bases < self.run_ends[rc])
+        # Window starts before any mapped VA: try the next run.
+        nxt = np.clip(rc + (~in_run), 0, max(0, len(self.run_starts) - 1))
+        rc = np.where(in_run, rc, nxt)
+        start = np.maximum(bases, self.run_starts[rc])
+        end = np.minimum(ends, self.run_ends[rc])
+        npages = np.maximum(end - start, 0) >> PAGE_SHIFT
+        # Straddle check: anything mapped beyond the chosen run?
+        nxt2 = np.clip(rc + 1, 0, max(0, len(self.run_starts) - 1))
+        spill = (rc + 1 < len(self.run_starts)) & (self.run_starts[nxt2] < ends)
+        spill &= npages > 0
+        if spill.any():
+            raise TableExportError(
+                "region window straddles discontiguous vma runs")
+        d0 = self.run_dense[rc] + ((start - self.run_starts[rc]) >> PAGE_SHIFT)
+        return np.where(npages > 0, d0, 0), npages
+
+
+def build_page_map(segs: list[tuple[int, int, int]]) -> PageMap:
+    """Build a :class:`PageMap` from the emulator's arena segments
+    ``(arena_start, arena_end, vaddr_base)`` (see ``_map_arena``)."""
+    spans = sorted((base, base + (e - s)) for s, e, base in segs)
+    starts, ends, dense = [], [], []
+    total = 0
+    for va_s, va_e in spans:
+        va_e = va_s + ((va_e - va_s + PAGE_SIZE - 1) // PAGE_SIZE) * PAGE_SIZE
+        if starts and va_s < ends[-1]:
+            raise TableExportError("overlapping vma segments")
+        starts.append(va_s)
+        ends.append(va_e)
+        dense.append(total)
+        total += (va_e - va_s) >> PAGE_SHIFT
+    run_s, run_e, run_d = [], [], []
+    for s, e, db in zip(starts, ends, dense):
+        if run_e and s == run_e[-1]:
+            run_e[-1] = e  # abuts the previous run: extend it
+        else:
+            run_s.append(s)
+            run_e.append(e)
+            run_d.append(db)
+    return PageMap(
+        va_starts=np.array(starts, np.int64),
+        va_ends=np.array(ends, np.int64),
+        dense_base=np.array(dense, np.int64),
+        total_pages=total,
+        run_starts=np.array(run_s, np.int64),
+        run_ends=np.array(run_e, np.int64),
+        run_dense=np.array(run_d, np.int64),
+    )
+
+
+# --------------------------------------------------------------------- #
+@dataclass
+class DataPlaneState:
+    """Everything the batched pipeline needs between device calls.
+
+    ``planes`` packs the per-blade page caches as bitmaps over the dense
+    page index, 32 pages/word: rows ``0..NB-1`` are presence, rows
+    ``NB..2*NB-1`` the dirty (writable-page) sets — the structure the
+    §6.1 invalidation flush walks.
+    """
+
+    regions: RegionTable
+    page_map: PageMap
+    translate: np.ndarray  # int64 [T, 4] match-action rows
+    protect: np.ndarray  # int64 [P, 4]
+    planes: np.ndarray  # int32 [2*NB, ceil(total_pages/32)]
+    num_blades: int
+
+
+def build_dataplane_state(mmu, segs, num_compute_blades: int) -> DataPlaneState:
+    tables = mmu.export_dataplane_tables()
+    page_map = build_page_map(segs)
+    regions = build_region_table(mmu.engine.directory, mmu.engine._prepopulated)
+    words = (page_map.total_pages + 31) // 32
+    return DataPlaneState(
+        regions=regions,
+        page_map=page_map,
+        translate=tables["translate"],
+        protect=tables["protect"],
+        planes=np.zeros((2 * num_compute_blades, words), np.int32),
+        num_blades=num_compute_blades,
+    )

@@ -1,6 +1,7 @@
 """Allocator: balanced placement, first-fit, fragmentation, fairness."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.address_space import GlobalAddressSpace
