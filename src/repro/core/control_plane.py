@@ -104,7 +104,10 @@ class ControlPlane:
 
     # ------------------------------------------------------------------ #
     # Failover (§3.2): serialize enough control-plane state to rebuild the
-    # data plane on a backup switch.
+    # data plane on a backup switch.  Directory entries are serialized
+    # coldest-first (LRU order) and re-installed in that order on
+    # restore, so the backup switch makes the *same* capacity-eviction
+    # decisions the failed switch would have.
     # ------------------------------------------------------------------ #
     def snapshot(self) -> str:
         d = self.mmu.engine.directory
@@ -131,7 +134,9 @@ class ControlPlane:
                     "sharers": e.sharers,
                     "owner": e.owner,
                 }
-                for e in d.entries.values()
+                # Coldest-first: restore re-installs in this order, which
+                # reproduces the recency ranking byte for byte.
+                for e in (d.entries[k] for k in d.lru_keys())
             ],
             "splitting": {"c": self.splitting.c, "epoch": self.splitting.epoch},
         }

@@ -6,14 +6,41 @@ slots on the switch; the control plane owns a free list and installs a
 match-action rule per entry (modelled by the (base, log2) keyed map here
 and materialized for the data-plane kernel via ``export_tables``).
 
-Region boundaries form a buddy system inside each M-sized partition of the
-VA space, so a lookup probes at most ``log2(M) - 12 + 1`` aligned bases —
-this mirrors the staged TCAM lookup and keeps the Python control plane
-fast.
+Invariants this module maintains (and the rest of the stack relies on):
+
+* **Buddy alignment** — every region is a power-of-two sized,
+  naturally-aligned interval (``base % size == 0``) no larger than
+  ``1 << max_region_log2`` (M) and no smaller than a page.  Region
+  boundaries form a buddy system inside each M-sized partition of the VA
+  space, so ``lookup`` probes at most ``log2(M) - 12 + 1`` aligned bases
+  — this mirrors the staged TCAM lookup and keeps the Python control
+  plane fast.  ``split``/``merge`` only ever move one buddy level at a
+  time, so the buddy structure is preserved by construction.
+* **Most-specific-wins lookup** — after capacity evictions punch holes
+  that ``get_or_create`` later re-covers at the initial granularity,
+  regions may *overlap* (a coarse re-install over surviving split
+  children).  ``lookup`` probes small levels first, so the smallest
+  (most specific) region containing an address always wins — the LPM
+  order ``export_tables`` materializes for the data plane.
+* **Eviction order** — capacity eviction drops the coldest Invalid
+  entry if one exists, else the coldest entry overall, where "coldest"
+  means least-recently installed-or-looked-up.  The order is tracked by
+  two intrusive recency lists (`OrderedDict`s), giving amortized-O(1)
+  eviction instead of the seed's O(n) scan; ``eviction="scan"``
+  preserves the seed implementation as a reference oracle for tests and
+  benchmarks, and the two are property-tested to pick identical victims
+  (tests/test_directory_coherence.py).
+* **Monotone states** — an entry's MSI state never returns to Invalid
+  under the same (base, log2) key: I -> {S, M} on first use, then only
+  S <-> M.  Re-installation after an eviction creates a *fresh* entry.
+  The lazy maybe-Invalid recency list exploits this: once an entry is
+  observed non-Invalid it is pruned and never reconsidered, which is
+  what keeps eviction amortized O(1).
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from repro.core.types import (
@@ -45,14 +72,24 @@ class CacheDirectory:
         max_region_log2: int = DEFAULT_MAX_REGION_LOG2,
         initial_region_log2: int = DEFAULT_INITIAL_REGION_LOG2,
         resources: SwitchResources | None = None,
+        eviction: str = "lru",
     ):
         assert PAGE_SHIFT <= initial_region_log2 <= max_region_log2
+        assert eviction in ("lru", "scan")
         self.max_region_log2 = max_region_log2
         self.initial_region_log2 = initial_region_log2
         self.resources = resources or SwitchResources()
+        self.eviction = eviction
         self.entries: dict[tuple[int, int], DirectoryEntry] = {}
         self.stats: dict[tuple[int, int], RegionStats] = {}
         self._clock = 0
+        # Intrusive recency lists (coldest first).  ``_lru`` holds every
+        # entry; ``_ilru`` holds the entries that were installed Invalid
+        # and have not yet been *observed* to leave I (lazy pruning —
+        # states are monotone away from I, so a pruned key never needs
+        # to come back).
+        self._lru: "OrderedDict[tuple[int, int], None]" = OrderedDict()
+        self._ilru: "OrderedDict[tuple[int, int], None]" = OrderedDict()
         # Telemetry for Fig. 9 (left) and §7.2.
         self.peak_entries = 0
         self.capacity_evictions = 0
@@ -62,16 +99,34 @@ class CacheDirectory:
         self.pending_evictions: list[DirectoryEntry] = []
 
     # ------------------------------------------------------------------ #
+    # Recency maintenance.
+    # ------------------------------------------------------------------ #
+    def touch_key(self, key: tuple[int, int]) -> None:
+        """Mark ``key`` most-recently-used (the data-plane lookup hit)."""
+        self._clock += 1
+        self.stats[key].last_touch = self._clock
+        self._lru.move_to_end(key)
+        if key in self._ilru:
+            self._ilru.move_to_end(key)
+
+    def _unlink(self, key: tuple[int, int]) -> None:
+        self._lru.pop(key, None)
+        self._ilru.pop(key, None)
+
+    def lru_keys(self) -> list[tuple[int, int]]:
+        """Entry keys coldest-first (the capacity-eviction scan order)."""
+        return list(self._lru)
+
+    # ------------------------------------------------------------------ #
     # Lookup.
     # ------------------------------------------------------------------ #
     def lookup(self, vaddr: int) -> DirectoryEntry | None:
-        """Find the (unique) region entry containing vaddr, if any."""
+        """Find the most-specific region entry containing vaddr, if any."""
         for log2 in range(PAGE_SHIFT, self.max_region_log2 + 1):
             key = (align_down(vaddr, 1 << log2), log2)
             e = self.entries.get(key)
             if e is not None:
-                self._clock += 1
-                self.stats[key].last_touch = self._clock
+                self.touch_key(key)
                 return e
         return None
 
@@ -88,29 +143,67 @@ class CacheDirectory:
     def _install(self, base: int, log2: int, state: MSIState = MSIState.I,
                  sharers: int = 0, owner: int = -1) -> DirectoryEntry:
         if len(self.entries) >= self.resources.max_directory_entries:
-            self._evict_for_capacity()
+            self.evict_for_capacity()
         e = DirectoryEntry(base=base, size_log2=log2, state=state,
                            sharers=sharers, owner=owner)
         key = (base, log2)
         self.entries[key] = e
         self._clock += 1
         self.stats[key] = RegionStats(last_touch=self._clock)
+        self._lru[key] = None
+        if state == MSIState.I:
+            self._ilru[key] = None
         self.peak_entries = max(self.peak_entries, len(self.entries))
         return e
 
-    def _evict_for_capacity(self) -> None:
+    # ------------------------------------------------------------------ #
+    # Capacity eviction (amortized O(1)).
+    # ------------------------------------------------------------------ #
+    def pick_victim(self, state_of=None) -> tuple[int, int]:
+        """Choose the eviction victim: coldest Invalid entry, else the
+        coldest entry overall.
+
+        ``state_of`` optionally overrides how a key's current MSI state
+        is read — the batched data plane passes a shadow view because
+        its device write-back lags the host walk.  Keys observed to have
+        left Invalid are pruned from the maybe-Invalid list (states are
+        monotone away from I, see the module docstring), which is what
+        makes the amortized cost O(1).
+        """
+        if self.eviction == "scan":
+            inval = [k for k, e in self.entries.items()
+                     if (state_of(k) if state_of else e.state) == MSIState.I]
+            pool = inval if inval else list(self.entries.keys())
+            return min(pool, key=lambda k: self.stats[k].last_touch)
+        get_state = state_of or (lambda k: self.entries[k].state)
+        while self._ilru:
+            k = next(iter(self._ilru))
+            if get_state(k) == MSIState.I:
+                return k
+            del self._ilru[k]  # left I; it can never return under this key
+        return next(iter(self._lru))
+
+    def evict_for_capacity(self, state_of=None,
+                           queue_pending: bool = True) -> DirectoryEntry:
         """SRAM slots exhausted: drop the coldest Invalid entry, else the
-        coldest entry overall (its eviction is surfaced to the engine via
-        ``pending_evictions`` so sharers get invalidated — the §7.2
-        'directory storage becomes the bottleneck' behaviour)."""
-        inval = [k for k, e in self.entries.items() if e.state == MSIState.I]
-        pool = inval if inval else list(self.entries.keys())
-        victim = min(pool, key=lambda k: self.stats[k].last_touch)
+        coldest entry overall.  When ``queue_pending`` the victim (if it
+        still had sharers) is surfaced via ``pending_evictions`` so the
+        coherence engine multicasts invalidations — the §7.2 'directory
+        storage becomes the bottleneck' behaviour; the batched engine
+        passes ``queue_pending=False`` and drains the invalidation as an
+        in-stream eviction packet instead."""
+        victim = self.pick_victim(state_of)
         e = self.entries.pop(victim)
         self.stats.pop(victim)
+        self._unlink(victim)
         self.capacity_evictions += 1
-        if e.state != MSIState.I:
+        if queue_pending and e.state != MSIState.I:
             self.pending_evictions.append(e)
+        return e
+
+    # Backwards-compatible internal name used by the install path.
+    def _evict_for_capacity(self) -> None:
+        self.evict_for_capacity()
 
     # ------------------------------------------------------------------ #
     # Split / merge primitives used by Bounded Splitting (§5).
@@ -126,6 +219,7 @@ class CacheDirectory:
         assert key in self.entries
         del self.entries[key]
         self.stats.pop(key)
+        self._unlink(key)
         child_log2 = entry.size_log2 - 1
         left = self._install(entry.base, child_log2, entry.state, entry.sharers, entry.owner)
         right = self._install(
@@ -150,6 +244,7 @@ class CacheDirectory:
             key = (e.base, e.size_log2)
             del self.entries[key]
             self.stats.pop(key)
+            self._unlink(key)
         return self._install(lo, left.size_log2 + 1, merged_state, sharers, owner)
 
     @staticmethod
@@ -208,6 +303,7 @@ class CacheDirectory:
         key = (entry.base, entry.size_log2)
         self.entries.pop(key, None)
         self.stats.pop(key, None)
+        self._unlink(key)
 
     def entries_in(self, base: int, length: int) -> list[DirectoryEntry]:
         return [
@@ -218,8 +314,17 @@ class CacheDirectory:
 
     def export_tables(self):
         """(base, log2, state, sharers, owner) rows, smallest regions first
-        (LPM: most-specific wins) — consumed by kernels/directory_msi.py."""
-        rows = sorted(
-            self.entries.values(), key=lambda e: (e.size_log2, e.base)
-        )
+        (LPM: most-specific wins) — consumed by kernels/directory_msi.py.
+        ``export_recency`` returns the matching per-row recency ranks."""
+        rows = self._export_rows()
         return [(e.base, e.size_log2, int(e.state), e.sharers, e.owner) for e in rows]
+
+    def export_recency(self) -> list[int]:
+        """Per-row LRU rank (0 = coldest) aligned with ``export_tables``
+        row order, so the data plane can carry the recency state the
+        capacity-eviction policy is keyed on."""
+        rank = {k: i for i, k in enumerate(self._lru)}
+        return [rank[(e.base, e.size_log2)] for e in self._export_rows()]
+
+    def _export_rows(self) -> list[DirectoryEntry]:
+        return sorted(self.entries.values(), key=lambda e: (e.size_log2, e.base))

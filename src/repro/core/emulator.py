@@ -84,6 +84,7 @@ class DisaggregatedRack:
         gam_sw_cores: int = 4,
         engine: str = "scalar",
         engine_options: dict | None = None,
+        directory_eviction: str = "lru",
     ):
         assert system in ("mind", "mind-pso", "mind-pso+", "gam", "fastswap")
         assert engine in ("scalar", "batched")
@@ -105,6 +106,7 @@ class DisaggregatedRack:
             initial_region_log2=initial_region_log2,
             max_region_log2=max_region_log2,
             downgrade_keeps_copy=downgrade_keeps_copy,
+            directory_eviction=directory_eviction,
         )
         if constants is not None:
             self.mmu.network = NetworkModel(constants)

@@ -86,6 +86,9 @@ class InNetworkMMU:
         per-row pre-population flag (§4.4) aligned with those rows — the
         batched data plane (repro.dataplane) needs it to decide local hits
         for never-fetched pages of freshly allocated regions.
+        ``directory_recency`` is the per-row LRU rank (0 = coldest),
+        aligned the same way — the state the capacity-eviction policy is
+        keyed on, so the data plane can replay evictions on-device.
         """
         trans = self.gas.export_tables()
         prot = self.protection.export_tables()
@@ -99,6 +102,9 @@ class InNetworkMMU:
             [int((int(r[0]), int(r[1])) in prepop) for r in out["directory"]],
             dtype=np.int64,
         )
+        out["directory_recency"] = np.asarray(
+            self.engine.directory.export_recency(), dtype=np.int64
+        ).reshape(-1)
         return out
 
 
@@ -110,6 +116,7 @@ def make_mmu(
     initial_region_log2: int = 14,
     max_region_log2: int = 21,
     downgrade_keeps_copy: bool = False,
+    directory_eviction: str = "lru",
 ):
     """Convenience factory wiring a full single-switch MIND instance."""
     from repro.core.allocator import MemoryAllocator
@@ -126,6 +133,7 @@ def make_mmu(
         max_region_log2=max_region_log2,
         initial_region_log2=initial_region_log2,
         resources=SwitchResources(max_directory_entries=max_directory_entries),
+        eviction=directory_eviction,
     )
     caches = {
         b: BladePageCache(b, cache_bytes_per_blade) for b in range(num_compute_blades)

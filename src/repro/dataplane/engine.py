@@ -22,29 +22,51 @@ breakdown and queueing delays are then reconstructed *exactly in trace
 order* by a vectorized host pass, so results are bit-compatible with the
 scalar oracle for any lane count (tests/test_dataplane.py).
 
-Known, deliberate approximation: Bounded-Splitting epochs fire at batch
-boundaries, not at the exact access whose clock crossed the epoch; the
-engine adapts its batch size to land near epoch boundaries, but traces
-whose emulated time spans many epochs can see slightly different
-split/merge timing than the scalar engine (coherence semantics are
-unaffected — only which accesses fall before/after a split differs).
+**Directory capacity evictions** (§7.2 'directory storage becomes the
+bottleneck') replay on-device: a host-side *residency pre-pass* walks a
+capacity-pressure chunk sequentially against the directory's O(1) LRU
+recency structure — the only inherently serial part of eviction, and
+orders of magnitude cheaper than full scalar emulation — and injects an
+*eviction packet* into the stream at each point where an install must
+reclaim an SRAM slot.  The device kernel executes the packet in the
+victim region's lane (serialized against that region's own accesses):
+it multicasts the invalidation to the victim's sharers/owner, counts
+every dropped page as a false invalidation, and resets the row to
+Invalid so a later re-install of the same window replays as a fresh
+directory miss.  Victims whose *cache-plane* footprint overlaps another
+active region (a coarse re-install over surviving split children) are
+pinned to that region's lane by the scheduler's overlap grouping.
 
-The engine *refuses* (raises :class:`UnsupportedByBatchedEngine`) when
-replay would need blade-cache capacity evictions or directory SRAM
-evictions — those are inherently per-access-sequential LRU behaviours;
-the scalar engine remains the oracle for them.
+**Epoch boundaries are exact.**  Bounded-Splitting epochs fire when the
+mean thread clock crosses ``epoch_us`` — a per-access condition in the
+scalar loop.  The engine bounds each chunk so the crossing access is
+always the *last* access of its chunk (a worst-case per-access latency
+bound shrinks the chunk as the boundary approaches, down to single-access
+chunks at the boundary itself), so split/merge passes run at exactly the
+access the scalar oracle runs them at.  The one remaining timing
+approximation: traces containing protection faults charge all fault
+latencies up front (as the seed engine did), so epoch timing on faulting
+traces can lead the scalar engine's.
+
+The engine still *refuses* (raises :class:`UnsupportedByBatchedEngine`)
+when replay would need blade-page-cache capacity evictions — per-page
+LRU at the blades couples lanes through cache-hit outcomes and remains
+scalar-engine territory — or when the modelled system has no switch
+data plane (gam/fastswap).
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import MSIState, next_pow2
+from repro.core.types import PAGE_SHIFT, MSIState, next_pow2
 from repro.dataplane.scheduler import build_wave_schedule
 from repro.dataplane.tables import (
-    TableExportError,
+    RegionTable,
     UnsupportedByBatchedEngine,
     build_dataplane_state,
     build_region_table,
@@ -56,7 +78,7 @@ _KINDS = ("I->S", "I->M", "S->S", "S->M", "M->M", "M->S")
 # --------------------------------------------------------------------- #
 # Stage 3: the fused directory/cache wave loop.
 # --------------------------------------------------------------------- #
-def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
+def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
                  dirrows, cmask, planes):
     """Replay one lane's waves sequentially (vmapped across lanes).
 
@@ -67,6 +89,12 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
     The loop carries only what is order-dependent — directory rows and
     cache bitmaps — and emits per-access action words; latency (incl.
     cross-lane queueing) is reconstructed on the host in trace order.
+    A stream entry with ``evict`` set is a capacity-eviction packet for
+    its slot instead of an access: it multicasts the invalidation to the
+    row's sharers/owner, clears the region's cache-plane bits, resets
+    the row to Invalid and zeroes the region's epoch counters — the
+    device realization of ``CacheDirectory.evict_for_capacity`` plus
+    ``CoherenceEngine._drain_capacity_evictions``.
     """
     L = slot.shape[0]
     NB = planes.shape[0] // 2
@@ -84,6 +112,7 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
         b = blade[i]
         w = write[i]
         v = valid[i]
+        ev = evict[i] == 1
         w0i = w0[i]
         rwi = rw[i]
         biti = bit[i]
@@ -125,11 +154,19 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
             jnp.where(is_s, jnp.where(wr, 3, 2),
                       jnp.where(m_other & ~wr, 5, 4)))
 
+        # ---- capacity-eviction packets: multicast to sharers/owner ---
+        ev_targets = jnp.where(
+            is_s, csh,
+            jnp.where(cow >= 0, jnp.int32(1) << jnp.maximum(cow, 0),
+                      jnp.int32(0)))
+        inval = jnp.where(ev, ev_targets, inval)
+
         # ---- egress multicast: invalidation + false-inval accounting -
         sel = ((inval >> blades_iota) & 1) == 1  # [NB]
         pcnt = jax.lax.population_count(win_p & mask[None, :]).sum(axis=-1)
         dcnt = jax.lax.population_count(win_d & mask[None, :]).sum(axis=-1)
-        reqb = (win_p[:, rwi] >> biti) & 1
+        # An eviction has no requesting page: every dropped page is false.
+        reqb = jnp.where(ev, 0, (win_p[:, rwi] >> biti) & 1)
         dropped = jnp.sum(jnp.where(sel, pcnt, 0))
         flushed = jnp.sum(jnp.where(sel, dcnt, 0))
         nfalse = jnp.sum(jnp.where(sel, pcnt - reqb, 0))
@@ -137,24 +174,33 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
         win_p = jnp.where(sel[:, None], win_p & ~mask[None, :], win_p)
         win_d = jnp.where(sel[:, None], win_d & ~mask[None, :], win_d)
 
-        # ---- requester-side data movement (insert / mark dirty) ------
+        # ---- requester-side data movement (accesses only) ------------
         old_dirty = (win_d[b, rwi] >> biti) & 1
         new_dirty = jnp.where(has, old_dirty, 0) | w
         one = jnp.int32(1) << biti
-        win_p = win_p.at[b, rwi].set(win_p[b, rwi] | one)
-        win_d = win_d.at[b, rwi].set((win_d[b, rwi] & ~one) | (new_dirty << biti))
+        ins_p = win_p[b, rwi] | one
+        ins_d = (win_d[b, rwi] & ~one) | (new_dirty << biti)
+        win_p = win_p.at[b, rwi].set(jnp.where(ev, win_p[b, rwi], ins_p))
+        win_d = win_d.at[b, rwi].set(jnp.where(ev, win_d[b, rwi], ins_d))
 
         # ---- write-back (fused recirculation) ------------------------
         vi = v.astype(jnp.int32)
+        acci = jnp.where(ev, 0, vi)  # eviction packets are not accesses
         newwin = jnp.where(v, jnp.concatenate([win_p, win_d], axis=0), win)
         planes = jax.lax.dynamic_update_slice(planes, newwin, (0, w0i))
-        newrow = jnp.where(
-            v, jnp.stack([new_st, new_sh, new_ow, new_pp]), drow)
+        freed = jnp.stack([jnp.int32(0), jnp.int32(0), jnp.int32(-1),
+                           jnp.int32(0)])
+        newrow = jnp.where(ev, freed,
+                           jnp.stack([new_st, new_sh, new_ow, new_pp]))
+        newrow = jnp.where(v, newrow, drow)
         dirrows = jax.lax.dynamic_update_slice(dirrows, newrow[None], (s, 0))
-        fac = fac.at[s].add(nfalse * vi)
-        acnt = acnt.at[s].add(vi)
+        # A re-install after eviction starts with fresh epoch counters.
+        evi = ev & v
+        fac = fac.at[s].set(jnp.where(evi, 0, fac[s] + nfalse * acci))
+        acnt = acnt.at[s].set(jnp.where(evi, 0, acnt[s] + acci))
         stats = stats + vi * jnp.stack(
-            [jnp.int32(1), hit.astype(jnp.int32), (~hit).astype(jnp.int32),
+            [acci, hit.astype(jnp.int32) * acci,
+             (~hit).astype(jnp.int32) * acci,
              ninv, dropped, flushed, nfalse])
         word_out = (
             hit.astype(jnp.int32)
@@ -163,7 +209,7 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
             | (par.astype(jnp.int32) << 3)
             | (kind << 4))
         flags = flags.at[i].set(word_out)
-        invals = invals.at[i].set(inval)
+        invals = invals.at[i].set(jnp.where(ev, 0, inval))
         return (dirrows, planes, fac, acnt, stats, flags, invals)
 
     init = (dirrows, planes, fac, acnt, stats, flags, invals)
@@ -173,7 +219,11 @@ def _lane_replay(nwaves, slot, blade, write, valid, w0, rw, bit,
 
 
 _replay = jax.jit(jax.vmap(
-    _lane_replay, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)))
+    _lane_replay, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)))
+
+
+def _popcount32(a: np.ndarray) -> int:
+    return int(np.unpackbits(np.ascontiguousarray(a).view(np.uint8)).sum())
 
 
 # --------------------------------------------------------------------- #
@@ -191,7 +241,13 @@ class BatchedDataPlane:
         self.rack = rack
         self.chunk_size = int(chunk_size)
         self.lanes = int(lanes)
-        self._rt = None  # RegionTable cache, invalidated on installs/epochs
+        self._rt = None  # sorted RegionTable cache (fast-path lookup)
+        # Persistent device table for the capacity-pressure regime:
+        # unsorted rows (live + evicted) keyed by `keys`/`_row_of`, kept
+        # in sync by the per-chunk write-back so consecutive pressure
+        # chunks skip the O(S) table rebuild.
+        self._dtab = None
+        self._row_of: dict = {}
 
     # ------------------------------------------------------------------ #
     def run(self, trace, max_accesses: int | None = None):
@@ -214,9 +270,14 @@ class BatchedDataPlane:
         state = build_dataplane_state(mmu, segs, rack.nb)
         self.state = state
         self._rt = state.regions
+        self._dtab = None  # mapping may have grown since a prior run
+        self._row_of = {}
         dense = state.page_map.dense_of(vaddrs)
         self._check_cache_capacity(blades, dense, state)
-        self._check_directory_capacity(vaddrs)
+        if n:
+            # Mirror the scalar engine's first-access drain of evictions
+            # queued during mmap-time prepopulation (§4.4 overflow).
+            self._drain_pending_host(state)
 
         # Pipeline stages 1+2 over the whole trace: the Pallas TCAM
         # kernels (protection in parallel with translation, §3.2).
@@ -261,21 +322,26 @@ class BatchedDataPlane:
         keep = ~faults
         lo = 0
         while lo < n:
-            hi = min(n, lo + self._next_chunk_size(clocks, next_epoch_at, lo))
+            hi = min(n, lo + self._next_chunk_size(clocks, next_epoch_at,
+                                                   inflight))
             m = keep[lo:hi]
             if m.any():
                 self._process_chunk(
                     vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
                     writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
                     breakdown, trans_lat, inflight)
-            if rack.splitting_enabled and nthreads:
-                while clocks.mean() >= next_epoch_at:
-                    rack.cp.maybe_run_epoch(now_us=next_epoch_at)
-                    dir_timeline.append(mmu.engine.directory.num_entries())
-                    mmu.network.begin_window()
-                    inflight[:] = 0
-                    next_epoch_at += rack.epoch_us
-                    self._rt = None  # splits/merges re-shape the table
+            # One boundary per check, like the scalar per-access `if` —
+            # the exact chunk sizing guarantees the crossing access ended
+            # this chunk, so this fires exactly where scalar fires.
+            if (rack.splitting_enabled and nthreads
+                    and clocks.mean() >= next_epoch_at):
+                rack.cp.maybe_run_epoch(now_us=next_epoch_at)
+                dir_timeline.append(mmu.engine.directory.num_entries())
+                mmu.network.begin_window()
+                inflight[:] = 0
+                next_epoch_at += rack.epoch_us
+                self._rt = None  # splits/merges re-shape the table
+                self._dtab = None
             lo = hi
 
         mmu.network._inflight = {
@@ -302,25 +368,49 @@ class BatchedDataPlane:
         )
 
     # ------------------------------------------------------------------ #
-    def _next_chunk_size(self, clocks, next_epoch_at, done: int) -> int:
-        """Adapt the batch so epoch boundaries land near batch ends,
-        keeping Bounded-Splitting timing close to the scalar engine."""
+    def _next_chunk_size(self, clocks, next_epoch_at, inflight) -> int:
+        """Largest batch guaranteed not to cross the next epoch boundary
+        before its final access.
+
+        The mean thread clock advances by ``charged / nthreads`` per
+        access, and one access can charge at most ``switch + rdma +
+        invalidation + tlb + queue_service * (inflight + position)`` us.
+        Solving ``(k-1) * bound(k) < gap * nthreads`` for the batch size
+        ``k`` guarantees the crossing access is the batch's last one, so
+        Bounded-Splitting epochs fire at exactly the access the scalar
+        oracle fires them at (single-access batches right at the
+        boundary)."""
         if not self.rack.splitting_enabled:
             return self.chunk_size
-        if done == 0:
-            return min(self.chunk_size, 256)  # bootstrap the rate estimate
-        mean = clocks.mean()
-        rate = mean / done  # emulated us of mean-clock per access so far
-        if rate <= 0:
+        nthreads = len(clocks)
+        if nthreads == 0:
             return self.chunk_size
-        est = int((next_epoch_at - mean) / rate) + 8
-        return max(64, min(self.chunk_size, est))
+        gap = (next_epoch_at - clocks.mean()) * nthreads
+        if gap <= 0:
+            return 1
+        k = self.rack.mmu.network.k
+        c1 = (k.switch_pipeline_ns / 1000.0 + k.rdma_fetch_us
+              + k.invalidation_us + k.tlb_shootdown_us)
+        kq = k.queue_service_us
+        q0 = float(inflight.max()) if len(inflight) else 0.0
+        a = kq
+        b = c1 + kq * q0
+        if a <= 0:
+            est = int(gap / max(b, 1e-9)) + 1
+        else:
+            disc = (b - a) ** 2 + 4.0 * a * (b + gap)
+            est = int((-(b - a) + math.sqrt(disc)) / (2.0 * a))
+        while est > 1 and (est - 1) * (b + a * est) >= gap:
+            est -= 1
+        return max(1, min(self.chunk_size, est))
 
     # ------------------------------------------------------------------ #
     def _check_cache_capacity(self, blades, dense, state) -> None:
-        """No-eviction precondition: every blade's touched working set
-        must fit its page cache (LRU eviction order is inherently
-        per-access-sequential — scalar engine territory)."""
+        """No-eviction precondition for the *blade page caches*: every
+        blade's touched working set must fit its cache.  Page-level LRU
+        eviction changes cache-hit outcomes across regions, which would
+        couple lanes — still scalar-engine territory (directory SRAM
+        evictions, by contrast, replay on-device; see module docstring)."""
         if len(dense) == 0:
             return
         if (dense < 0).any():
@@ -336,55 +426,197 @@ class BatchedDataPlane:
                 "LRU evictions — use engine='scalar'")
 
     # ------------------------------------------------------------------ #
-    def _check_directory_capacity(self, vaddrs) -> None:
-        """Upfront gate, before anything is replayed: every region the
-        trace will create (at the initial granularity) must fit the
-        directory's SRAM slots.  Bounded Splitting can still fill the
-        directory mid-run; that rarer case raises from
-        _install_missing_regions instead."""
-        if len(vaddrs) == 0:
+    def _drain_pending_host(self, state) -> None:
+        """Mirror ``CoherenceEngine._drain_capacity_evictions`` for
+        evictions queued before replay began (prepopulation overflowed
+        the directory at mmap time): multicast the invalidation against
+        the bitmap planes and clear the pre-population marks.  The
+        planes are freshly built (all zero) here, so the per-page work
+        only runs in the general nonzero case."""
+        eng = self.rack.mmu.engine
+        d = eng.directory
+        stats = eng.stats
+        pm = state.page_map
+        nb = state.num_blades
+        pend, d.pending_evictions = d.pending_evictions, []
+        if not pend:
             return
-        d = self.rack.mmu.engine.directory
-        rt = self._region_table()
-        rows = rt.lookup(vaddrs)
-        log2 = d.initial_region_log2
-        new = np.unique(vaddrs[rows < 0] >> log2)
-        if len(d.entries) + len(new) > d.resources.max_directory_entries:
-            raise UnsupportedByBatchedEngine(
-                "trace needs more directory entries than the switch SRAM "
-                "holds; capacity evictions are scalar-engine territory — "
-                "replay on a fresh rack with engine='scalar'")
+        planes_live = bool(state.planes.any())
+        for e in pend:
+            targets = e.sharer_list() if e.state == MSIState.S else [e.owner]
+            targets = [t for t in targets if 0 <= t < nb]
+            if planes_live and targets:
+                d0, npg = pm.region_dense_span(
+                    np.array([e.base], np.int64), np.array([e.size], np.int64))
+                p0, p1 = int(d0[0]), int(d0[0] + npg[0])
+                w0, w1 = p0 >> 5, ((p1 + 31) >> 5 if p1 > p0 else p0 >> 5)
+                j = np.arange(w0, w1, dtype=np.int64) * 32
+                lo = np.clip(p0 - j, 0, 32).astype(np.uint64)
+                hi = np.clip(p1 - j, 0, 32).astype(np.uint64)
+                below = lambda x: (np.uint64(1) << x) - np.uint64(1)  # noqa: E731
+                mask = ((below(hi) ^ below(lo)) & np.uint64(0xFFFFFFFF)).astype(
+                    np.uint32).view(np.int32)
+                for t in targets:
+                    pres = _popcount32(state.planes[t, w0:w1] & mask)
+                    dirt = _popcount32(state.planes[nb + t, w0:w1] & mask)
+                    state.planes[t, w0:w1] &= ~mask
+                    state.planes[nb + t, w0:w1] &= ~mask
+                    stats.invalidated_pages += pres
+                    stats.flushed_pages += dirt
+                    stats.false_invalidated_pages += pres
+            stats.invalidations += len(targets)
+            eng._prepopulated.discard((e.base, e.size_log2))
 
     # ------------------------------------------------------------------ #
-    def _region_table(self):
+    def _region_table(self) -> RegionTable:
         if self._rt is None:
             mmu = self.rack.mmu
             self._rt = build_region_table(
                 mmu.engine.directory, mmu.engine._prepopulated)
         return self._rt
 
-    def _install_missing_regions(self, vaddrs) -> None:
-        """Directory-miss path (§6.3) for the whole batch at once."""
+    def _install_missing_regions(self, window_bases: np.ndarray) -> None:
+        """Directory-miss path (§6.3) for a pressure-free batch: install
+        every missing initial-granularity window up front.  Only legal
+        when the caller verified the SRAM slot headroom covers all of
+        them — under pressure the residency pre-pass interleaves installs
+        with evictions instead."""
         d = self.rack.mmu.engine.directory
-        rt = self._region_table()
-        rows = rt.lookup(vaddrs)
-        miss = rows < 0
-        if not miss.any():
-            return
-        log2 = d.initial_region_log2
-        windows = np.unique(vaddrs[miss] >> log2) << log2
-        free = d.resources.max_directory_entries - len(d.entries)
-        if len(windows) > free:
-            raise UnsupportedByBatchedEngine(
-                "directory SRAM exhausted mid-replay (Bounded Splitting "
-                "grew the directory); rack state is partially replayed — "
-                "re-run on a FRESH rack with engine='scalar'")
-        for base in windows.tolist():
-            if rt.overlaps(base, 1 << log2):
-                raise TableExportError(
-                    "new initial region overlaps a split region")
-            d._install(base, log2)
+        lg = d.initial_region_log2
+        assert (len(d.entries) + len(window_bases)
+                <= d.resources.max_directory_entries)
+        for base in window_bases.tolist():
+            d._install(base, lg)
         self._rt = None
+
+    # ------------------------------------------------------------------ #
+    def _residency_prepass(self, vaddr, blade, write):
+        """Sequential directory-residency walk for a capacity-pressure
+        chunk.
+
+        Replays only the residency-relevant slice of the scalar access
+        path — most-specific lookup (recency touch), install-on-miss and
+        LRU victim choice — against the live directory, mutating entry
+        *membership* and recency exactly as the scalar engine would.
+        MSI fields are not written here (the device owns them); instead
+        a shadow (state, owner) per touched key tracks the
+        cache-independent state evolution the victim policy's
+        Invalid-first preference needs.  Returns the per-access region
+        keys, the keys installed during the walk, and the eviction
+        events as (access-position, victim key) pairs for packet
+        injection."""
+        d = self.rack.mmu.engine.directory
+        entries = d.entries
+        maxe = d.resources.max_directory_entries
+        lg0 = d.initial_region_log2
+        levels = [(lg, ~((1 << lg) - 1))
+                  for lg in range(PAGE_SHIFT, d.max_region_log2 + 1)]
+        mask0 = ~((1 << lg0) - 1)
+        shadow: dict = {}
+
+        def shadow_state(k):
+            s = shadow.get(k)
+            return s[0] if s is not None else int(entries[k].state)
+
+        keys_acc: list = []
+        installed: list = []
+        evict_events: list = []
+        va_l = vaddr.tolist()
+        b_l = blade.tolist()
+        w_l = write.tolist()
+        for i in range(len(va_l)):
+            va = va_l[i]
+            key = None
+            for lg, m in levels:
+                k = (va & m, lg)
+                if k in entries:
+                    key = k
+                    break
+            if key is None:
+                if len(entries) >= maxe:
+                    victim = d.evict_for_capacity(
+                        state_of=shadow_state, queue_pending=False)
+                    vk = (victim.base, victim.size_log2)
+                    evict_events.append((i, vk))
+                    shadow.pop(vk, None)
+                key = (va & mask0, lg0)
+                d._install(key[0], lg0)
+                installed.append(key)
+                st, ow = 0, -1
+            else:
+                d.touch_key(key)
+                s = shadow.get(key)
+                if s is None:
+                    e = entries[key]
+                    st, ow = int(e.state), e.owner
+                else:
+                    st, ow = s
+            b = b_l[i]
+            if w_l[i]:
+                st, ow = 2, b
+            elif st == 0:
+                st = 1
+            elif st == 2 and ow != b:
+                st, ow = 1, -1
+            shadow[key] = (st, ow)
+            keys_acc.append(key)
+        return keys_acc, installed, evict_events
+
+    def _device_table(self) -> RegionTable:
+        """Unsorted device rows for the capacity-pressure regime.
+
+        One row per key live at any point since the table was (re)built —
+        evicted keys keep their row (reset to Invalid by the eviction
+        packet), so a later re-install of the same window reuses it.
+        The per-chunk write-back keeps row values synced with the host
+        entries, letting consecutive pressure chunks skip the O(S)
+        rebuild; epochs and fast-path chunks invalidate the cache.
+        Table ``lookup`` is never used — the pre-pass resolves accesses
+        to keys against the live directory."""
+        if self._dtab is None:
+            eng = self.rack.mmu.engine
+            entries = eng.directory.entries
+            prepop = eng._prepopulated
+            keys = list(entries.keys())
+            n = len(keys)
+            bases = np.fromiter((k[0] for k in keys), np.int64, n)
+            log2s = np.fromiter((k[1] for k in keys), np.int64, n).astype(np.int32)
+            vals = np.fromiter(
+                ((int(e.state), e.sharers, e.owner) for e in entries.values()),
+                np.dtype((np.int64, 3)), n) if n else np.zeros((0, 3), np.int64)
+            self._dtab = RegionTable(
+                bases=bases,
+                ends=bases + (np.int64(1) << log2s.astype(np.int64)),
+                log2s=log2s,
+                state=vals[:, 0].astype(np.int32),
+                sharers=vals[:, 1].astype(np.int32),
+                owner=vals[:, 2].astype(np.int32),
+                prepop=np.fromiter((k in prepop for k in keys), bool, n),
+                keys=keys)
+            self._row_of = {k: i for i, k in enumerate(keys)}
+        return self._dtab
+
+    def _extend_device_table(self, installed) -> None:
+        """Append fresh Invalid rows for keys installed by the pre-pass
+        (re-installed keys already have a row and reuse it)."""
+        rt = self._dtab
+        fresh = [k for k in installed if k not in self._row_of]
+        if not fresh:
+            return
+        n0 = len(rt.keys)
+        for i, k in enumerate(fresh):
+            self._row_of[k] = n0 + i
+        nb_ = np.fromiter((k[0] for k in fresh), np.int64, len(fresh))
+        nl = np.fromiter((k[1] for k in fresh), np.int64, len(fresh)).astype(np.int32)
+        rt.bases = np.concatenate([rt.bases, nb_])
+        rt.ends = np.concatenate([rt.ends, nb_ + (np.int64(1) << nl.astype(np.int64))])
+        rt.log2s = np.concatenate([rt.log2s, nl])
+        z = np.zeros(len(fresh), np.int32)
+        rt.state = np.concatenate([rt.state, z])
+        rt.sharers = np.concatenate([rt.sharers, z])
+        rt.owner = np.concatenate([rt.owner, z - 1])
+        rt.prepop = np.concatenate([rt.prepop, np.zeros(len(fresh), bool)])
+        rt.keys = rt.keys + fresh
 
     # ------------------------------------------------------------------ #
     def _process_chunk(self, vaddr, dense, blade, write, thread, kvec, pso,
@@ -395,13 +627,63 @@ class BatchedDataPlane:
         engine = rack.mmu.engine
         state = self.state
         pm = state.page_map
+        bk = len(vaddr)
+        maxe = d.resources.max_directory_entries
 
-        self._install_missing_regions(vaddr)
-        rt = self._region_table()
-        rows = rt.lookup(vaddr)
-        act_rows, slot_of_acc = np.unique(rows, return_inverse=True)
+        # ---- residency: installs and capacity evictions ----------------
+        lg0 = d.initial_region_log2
+        evict_events: list = []
+        # Upper bound: even if every window the chunk touches were a
+        # miss, would the directory still fit?  If so the chunk cannot
+        # evict and the vectorized (conflict-free) path applies.
+        pressure = (len(d.entries) + len(np.unique(vaddr >> lg0)) > maxe)
+        if not pressure:
+            self._dtab = None  # fast-path write-back bypasses it
+            rt = self._region_table()
+            rows = rt.lookup(vaddr)
+            if (rows < 0).any():
+                self._install_missing_regions(
+                    np.unique(vaddr[rows < 0] >> lg0) << lg0)
+                rt = self._region_table()
+                rows = rt.lookup(vaddr)
+            # End-of-chunk recency: touched regions ordered by their
+            # last access (conflict-free, so vectorized instead of the
+            # sequential walk the pressure path needs).
+            rev = rows[::-1]
+            uniq, idx = np.unique(rev, return_index=True)
+            last_pos = len(rows) - 1 - idx
+            for j in uniq[np.argsort(last_pos)].tolist():
+                d.touch_key(rt.keys[j])
+        else:
+            rt = self._device_table()  # before the walk mutates entries
+            keys_acc, installed, evict_events = (
+                self._residency_prepass(vaddr, blade, write))
+            self._extend_device_table(installed)
+            row_of = self._row_of
+            rows = np.fromiter((row_of[k] for k in keys_acc), np.int64, bk)
+            self._rt = None
+
+        # ---- packet stream: accesses + injected eviction packets -------
+        if evict_events:
+            pos = np.array([p for p, _ in evict_events], np.int64)
+            vrow = np.array([row_of[k] for _, k in evict_events], np.int64)
+            pkt_rows = np.insert(rows, pos, vrow)
+            pkt_blade = np.insert(blade, pos, 0).astype(np.int32)
+            pkt_write = np.insert(write, pos, 0).astype(np.int32)
+            pkt_dense = np.insert(dense, pos, 0)
+            pkt_evict = np.insert(np.zeros(bk, np.int32), pos, 1)
+            pkt_orig = np.insert(np.arange(bk, dtype=np.int64), pos, -1)
+        else:
+            pkt_rows = rows
+            pkt_blade = blade
+            pkt_write = write
+            pkt_dense = dense
+            pkt_evict = np.zeros(bk, np.int32)
+            pkt_orig = np.arange(bk, dtype=np.int64)
+
+        act_rows, slot_of_pkt = np.unique(pkt_rows, return_inverse=True)
         sa = len(act_rows)
-        slot_of_acc = slot_of_acc.astype(np.int32)
+        slot_of_pkt = slot_of_pkt.astype(np.int32)
 
         # Dense spans + clear-masks of the active regions.
         d0, npages = pm.region_dense_span(
@@ -416,26 +698,47 @@ class BatchedDataPlane:
         cmask = ((below(ebit) ^ below(sbit)) & np.uint64(0xFFFFFFFF)).astype(
             np.uint32).view(np.int32)
 
-        sched = build_wave_schedule(slot_of_acc, sa, lanes=self.lanes)
+        # Overlapping active regions (coarse re-installs over surviving
+        # split children) share cache-plane bits: pin each overlap
+        # component to one lane so their packets serialize.
+        group_of_slot = None
+        if sa > 1:
+            ab = rt.bases[act_rows]
+            ae = ab + (np.int64(1) << rt.log2s[act_rows].astype(np.int64))
+            order = np.argsort(ab, kind="stable")
+            run_end = np.maximum.accumulate(ae[order])
+            new_comp = np.ones(sa, bool)
+            new_comp[1:] = ab[order][1:] >= run_end[:-1]
+            comp = np.cumsum(new_comp) - 1
+            if comp[-1] + 1 < sa:
+                group_of_slot = np.empty(sa, np.int64)
+                group_of_slot[order] = comp
+
+        sched = build_wave_schedule(slot_of_pkt, sa, lanes=self.lanes,
+                                    group_of_slot=group_of_slot)
         g = sched.lanes
         s_dev = next_pow2(sched.slots_per_lane + 1)
         l_dev = max(1, next_pow2(sched.num_waves))
         dummy = s_dev - 1
         words = state.planes.shape[1]
 
-        def lane_stream(per_acc, fill, dtype=np.int32):
+        def lane_stream(per_pkt, fill, dtype=np.int32):
             out = np.full((g, l_dev), fill, dtype)
-            out[:, : sched.num_waves][sched.acc_valid] = per_acc[
+            out[:, : sched.num_waves][sched.acc_valid] = per_pkt[
                 sched.acc_index[sched.acc_valid]]
             return out
 
-        acc_slot = lane_stream(sched.local_of_slot[slot_of_acc], dummy)
-        acc_blade = lane_stream(blade, 0)
-        acc_write = lane_stream(write, 0)
-        acc_w0 = lane_stream(w0[slot_of_acc], words)  # dummy -> pad words
-        acc_rw = lane_stream(((dense >> 5) - w0[slot_of_acc].astype(np.int64)
-                              ).astype(np.int32), 0)
-        acc_bit = lane_stream((dense & 31).astype(np.int32), 0)
+        acc_slot = lane_stream(sched.local_of_slot[slot_of_pkt], dummy)
+        acc_blade = lane_stream(pkt_blade, 0)
+        acc_write = lane_stream(pkt_write, 0)
+        acc_evict = lane_stream(pkt_evict, 0)
+        acc_w0 = lane_stream(w0[slot_of_pkt], words)  # dummy -> pad words
+        rw_val = np.where(
+            pkt_evict == 1, 0,
+            (pkt_dense >> 5) - w0[slot_of_pkt].astype(np.int64)).astype(np.int32)
+        bit_val = np.where(pkt_evict == 1, 0, pkt_dense & 31).astype(np.int32)
+        acc_rw = lane_stream(rw_val, 0)
+        acc_bit = lane_stream(bit_val, 0)
         acc_valid = np.zeros((g, l_dev), bool)
         acc_valid[:, : sched.num_waves] = sched.acc_valid
 
@@ -456,6 +759,7 @@ class BatchedDataPlane:
             jnp.asarray(np.int32(sched.num_waves)),
             jnp.asarray(acc_slot), jnp.asarray(acc_blade),
             jnp.asarray(acc_write), jnp.asarray(acc_valid),
+            jnp.asarray(acc_evict),
             jnp.asarray(acc_w0), jnp.asarray(acc_rw), jnp.asarray(acc_bit),
             jnp.asarray(dirrows), jnp.asarray(cm_dev), jnp.asarray(planes))
         (dir_o, planes_o, fac_o, acnt_o, stats_o, flags_o, invals_o) = map(
@@ -476,13 +780,21 @@ class BatchedDataPlane:
         dir_n = dir_o[lane_idx, local_idx]
         fac_n = fac_o[lane_idx, local_idx]
         acnt_n = acnt_o[lane_idx, local_idx]
-        changed = (dir_n != dir_pre).any(axis=1)
-        for j in np.flatnonzero(changed).tolist():
+        # Under capacity pressure an entry can be evicted and re-installed
+        # within the chunk: its host object is then a *fresh* Invalid
+        # entry even when the device row ends where it started, so every
+        # active row must be written back, not just value-changed ones.
+        if pressure:
+            touched = range(sa)
+        else:
+            touched = np.flatnonzero((dir_n != dir_pre).any(axis=1)).tolist()
+        for j in touched:
             key = rt.keys[act_rows[j]]
-            e = d.entries[key]
-            e.state = MSIState(int(dir_n[j, 0]))
-            e.sharers = int(dir_n[j, 1])
-            e.owner = int(dir_n[j, 2])
+            e = d.entries.get(key)
+            if e is not None:
+                e.state = MSIState(int(dir_n[j, 0]))
+                e.sharers = int(dir_n[j, 1])
+                e.owner = int(dir_n[j, 2])
             if not dir_n[j, 3]:
                 engine._prepopulated.discard(key)
         if rack.splitting_enabled:  # RegionStats only feed Bounded Splitting
@@ -511,13 +823,18 @@ class BatchedDataPlane:
         # The lanes emitted per-access action words; queueing delay
         # depends on the original cross-lane interleaving, so rebuild it
         # here (NetworkModel.latency, vectorized over the chunk).
-        bk = len(vaddr)
+        # Eviction packets charge no latency (the scalar drain is free)
+        # and are filtered back out of the stream first.
+        npkt = len(pkt_rows)
         vmask = sched.acc_valid
-        pos = sched.acc_index[vmask]
-        flags = np.empty(bk, np.int32)
-        invals = np.empty(bk, np.int32)
-        flags[pos] = flags_o[:, : sched.num_waves][vmask]
-        invals[pos] = invals_o[:, : sched.num_waves][vmask]
+        posm = sched.acc_index[vmask]
+        flags_all = np.empty(npkt, np.int32)
+        invals_all = np.empty(npkt, np.int32)
+        flags_all[posm] = flags_o[:, : sched.num_waves][vmask]
+        invals_all[posm] = invals_o[:, : sched.num_waves][vmask]
+        is_acc = pkt_orig >= 0
+        flags = flags_all[is_acc]
+        invals = invals_all[is_acc]
         hit = (flags & 1) == 1
         fetch = ((flags >> 1) & 1) == 1
         seq = ((flags >> 2) & 1) == 1

@@ -50,6 +50,7 @@ def build_wave_schedule(
     slot_of_acc: np.ndarray,
     num_slots: int,
     lanes: int = 4,
+    group_of_slot: np.ndarray | None = None,
 ) -> WaveSchedule:
     """Build the wave schedule for one batch.
 
@@ -58,21 +59,38 @@ def build_wave_schedule(
         trace order.
       num_slots: number of active slots in the batch.
       lanes: parallel lane count.
+      group_of_slot: optional int array [num_slots] of scheduling-group
+        ids.  Slots in the same group are pinned to the same lane (and
+        therefore serialize against each other in trace order) — the
+        engine groups *overlapping* regions this way, since they share
+        cache-plane bits and must not race across lanes.  ``None`` means
+        every slot is its own group (the conflict-free default).
     """
     b = len(slot_of_acc)
     counts = np.bincount(slot_of_acc, minlength=num_slots)
-    # Longest-processing-time greedy: hottest regions first, each to the
+    if group_of_slot is None:
+        gcounts = counts
+        ngroups = num_slots
+        group_of_slot = np.arange(num_slots, dtype=np.int64)
+    else:
+        group_of_slot = np.asarray(group_of_slot, np.int64)
+        ngroups = int(group_of_slot.max()) + 1 if num_slots else 0
+        gcounts = np.bincount(
+            group_of_slot, weights=counts, minlength=ngroups).astype(np.int64)
+    # Longest-processing-time greedy: hottest groups first, each to the
     # least-loaded lane, so the wave count approaches the hottest
     # region's serialization floor instead of the batch size.
-    order = np.argsort(-counts, kind="stable")
+    order = np.argsort(-gcounts, kind="stable")
     lane_of_slot = np.empty(num_slots, np.int32)
     if num_slots:
+        lane_of_group = np.empty(ngroups, np.int32)
         load = [(0, g) for g in range(lanes)]
         heapq.heapify(load)
         for s in order.tolist():
             cnt, g = heapq.heappop(load)
-            lane_of_slot[s] = g
-            heapq.heappush(load, (cnt + int(counts[s]), g))
+            lane_of_group[s] = g
+            heapq.heappush(load, (cnt + int(gcounts[s]), g))
+        lane_of_slot[:] = lane_of_group[group_of_slot]
     # Lane-local dense slot ids.
     by_lane = np.argsort(lane_of_slot, kind="stable")
     lane_sorted = lane_of_slot[by_lane]

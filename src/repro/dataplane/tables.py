@@ -3,13 +3,34 @@
 Three exports bridge the Python control plane and the device pipeline:
 
 * :class:`RegionTable` — the cache directory as parallel arrays sorted by
-  region base (disjoint intervals, so a vectorized ``searchsorted``
-  replaces the scalar per-access buddy probe).
+  region base, plus (when capacity evictions have left *overlapping*
+  regions) a per-level LPM index so lookup stays most-specific-first.
 * :class:`PageMap` — a dense page index over the VA ranges the trace can
   touch, so per-blade cache presence/dirty state lives in flat numpy
   planes instead of per-blade ``OrderedDict``s.
 * :class:`DataPlaneState` — the combination, plus the translate/protect
   match-action tables from ``InNetworkMMU.export_dataplane_tables``.
+
+Export-layout invariants:
+
+* ``RegionTable`` rows are sorted by ``bases``; ``keys[i]`` is the
+  directory ``(base, log2)`` key of row ``i`` and is the write-back
+  address after a batch.  Regions are pow2-sized and naturally aligned
+  (the directory's buddy invariant), so a containing region at level L
+  has base ``vaddr & ~(2**L - 1)`` — the per-level LPM index exploits
+  exactly this.
+* ``recency[i]`` carries the directory's LRU rank (0 = coldest) for row
+  ``i`` — the state the capacity-eviction policy is keyed on, carried
+  with the device view (and in ``directory_recency`` of
+  ``export_dataplane_tables``) for diagnostics and failover snapshots;
+  victim *choice* itself runs in the engine's host residency pre-pass
+  against the live recency lists.
+* When regions are disjoint (``overlapping`` False) lookup is a single
+  ``searchsorted``; otherwise each of the <= 1 + log2(M) - 12 levels is
+  probed smallest-first, mirroring ``CacheDirectory.lookup``.
+* ``PageMap`` dense indices are contiguous within a *run* of VA-abutting
+  segments; a region window maps to one contiguous dense span or the
+  export refuses (:class:`TableExportError`).
 """
 
 from __future__ import annotations
@@ -26,17 +47,19 @@ class UnsupportedByBatchedEngine(RuntimeError):
 
 
 class TableExportError(UnsupportedByBatchedEngine):
-    """The directory cannot be expressed as disjoint dense intervals."""
+    """The directory/page-map cannot be expressed as dense device state."""
 
 
 @dataclass
 class RegionTable:
     """The directory's regions as sorted parallel arrays.
 
-    Regions are disjoint, pow2-sized, naturally aligned intervals; rows
-    are sorted by ``bases`` so containment lookup is one searchsorted.
-    ``keys`` aligns rows with the directory's ``(base, log2)`` entry keys
-    for write-back after a batch.
+    Regions are pow2-sized, naturally aligned intervals; rows are sorted
+    by ``bases``.  ``keys`` aligns rows with the directory's
+    ``(base, log2)`` entry keys for write-back after a batch.  Regions
+    may overlap after capacity evictions (a coarse re-install over
+    surviving split children); lookup is then most-specific-first via a
+    per-level index, exactly like the scalar directory probe.
     """
 
     bases: np.ndarray  # int64 [S]
@@ -47,53 +70,73 @@ class RegionTable:
     owner: np.ndarray  # int32 [S]
     prepop: np.ndarray  # bool  [S]
     keys: list = field(default_factory=list)
+    recency: np.ndarray = None  # int64 [S] LRU rank, 0 = coldest
+    overlapping: bool = False
+    # LPM index, built iff overlapping: [(log2, sorted_bases, row_ids)],
+    # ascending log2 (most specific first).
+    levels: list = field(default_factory=list)
 
     def __len__(self) -> int:
         return len(self.bases)
 
     # ------------------------------------------------------------------ #
     def lookup(self, vaddrs: np.ndarray) -> np.ndarray:
-        """Row index containing each vaddr, -1 when uncovered."""
+        """Row index of the most-specific region containing each vaddr,
+        -1 when uncovered."""
         v = np.asarray(vaddrs, np.int64)
-        idx = np.searchsorted(self.bases, v, side="right") - 1
-        clip = np.clip(idx, 0, max(0, len(self.bases) - 1))
-        covered = (idx >= 0) & (len(self) > 0)
-        covered &= v < self.ends[clip]
-        return np.where(covered, clip, -1)
-
-    def overlaps(self, base: int, size: int) -> bool:
-        """True when [base, base+size) intersects any existing region."""
-        if len(self) == 0:
-            return False
-        j = int(np.searchsorted(self.bases, base + size, side="left")) - 1
-        return j >= 0 and int(self.ends[j]) > base
-
+        if not self.overlapping:
+            idx = np.searchsorted(self.bases, v, side="right") - 1
+            clip = np.clip(idx, 0, max(0, len(self.bases) - 1))
+            covered = (idx >= 0) & (len(self) > 0)
+            covered &= v < self.ends[clip]
+            return np.where(covered, clip, -1)
+        out = np.full(len(v), -1, np.int64)
+        unresolved = np.ones(len(v), bool)
+        for log2, lvl_bases, lvl_rows in self.levels:
+            if not unresolved.any():
+                break
+            cand = v & ~((np.int64(1) << log2) - 1)
+            j = np.searchsorted(lvl_bases, cand)
+            jc = np.minimum(j, len(lvl_bases) - 1)
+            hit = (j < len(lvl_bases)) & (lvl_bases[jc] == cand) & unresolved
+            out[hit] = lvl_rows[jc[hit]]
+            unresolved &= ~hit
+        return out
 
 def build_region_table(directory, prepopulated: set) -> RegionTable:
     """Materialize the directory as a :class:`RegionTable`.
 
-    Raises :class:`TableExportError` when entries overlap — that only
-    happens after capacity evictions punched holes the scalar engine then
-    re-covered at a coarser granularity, which the batched engine gates
-    out up front anyway.
-    """
-    entries = sorted(directory.entries.values(), key=lambda e: e.base)
-    bases = np.array([e.base for e in entries], np.int64)
-    ends = np.array([e.end for e in entries], np.int64)
-    if len(entries) > 1 and (ends[:-1] > bases[1:]).any():
-        raise TableExportError("directory contains overlapping regions")
-    return RegionTable(
-        bases=bases,
-        ends=ends,
+    Overlapping entries (possible once capacity evictions punched holes
+    the directory re-covered at a coarser granularity) switch the table
+    into per-level LPM lookup mode instead of refusing the export."""
+    entries = sorted(directory.entries.values(), key=lambda e: (e.base, e.size_log2))
+    rank = {k: i for i, k in enumerate(directory.lru_keys())}
+    keys = [(e.base, e.size_log2) for e in entries]
+    rt = RegionTable(
+        bases=np.array([e.base for e in entries], np.int64),
+        ends=np.array([e.end for e in entries], np.int64),
         log2s=np.array([e.size_log2 for e in entries], np.int32),
         state=np.array([int(e.state) for e in entries], np.int32),
         sharers=np.array([e.sharers for e in entries], np.int32),
         owner=np.array([e.owner for e in entries], np.int32),
-        prepop=np.array(
-            [(e.base, e.size_log2) in prepopulated for e in entries], bool
-        ),
-        keys=[(e.base, e.size_log2) for e in entries],
+        prepop=np.array([k in prepopulated for k in keys], bool),
+        keys=keys,
+        recency=np.array([rank[k] for k in keys], np.int64),
     )
+    if len(entries) > 1 and (rt.ends[:-1] > rt.bases[1:]).any():
+        rt.overlapping = True
+        rt.levels = _build_lpm_levels(rt.bases, rt.log2s)
+    return rt
+
+
+def _build_lpm_levels(bases: np.ndarray, log2s: np.ndarray) -> list:
+    levels = []
+    for lg in np.unique(log2s):
+        rows = np.flatnonzero(log2s == lg)
+        lvl_bases = bases[rows]
+        order = np.argsort(lvl_bases)
+        levels.append((int(lg), lvl_bases[order], rows[order]))
+    return levels
 
 
 # --------------------------------------------------------------------- #

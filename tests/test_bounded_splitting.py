@@ -133,6 +133,97 @@ def test_merge_recovers_capacity():
     assert d.num_entries() < n0  # buddies merged
 
 
+class _SeedReferenceSplitting(BoundedSplitting):
+    """The seed's O(n)-scan epoch passes, kept verbatim as the oracle
+    for the vectorized implementation."""
+
+    def _split_pass(self, t: float) -> int:
+        d = self.directory
+        splits = 0
+        hot = [
+            key
+            for key, st in d.stats.items()
+            if st.false_invalidations > t and key[1] > PAGE_SHIFT
+        ]
+        hot.sort(key=lambda k: -d.stats[k].false_invalidations)
+        for key in hot:
+            e = d.entries.get(key)
+            if e is None:
+                continue
+            if d.num_entries() >= d.resources.max_directory_entries:
+                break
+            d.split(e)
+            splits += 1
+        return splits
+
+    def _merge_pass(self, t: float) -> int:
+        d = self.directory
+        merges = 0
+        merged_something = True
+        while merged_something:
+            merged_something = False
+            for key in list(d.entries.keys()):
+                e = d.entries.get(key)
+                if e is None or e.size_log2 >= d.max_region_log2:
+                    continue
+                buddy = d.buddy_of(e)
+                if buddy is None:
+                    continue
+                fic = (
+                    d.stats[(e.base, e.size_log2)].false_invalidations
+                    + d.stats[(buddy.base, buddy.size_log2)].false_invalidations
+                )
+                if fic > t:
+                    continue
+                if not CacheDirectory.mergeable(e, buddy):
+                    continue
+                merged = d.merge(*sorted((e, buddy), key=lambda x: x.base))
+                d.stats[(merged.base, merged.size_log2)].false_invalidations = fic
+                merges += 1
+                merged_something = True
+        return merges
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 127), st.booleans()),
+        min_size=50, max_size=250,
+    ),
+    epochs=st.integers(1, 4),
+    c=st.sampled_from([0.5, 1.0, 4.0]),
+)
+@settings(max_examples=20, deadline=None)
+def test_vectorized_epoch_passes_match_seed_reference(ops, epochs, c):
+    """The vectorized split/merge passes must reach the seed fixpoint:
+    identical region structure, coherence fields, FIC carry-over and
+    split/merge counts on arbitrary workloads."""
+    racks = []
+    for cls in (BoundedSplitting, _SeedReferenceSplitting):
+        d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=14,
+                           resources=SwitchResources(max_directory_entries=500))
+        caches = {b: BladePageCache(b, 1 << 20) for b in range(4)}
+        e = CoherenceEngine(d, caches)
+        s = cls(d, c=c)
+        racks.append((e, d, s))
+    for ep in range(epochs):
+        for blade, page, write in ops:
+            addr = BASE + (page % 128) * PAGE_SIZE
+            for e, d, s in racks:
+                e.access(MemAccess(blade, 1, addr,
+                                   AccessType.WRITE if write else AccessType.READ))
+        reports = [s.run_epoch() for e, d, s in racks]
+        assert reports[0].splits == reports[1].splits, ep
+        assert reports[0].merges == reports[1].merges, ep
+        d_vec, d_ref = racks[0][1], racks[1][1]
+        assert set(d_vec.entries.keys()) == set(d_ref.entries.keys()), ep
+        for k, ev in d_vec.entries.items():
+            er = d_ref.entries[k]
+            assert (ev.state, ev.sharers, ev.owner) == (
+                er.state, er.sharers, er.owner), (ep, k)
+            assert (d_vec.stats[k].false_invalidations
+                    == d_ref.stats[k].false_invalidations), (ep, k)
+
+
 def test_c_adapts_under_pressure():
     d = CacheDirectory(max_region_log2=M_LOG2, initial_region_log2=PAGE_SHIFT,
                        resources=SwitchResources(max_directory_entries=64))

@@ -81,6 +81,10 @@ def test_snapshot_restore_roundtrip():
     assert d1 == d2
     # allocator accounting identical
     assert cp2.allocator.allocation_by_blade() == alloc.allocation_by_blade()
+    # recency order identical: the backup switch would pick the same
+    # capacity-eviction victims the failed switch would have (ISSUE 2).
+    assert (cp2.mmu.engine.directory.lru_keys()
+            == mmu.engine.directory.lru_keys())
 
 
 def test_dataplane_export_shapes():
@@ -90,3 +94,4 @@ def test_dataplane_export_shapes():
     assert t["translate"].shape[1] == 4
     assert t["protect"].shape[1] == 4
     assert t["directory"].shape[1] == 5
+    assert t["directory_recency"].shape[0] == t["directory"].shape[0]

@@ -1,10 +1,13 @@
 """Batched data-plane engine vs the scalar emulator oracle.
 
-The contract (ISSUE 1): on traces without epoch activity the batched
-engine must produce *identical* coherence statistics and runtimes for
-every mind* system; the conflict scheduler must serialize same-region
-packets and keep waves conflict-free; unsupported behaviours must be
-refused loudly rather than silently diverging.
+The contract (ISSUE 1, extended by ISSUE 2): the batched engine must
+produce *identical* coherence statistics and runtimes for every mind*
+system — including traces with directory capacity evictions (regions >
+``max_directory_entries``) and Bounded-Splitting epochs, whose
+boundaries the engine lands on exactly; the conflict scheduler must
+serialize same-region packets and keep waves conflict-free; behaviours
+that remain unsupported (blade-cache overflow, systems without a switch
+data plane) must be refused loudly rather than silently diverging.
 """
 
 import numpy as np
@@ -99,24 +102,25 @@ def test_parity_small_chunks_cross_state():
     np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-6)
 
 
-def test_epoch_splitting_stays_close():
-    """With Bounded-Splitting epochs active the engines may diverge on
-    epoch timing (batch boundaries); coherence stats must stay within a
-    few percent and splitting must actually run in both."""
+def test_epoch_splitting_exact_timing():
+    """Bounded-Splitting epochs fire at exactly the access the scalar
+    oracle fires them at (the engine shrinks batches to land on the
+    boundary), so multi-epoch replay is stat-identical — the ISSUE 2
+    contract replacing the old batch-granular drift tolerance."""
     trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
                          accesses_per_thread=600, store_mb=4, seed=7)
     kw = dict(num_compute_blades=2, threads_per_blade=2, epoch_us=4000.0)
     rs = DisaggregatedRack(system="mind", engine="scalar", **kw).run(trace)
     rb = DisaggregatedRack(system="mind", engine="batched", **kw).run(trace)
     assert rs.directory_timeline and rb.directory_timeline
+    assert rs.directory_timeline == rb.directory_timeline
     assert len(rs.epoch_reports) == len(rb.epoch_reports)
-    assert rs.stats.accesses == rb.stats.accesses
-    for f in ("local_hits", "remote_fetches", "invalidations"):
-        a, b = getattr(rs.stats, f), getattr(rb.stats, f)
-        # Epoch timing is batch-granular in the batched engine, so the
-        # split/merge trajectory (and thus hit/invalidation mix) may
-        # drift a little — but not structurally.
-        assert abs(a - b) <= max(50, 0.15 * a), (f, a, b)
+    for a, b in zip(rs.epoch_reports, rb.epoch_reports):
+        assert (a.splits, a.merges, a.directory_entries) == (
+            b.splits, b.merges, b.directory_entries)
+    for f in STAT_FIELDS:
+        assert getattr(rs.stats, f) == getattr(rb.stats, f), f
+    np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
 
 
 def test_mean_access_us_not_scaled_by_thread_count():
@@ -200,13 +204,59 @@ def test_batched_rejects_systems_without_switch():
             rack.run(_uniform_trace(2))
 
 
-def test_batched_rejects_directory_overflow():
+def test_batched_capacity_eviction_parity():
+    """ISSUE 2 acceptance: a trace that overflows the directory SRAM
+    (regions > max_directory_entries) replays batched with coherence
+    stats identical to the scalar oracle — eviction packets reproduce
+    the coldest-Invalid-else-coldest LRU policy exactly."""
     trace = _uniform_trace()
+    for maxdir in (8, 24):
+        rs, rb = _pair("mind", trace, max_directory_entries=maxdir)
+        for f in STAT_FIELDS:
+            assert getattr(rs.stats, f) == getattr(rb.stats, f), (maxdir, f)
+        np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
+        np.testing.assert_allclose(rb.total_thread_us, rs.total_thread_us,
+                                   rtol=1e-9)
+
+
+def test_batched_capacity_multi_epoch_parity():
+    """Capacity evictions + Bounded-Splitting epochs together — the
+    combination the seed engine refused outright — stay stat-identical,
+    and chunk boundaries must not matter."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=600, store_mb=4, seed=7)
+    kw = dict(num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=120, epoch_us=4000.0)
+    rs = DisaggregatedRack(system="mind", engine="scalar",
+                           splitting_enabled=True, **kw).run(trace)
+    for chunk in (32768, 97):
+        rb = DisaggregatedRack(
+            system="mind", engine="batched", splitting_enabled=True,
+            engine_options={"chunk_size": chunk}, **kw).run(trace)
+        for f in STAT_FIELDS:
+            assert getattr(rs.stats, f) == getattr(rb.stats, f), (chunk, f)
+        assert len(rs.epoch_reports) == len(rb.epoch_reports)
+        assert rs.directory_timeline == rb.directory_timeline
+        np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
+
+
+def test_region_table_exports_recency():
+    """export_tables/export_recency carry the LRU ranks the eviction
+    policy is keyed on, aligned with the table rows."""
     rack = DisaggregatedRack(system="mind", num_compute_blades=2,
-                             threads_per_blade=2, engine="batched",
-                             max_directory_entries=8)
-    with pytest.raises(UnsupportedByBatchedEngine):
-        rack.run(trace)
+                             threads_per_blade=2)
+    rack.cp.sys_mmap(1, 1 << 18, requesting_blade=0)
+    d = rack.mmu.engine.directory
+    t = rack.mmu.export_dataplane_tables()
+    assert t["directory_recency"].shape[0] == t["directory"].shape[0]
+    ranks = {tuple(map(int, r[:2])): int(rk)
+             for r, rk in zip(t["directory"], t["directory_recency"])}
+    assert [k for k, _ in sorted(ranks.items(), key=lambda kv: kv[1])] == \
+        d.lru_keys()
+    # A lookup touch moves the entry to the hottest rank.
+    coldest = d.lru_keys()[0]
+    d.lookup(coldest[0])
+    assert d.lru_keys()[-1] == coldest
 
 
 def test_batched_rejects_cache_overflow():

@@ -20,9 +20,11 @@ from repro.core.types import (
 BASE = 1 << 40
 
 
-def make_engine(nblades=4, max_entries=30_000, initial_log2=14):
+def make_engine(nblades=4, max_entries=30_000, initial_log2=14,
+                eviction="lru"):
     d = CacheDirectory(initial_region_log2=initial_log2,
-                       resources=SwitchResources(max_directory_entries=max_entries))
+                       resources=SwitchResources(max_directory_entries=max_entries),
+                       eviction=eviction)
     caches = {b: BladePageCache(b, 1 << 20) for b in range(nblades)}
     return CoherenceEngine(d, caches), d, caches
 
@@ -107,6 +109,47 @@ def test_capacity_eviction_invalidates_sharers():
         acc(e, 0, BASE + i * (1 << 14), write=False)
     assert d.num_entries() <= 4
     assert d.capacity_evictions > 0
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 63), st.booleans()),
+        min_size=1, max_size=300,
+    ),
+    max_entries=st.integers(2, 12),
+)
+@settings(max_examples=50, deadline=None)
+def test_lru_eviction_matches_scan_oracle(ops, max_entries):
+    """ISSUE 2 property: the O(1) LRU eviction structure picks the exact
+    victims the seed's O(n) scan picked (coldest Invalid entry first,
+    else coldest overall) on randomized install/access sequences, so the
+    directory contents stay byte-identical throughout."""
+    e_lru, d_lru, _ = make_engine(max_entries=max_entries, eviction="lru")
+    e_scan, d_scan, _ = make_engine(max_entries=max_entries, eviction="scan")
+    for i, (blade, page, write) in enumerate(ops):
+        addr = BASE + page * PAGE_SIZE
+        acc(e_lru, blade, addr, write)
+        acc(e_scan, blade, addr, write)
+        assert list(d_lru.entries.keys()) == list(d_scan.entries.keys()), i
+        assert d_lru.lru_keys() == d_scan.lru_keys(), i
+        assert d_lru.capacity_evictions == d_scan.capacity_evictions, i
+    for k, e1 in d_lru.entries.items():
+        e2 = d_scan.entries[k]
+        assert (e1.state, e1.sharers, e1.owner) == (e2.state, e2.sharers, e2.owner)
+
+
+def test_export_recency_is_coldest_first_rank():
+    e, d, _ = make_engine()
+    for i in range(4):
+        acc(e, 0, BASE + i * (1 << 14), write=False)
+    acc(e, 1, BASE, write=False)  # re-touch the first region
+    rows = d.export_tables()
+    ranks = d.export_recency()
+    order = [k for k, _ in sorted(
+        (( (r[0], r[1]), rk) for r, rk in zip(rows, ranks)),
+        key=lambda kv: kv[1])]
+    assert order == d.lru_keys()
+    assert order[-1] == (BASE, 14)  # most recently touched
 
 
 @given(
