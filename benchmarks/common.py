@@ -41,8 +41,8 @@ def engine_from_argv(default: str = "scalar") -> str:
 
 def run_workload_with_engine(engine: str, system: str, workload: str, **kw):
     """run_workload that degrades to the scalar engine when the batched
-    data plane refuses a (system, workload) combination (e.g. GAM has no
-    switch, or the trace needs cache/directory evictions)."""
+    data plane refuses a (system, workload) combination (the no-switch
+    baselines: GAM and FastSwap have no in-network data plane)."""
     from repro.core.emulator import run_workload
     from repro.dataplane import UnsupportedByBatchedEngine
 

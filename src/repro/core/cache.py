@@ -7,8 +7,14 @@ addressed* page cache with per-page permissions.  The cache tracks writable
 invalidation request for a region, it flushes all writable pages in the
 region and removes all local PTEs").
 
-Eviction is CLOCK (approximating Linux's LRU) — evictions of dirty pages
-write back to the home memory blade.
+Eviction is strict LRU (an ``OrderedDict`` keyed by page, refreshed on
+every touch/insert/dirtying): when the cache is full, the
+least-recently-used page is dropped, and dirty victims write back to the
+home memory blade (counted in ``evicted_dirty`` and, like any write-back,
+in ``flushed_pages``).  Linux's CLOCK approximation of LRU is
+intentionally *not* modelled — the behaviour tests and the batched
+engine's cache-occupancy pre-pass both depend on exact LRU order, which
+``lru_pages`` exposes coldest-first.
 """
 
 from __future__ import annotations
@@ -36,6 +42,9 @@ class BladePageCache:
         self.pages: "OrderedDict[int, bool]" = OrderedDict()
         self.evicted_dirty = 0
         self.evicted_clean = 0
+        # Optional aggregate counters (EpochStats) the owning emulator
+        # attaches so capacity evictions show up in EmulationResult.stats.
+        self.stats = None
 
     # ------------------------------------------------------------------ #
     def has(self, vaddr: int) -> bool:
@@ -62,8 +71,12 @@ class BladePageCache:
             if was_dirty:
                 self.evicted_dirty += 1
                 flushed += 1
+                if self.stats is not None:
+                    self.stats.evicted_dirty += 1
             else:
                 self.evicted_clean += 1
+                if self.stats is not None:
+                    self.stats.evicted_clean += 1
         self.pages[page] = dirty
         return flushed
 
@@ -108,6 +121,13 @@ class BladePageCache:
 
     def cached_pages_in(self, base: int, length: int) -> int:
         return sum(1 for p in self.pages if base <= p < base + length)
+
+    def lru_pages(self) -> list[tuple[int, bool]]:
+        """(page, dirty) pairs coldest-first — the exact order capacity
+        eviction will consume them in.  This is the order the batched
+        engine's cache-occupancy pre-pass replays and what the
+        eviction-order oracle test checks against."""
+        return list(self.pages.items())
 
     @property
     def occupancy(self) -> int:

@@ -73,6 +73,10 @@ class CoherenceEngine:
         self.caches = caches
         self.downgrade_keeps_copy = downgrade_keeps_copy
         self.stats = EpochStats()
+        # Capacity evictions inside BladePageCache.insert roll up into
+        # the same counters EmulationResult reports.
+        for c in self.caches.values():
+            c.stats = self.stats
         # Pre-populated regions: (base, log2) set; cleared on any remote
         # transition touching the region.
         self._prepopulated: set[tuple[int, int]] = set()

@@ -117,6 +117,8 @@ class DisaggregatedRack:
         }
         self._gam_dir: dict[int, tuple[int, int, int]] = {}  # page->(state,sharers,owner)
         self._alt_stats = EpochStats()  # gam/fastswap counters
+        for c in self._fs_caches.values():
+            c.stats = self._alt_stats
 
     # ------------------------------------------------------------------ #
     def _map_arena(self, trace: Trace) -> list[tuple[int, int, int]]:

@@ -139,6 +139,11 @@ class EpochStats:
     invalidated_pages: int = 0
     false_invalidated_pages: int = 0
     flushed_pages: int = 0
+    # Blade page-cache capacity evictions (§6.1 partial disaggregation):
+    # dirty victims write back (also counted in flushed_pages), clean
+    # victims are dropped silently.
+    evicted_dirty: int = 0
+    evicted_clean: int = 0
     faults: int = 0
     splits: int = 0
     merges: int = 0

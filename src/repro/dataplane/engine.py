@@ -37,6 +37,30 @@ directory miss.  Victims whose *cache-plane* footprint overlaps another
 active region (a coarse re-install over surviving split children) are
 pinned to that region's lane by the scheduler's overlap grouping.
 
+**Blade page-cache capacity evictions** (§6.1 partial disaggregation)
+replay the same way: when a trace's per-blade working set exceeds a
+blade's page cache, a host-side *cache-occupancy pre-pass* walks the
+chunk's packet stream against per-blade LRU shadows
+(:class:`~repro.dataplane.tables.BladeCacheShadow` over the dense page
+index — per-page recency is the one thing the packed planes cannot
+carry).  The walk replays only the membership-relevant slice of the
+scalar path: the MSI decode that picks invalidation targets (state /
+sharers / owner evolve independently of cache contents), the region
+page-drops those multicasts cause, and the requester's LRU
+insert-or-touch.  Wherever ``BladePageCache.insert`` would evict, the
+pre-pass injects a *cache-eviction packet* — clean drop or dirty
+write-back, decided by the shadow's dirty bit — into the stream.  The
+packet executes in the lane of the active region *covering the victim
+page* (pinned there by the scheduler's slot assignment, so it
+serializes against every access and invalidation that could observe the
+bit), where it clears the victim's presence/dirty plane bits; victims
+not covered by any active region are cleared host-side after the lane
+merge, since nothing on-device can read them within the chunk.
+Evictions charge no latency (``NetworkModel.latency`` never sees cache
+write-backs — scalar parity), and ``evicted_dirty`` / ``evicted_clean``
+/ the write-back share of ``flushed_pages`` are accounted from the
+pre-pass, which knows each victim exactly.
+
 **Epoch boundaries are exact.**  Bounded-Splitting epochs fire when the
 mean thread clock crosses ``epoch_us`` — a per-access condition in the
 scalar loop.  The engine bounds each chunk so the crossing access is
@@ -49,10 +73,8 @@ latencies up front (as the seed engine did), so epoch timing on faulting
 traces can lead the scalar engine's.
 
 The engine still *refuses* (raises :class:`UnsupportedByBatchedEngine`)
-when replay would need blade-page-cache capacity evictions — per-page
-LRU at the blades couples lanes through cache-hit outcomes and remains
-scalar-engine territory — or when the modelled system has no switch
-data plane (gam/fastswap).
+when the modelled system has no switch data plane (gam/fastswap) or
+uses the scalar-only ``downgrade_keeps_copy`` variant.
 """
 
 from __future__ import annotations
@@ -66,6 +88,7 @@ import numpy as np
 from repro.core.types import PAGE_SHIFT, MSIState, next_pow2
 from repro.dataplane.scheduler import build_wave_schedule
 from repro.dataplane.tables import (
+    BladeCacheShadow,
     RegionTable,
     UnsupportedByBatchedEngine,
     build_dataplane_state,
@@ -78,7 +101,7 @@ _KINDS = ("I->S", "I->M", "S->S", "S->M", "M->M", "M->S")
 # --------------------------------------------------------------------- #
 # Stage 3: the fused directory/cache wave loop.
 # --------------------------------------------------------------------- #
-def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
+def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
                  dirrows, cmask, planes):
     """Replay one lane's waves sequentially (vmapped across lanes).
 
@@ -89,12 +112,22 @@ def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
     The loop carries only what is order-dependent — directory rows and
     cache bitmaps — and emits per-access action words; latency (incl.
     cross-lane queueing) is reconstructed on the host in trace order.
-    A stream entry with ``evict`` set is a capacity-eviction packet for
-    its slot instead of an access: it multicasts the invalidation to the
-    row's sharers/owner, clears the region's cache-plane bits, resets
-    the row to Invalid and zeroes the region's epoch counters — the
-    device realization of ``CacheDirectory.evict_for_capacity`` plus
-    ``CoherenceEngine._drain_capacity_evictions``.
+    ``ptype`` distinguishes three packet kinds:
+
+    * ``0`` — a memory access (the common case).
+    * ``1`` — a *directory* capacity-eviction packet for its slot: it
+      multicasts the invalidation to the row's sharers/owner, clears
+      the region's cache-plane bits, resets the row to Invalid and
+      zeroes the region's epoch counters — the device realization of
+      ``CacheDirectory.evict_for_capacity`` plus
+      ``CoherenceEngine._drain_capacity_evictions``.
+    * ``2`` — a *blade-cache* capacity-eviction packet: it clears one
+      page's presence/dirty bits at one blade (the LRU victim the host
+      cache-occupancy pre-pass chose), scheduled in the lane of the
+      region covering the victim so every later ``has`` read and
+      invalidation popcount in the chunk sees the page gone.  It
+      touches no directory row and contributes no stats — eviction
+      accounting is host-side, where the victim's dirtiness is known.
     """
     L = slot.shape[0]
     NB = planes.shape[0] // 2
@@ -112,7 +145,8 @@ def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
         b = blade[i]
         w = write[i]
         v = valid[i]
-        ev = evict[i] == 1
+        ev = ptype[i] == 1
+        cev = ptype[i] == 2
         w0i = w0[i]
         rwi = rw[i]
         biti = bit[i]
@@ -159,7 +193,7 @@ def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
             is_s, csh,
             jnp.where(cow >= 0, jnp.int32(1) << jnp.maximum(cow, 0),
                       jnp.int32(0)))
-        inval = jnp.where(ev, ev_targets, inval)
+        inval = jnp.where(ev, ev_targets, jnp.where(cev, 0, inval))
 
         # ---- egress multicast: invalidation + false-inval accounting -
         sel = ((inval >> blades_iota) & 1) == 1  # [NB]
@@ -174,24 +208,27 @@ def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
         win_p = jnp.where(sel[:, None], win_p & ~mask[None, :], win_p)
         win_d = jnp.where(sel[:, None], win_d & ~mask[None, :], win_d)
 
-        # ---- requester-side data movement (accesses only) ------------
+        # ---- requester-side data movement (accesses only), or the
+        # victim-bit clear of a blade-cache eviction packet -------------
         old_dirty = (win_d[b, rwi] >> biti) & 1
         new_dirty = jnp.where(has, old_dirty, 0) | w
         one = jnp.int32(1) << biti
-        ins_p = win_p[b, rwi] | one
-        ins_d = (win_d[b, rwi] & ~one) | (new_dirty << biti)
+        ins_p = jnp.where(cev, win_p[b, rwi] & ~one, win_p[b, rwi] | one)
+        ins_d = jnp.where(cev, win_d[b, rwi] & ~one,
+                          (win_d[b, rwi] & ~one) | (new_dirty << biti))
         win_p = win_p.at[b, rwi].set(jnp.where(ev, win_p[b, rwi], ins_p))
         win_d = win_d.at[b, rwi].set(jnp.where(ev, win_d[b, rwi], ins_d))
 
         # ---- write-back (fused recirculation) ------------------------
         vi = v.astype(jnp.int32)
-        acci = jnp.where(ev, 0, vi)  # eviction packets are not accesses
+        acci = jnp.where(ev | cev, 0, vi)  # eviction packets: not accesses
         newwin = jnp.where(v, jnp.concatenate([win_p, win_d], axis=0), win)
         planes = jax.lax.dynamic_update_slice(planes, newwin, (0, w0i))
         freed = jnp.stack([jnp.int32(0), jnp.int32(0), jnp.int32(-1),
                            jnp.int32(0)])
         newrow = jnp.where(ev, freed,
                            jnp.stack([new_st, new_sh, new_ow, new_pp]))
+        newrow = jnp.where(cev, drow, newrow)  # cache evictions: row as-is
         newrow = jnp.where(v, newrow, drow)
         dirrows = jax.lax.dynamic_update_slice(dirrows, newrow[None], (s, 0))
         # A re-install after eviction starts with fresh epoch counters.
@@ -209,7 +246,7 @@ def _lane_replay(nwaves, slot, blade, write, valid, evict, w0, rw, bit,
             | (par.astype(jnp.int32) << 3)
             | (kind << 4))
         flags = flags.at[i].set(word_out)
-        invals = invals.at[i].set(jnp.where(ev, 0, inval))
+        invals = invals.at[i].set(jnp.where(ev | cev, 0, inval))
         return (dirrows, planes, fac, acnt, stats, flags, invals)
 
     init = (dirrows, planes, fac, acnt, stats, flags, invals)
@@ -248,6 +285,10 @@ class BatchedDataPlane:
         # chunks skip the O(S) table rebuild.
         self._dtab = None
         self._row_of: dict = {}
+        # Per-blade LRU shadows for the cache-occupancy pre-pass; None
+        # while the working set fits every blade cache (the common,
+        # zero-overhead case).  Rebuilt per run alongside the planes.
+        self._cache_shadows = None
 
     # ------------------------------------------------------------------ #
     def run(self, trace, max_accesses: int | None = None):
@@ -273,7 +314,7 @@ class BatchedDataPlane:
         self._dtab = None  # mapping may have grown since a prior run
         self._row_of = {}
         dense = state.page_map.dense_of(vaddrs)
-        self._check_cache_capacity(blades, dense, state)
+        self._plan_cache_replay(blades, dense, state)
         if n:
             # Mirror the scalar engine's first-access drain of evictions
             # queued during mmap-time prepopulation (§4.4 overflow).
@@ -405,12 +446,15 @@ class BatchedDataPlane:
         return max(1, min(self.chunk_size, est))
 
     # ------------------------------------------------------------------ #
-    def _check_cache_capacity(self, blades, dense, state) -> None:
-        """No-eviction precondition for the *blade page caches*: every
-        blade's touched working set must fit its cache.  Page-level LRU
-        eviction changes cache-hit outcomes across regions, which would
-        couple lanes — still scalar-engine territory (directory SRAM
-        evictions, by contrast, replay on-device; see module docstring)."""
+    def _plan_cache_replay(self, blades, dense, state) -> None:
+        """Decide whether this replay can ever evict from a blade page
+        cache.  When every blade's touched working set fits its cache
+        (occupancy starts at zero — the planes are rebuilt empty per
+        run) no access can trigger ``BladePageCache.insert``'s eviction
+        loop, so the pre-pass is skipped entirely; otherwise per-blade
+        LRU shadows are armed and every chunk runs the cache-occupancy
+        pre-pass (see module docstring)."""
+        self._cache_shadows = None
         if len(dense) == 0:
             return
         if (dense < 0).any():
@@ -419,11 +463,13 @@ class BatchedDataPlane:
         key = blades.astype(np.int64) * tp + dense
         uniq = np.unique(key)
         per_blade = np.bincount(uniq // tp, minlength=self.rack.nb)
-        caps = [c.capacity_pages for c in self.rack.mmu.engine.caches.values()]
-        if (per_blade > np.array(caps)[: len(per_blade)]).any():
-            raise UnsupportedByBatchedEngine(
-                "working set exceeds a blade page cache; replay would need "
-                "LRU evictions — use engine='scalar'")
+        caches = self.rack.mmu.engine.caches
+        caps = np.array([caches[b].capacity_pages for b in range(self.rack.nb)])
+        if (per_blade[: self.rack.nb] > caps).any():
+            self._cache_shadows = [
+                BladeCacheShadow(caches[b].capacity_pages)
+                for b in range(self.rack.nb)
+            ]
 
     # ------------------------------------------------------------------ #
     def _drain_pending_host(self, state) -> None:
@@ -619,6 +665,86 @@ class BatchedDataPlane:
         rt.keys = rt.keys + fresh
 
     # ------------------------------------------------------------------ #
+    def _cache_prepass(self, slot_of_pkt, pkt_type, pkt_blade, pkt_write,
+                       pkt_dense, st0, sh0, ow0, d0, npages):
+        """Sequential cache-occupancy walk of one chunk's packet stream.
+
+        Mirrors only the membership-relevant slice of the scalar access
+        path against the per-blade LRU shadows: the MSI decode that
+        picks invalidation targets (state/sharers/owner evolve
+        independently of cache contents — note none of the kernel's
+        ``new_st/new_sh/new_ow`` formulas read ``has``), the region
+        page-drops those multicasts cause at the targets, and the
+        requester's uniform LRU insert-or-touch (present -> refresh +
+        ``dirty |= w``; absent -> evict-to-capacity + insert, whatever
+        the MSI outcome — exactly ``CoherenceEngine.access``'s data
+        movement).  Returns the capacity evictions as
+        ``(packet-position, blade, victim-dense-page, was_dirty)``
+        tuples in stream order: each is the point where the scalar
+        ``BladePageCache.insert`` would have popped that LRU victim.
+
+        ``st0/sh0/ow0`` are the chunk's initial per-slot directory
+        values — the same rows the device kernel will read — and the
+        walk applies the same transitions the kernel applies, including
+        the Invalid reset of directory-eviction packets, so the shadow
+        decode and the device replay see identical sharer sets.
+        """
+        shadows = self._cache_shadows
+        st = st0.tolist()
+        sh = sh0.tolist()
+        ow = ow0.tolist()
+        lo = d0.tolist()
+        hi = (d0 + npages).tolist()
+        slots = slot_of_pkt.tolist()
+        types = pkt_type.tolist()
+        blades = pkt_blade.tolist()
+        writes = pkt_write.tolist()
+        dense = pkt_dense.tolist()
+        nb = self.rack.nb
+        events: list = []
+        for i in range(len(slots)):
+            s = slots[i]
+            if types[i] == 1:  # directory capacity-eviction packet
+                if st[s] == 1:
+                    bm = sh[s]
+                    targets = [b for b in range(nb) if (bm >> b) & 1]
+                else:
+                    targets = [ow[s]] if ow[s] >= 0 else []
+                for b in targets:
+                    shadows[b].drop_range(lo[s], hi[s])
+                st[s], sh[s], ow[s] = 0, 0, -1
+                continue
+            b = blades[i]
+            w = writes[i]
+            me = 1 << b
+            stv = st[s]
+            if stv == 2:
+                o = ow[s]
+                if o != b:
+                    # M at another blade: flush drops the owner's pages.
+                    shadows[o].drop_range(lo[s], hi[s])
+                    if w:
+                        st[s], sh[s], ow[s] = 2, me, b
+                    else:
+                        st[s], sh[s], ow[s] = 1, me, -1
+            elif w:
+                if stv == 1:
+                    others = sh[s] & ~me
+                    bb = 0
+                    while others:
+                        if others & 1:
+                            shadows[bb].drop_range(lo[s], hi[s])
+                        others >>= 1
+                        bb += 1
+                st[s], sh[s], ow[s] = 2, me, b
+            else:
+                sh[s] = (sh[s] | me) if stv == 1 else me
+                st[s], ow[s] = 1, -1
+            for vp, vd in shadows[b].insert_or_touch(dense[i], w == 1):
+                events.append((i, b, vp, vd))
+        return events
+
+    # ------------------------------------------------------------------ #
     def _process_chunk(self, vaddr, dense, blade, write, thread, kvec, pso,
                        clocks, breakdown, trans_lat, inflight) -> None:
         rack = self.rack
@@ -671,14 +797,14 @@ class BatchedDataPlane:
             pkt_blade = np.insert(blade, pos, 0).astype(np.int32)
             pkt_write = np.insert(write, pos, 0).astype(np.int32)
             pkt_dense = np.insert(dense, pos, 0)
-            pkt_evict = np.insert(np.zeros(bk, np.int32), pos, 1)
+            pkt_type = np.insert(np.zeros(bk, np.int32), pos, 1)
             pkt_orig = np.insert(np.arange(bk, dtype=np.int64), pos, -1)
         else:
             pkt_rows = rows
             pkt_blade = blade
             pkt_write = write
             pkt_dense = dense
-            pkt_evict = np.zeros(bk, np.int32)
+            pkt_type = np.zeros(bk, np.int32)
             pkt_orig = np.arange(bk, dtype=np.int64)
 
         act_rows, slot_of_pkt = np.unique(pkt_rows, return_inverse=True)
@@ -697,6 +823,51 @@ class BatchedDataPlane:
         below = lambda k: (np.uint64(1) << k) - np.uint64(1)  # noqa: E731
         cmask = ((below(ebit) ^ below(sbit)) & np.uint64(0xFFFFFFFF)).astype(
             np.uint32).view(np.int32)
+
+        # ---- cache-occupancy pre-pass: blade-cache eviction packets ----
+        host_clears: list = []
+        if self._cache_shadows is not None:
+            cache_events = self._cache_prepass(
+                slot_of_pkt, pkt_type, pkt_blade, pkt_write, pkt_dense,
+                rt.state[act_rows], rt.sharers[act_rows], rt.owner[act_rows],
+                d0, npages)
+            if cache_events:
+                cpos = np.array([e[0] for e in cache_events], np.int64)
+                cbl = np.array([e[1] for e in cache_events], np.int32)
+                cpg = np.array([e[2] for e in cache_events], np.int64)
+                cdirty = np.array([e[3] for e in cache_events], bool)
+                ndirty = int(cdirty.sum())
+                # Scalar parity: evictions inside BladePageCache.insert
+                # count dirty write-backs into flushed_pages, charge no
+                # latency, and never count as invalidations.
+                engine.stats.evicted_dirty += ndirty
+                engine.stats.evicted_clean += len(cache_events) - ndirty
+                engine.stats.flushed_pages += ndirty
+                # The lane that must execute each eviction is the one
+                # owning the victim's plane bit: the active region
+                # covering the victim page.  Active spans are nested or
+                # disjoint (pow2 buddy regions), so a prefix-max over
+                # the spans sorted by start finds the covering one.
+                starts = np.where(npages > 0, d0, np.iinfo(np.int64).max)
+                order = np.argsort(starts, kind="stable")
+                reach = np.maximum.accumulate((d0 + npages)[order])
+                idx = np.searchsorted(starts[order], cpg, side="right") - 1
+                j = np.searchsorted(reach, cpg, side="right")
+                cov = (idx >= 0) & (j <= idx)
+                if cov.any():
+                    ip = cpos[cov]
+                    cslot = order[j[cov]].astype(np.int32)
+                    slot_of_pkt = np.insert(slot_of_pkt, ip, cslot)
+                    pkt_blade = np.insert(pkt_blade, ip, cbl[cov])
+                    pkt_write = np.insert(pkt_write, ip, 0).astype(np.int32)
+                    pkt_dense = np.insert(pkt_dense, ip, cpg[cov])
+                    pkt_type = np.insert(pkt_type, ip, 2)
+                    pkt_orig = np.insert(pkt_orig, ip, -1)
+                # Victims outside every active region: no device packet
+                # can read their bits this chunk, so clear them on the
+                # host after the lane merge (their words are unowned and
+                # survive the merge unchanged).
+                host_clears = list(zip(cbl[~cov].tolist(), cpg[~cov].tolist()))
 
         # Overlapping active regions (coarse re-installs over surviving
         # split children) share cache-plane bits: pin each overlap
@@ -731,12 +902,14 @@ class BatchedDataPlane:
         acc_slot = lane_stream(sched.local_of_slot[slot_of_pkt], dummy)
         acc_blade = lane_stream(pkt_blade, 0)
         acc_write = lane_stream(pkt_write, 0)
-        acc_evict = lane_stream(pkt_evict, 0)
+        acc_type = lane_stream(pkt_type, 0)
         acc_w0 = lane_stream(w0[slot_of_pkt], words)  # dummy -> pad words
+        # Directory-eviction packets carry no page; accesses and
+        # blade-cache eviction packets address (dense page) - (slot w0).
         rw_val = np.where(
-            pkt_evict == 1, 0,
+            pkt_type == 1, 0,
             (pkt_dense >> 5) - w0[slot_of_pkt].astype(np.int64)).astype(np.int32)
-        bit_val = np.where(pkt_evict == 1, 0, pkt_dense & 31).astype(np.int32)
+        bit_val = np.where(pkt_type == 1, 0, pkt_dense & 31).astype(np.int32)
         acc_rw = lane_stream(rw_val, 0)
         acc_bit = lane_stream(bit_val, 0)
         acc_valid = np.zeros((g, l_dev), bool)
@@ -759,7 +932,7 @@ class BatchedDataPlane:
             jnp.asarray(np.int32(sched.num_waves)),
             jnp.asarray(acc_slot), jnp.asarray(acc_blade),
             jnp.asarray(acc_write), jnp.asarray(acc_valid),
-            jnp.asarray(acc_evict),
+            jnp.asarray(acc_type),
             jnp.asarray(acc_w0), jnp.asarray(acc_rw), jnp.asarray(acc_bit),
             jnp.asarray(dirrows), jnp.asarray(cm_dev), jnp.asarray(planes))
         (dir_o, planes_o, fac_o, acnt_o, stats_o, flags_o, invals_o) = map(
@@ -775,6 +948,12 @@ class BatchedDataPlane:
         for gg in range(g):
             merged |= planes_o[gg, :, :words] & own[gg, :words]
         state.planes = merged
+        if host_clears:
+            hb = np.array([b for b, _ in host_clears], np.int64)
+            hp = np.array([p for _, p in host_clears], np.int64)
+            hm = ~(np.uint32(1) << (hp & 31).astype(np.uint32)).view(np.int32)
+            for rowbase in (hb, nb + hb):  # presence plane, dirty plane
+                np.bitwise_and.at(state.planes, (rowbase, hp >> 5), hm)
 
         # ---- write-back: directory entries + per-region epoch stats ---
         dir_n = dir_o[lane_idx, local_idx]
@@ -823,9 +1002,11 @@ class BatchedDataPlane:
         # The lanes emitted per-access action words; queueing delay
         # depends on the original cross-lane interleaving, so rebuild it
         # here (NetworkModel.latency, vectorized over the chunk).
-        # Eviction packets charge no latency (the scalar drain is free)
-        # and are filtered back out of the stream first.
-        npkt = len(pkt_rows)
+        # Eviction packets (directory and blade-cache alike) charge no
+        # latency — the scalar drain and BladePageCache.insert's
+        # write-back are both free in NetworkModel terms — and are
+        # filtered back out of the stream first.
+        npkt = len(slot_of_pkt)
         vmask = sched.acc_valid
         posm = sched.acc_index[vmask]
         flags_all = np.empty(npkt, np.int32)

@@ -15,6 +15,16 @@ batch access count, each placed on the least-loaded lane, which keeps
 the hottest (most serialized) regions on separate lanes and bounds the
 wave count by the hottest region's access count rather than the batch
 size.
+
+Eviction packets ride the same machinery: a *directory* capacity
+eviction is a packet of the victim region's slot, and a *blade-cache*
+eviction is a packet of the slot of the active region covering the
+victim page — so each serializes, in stream order, against every access
+and invalidation that could observe the state it mutates.  Overlapping
+regions (possible after capacity evictions re-cover split children at a
+coarser granularity) share cache-plane bits, so the engine passes them
+as one scheduling *group* via ``group_of_slot`` and they are pinned to
+one lane rather than racing across lanes.
 """
 
 from __future__ import annotations

@@ -1,6 +1,6 @@
 """Dense-array views of the switch state for the batched data plane.
 
-Three exports bridge the Python control plane and the device pipeline:
+Four exports bridge the Python control plane and the device pipeline:
 
 * :class:`RegionTable` — the cache directory as parallel arrays sorted by
   region base, plus (when capacity evictions have left *overlapping*
@@ -8,6 +8,11 @@ Three exports bridge the Python control plane and the device pipeline:
 * :class:`PageMap` — a dense page index over the VA ranges the trace can
   touch, so per-blade cache presence/dirty state lives in flat numpy
   planes instead of per-blade ``OrderedDict``s.
+* :class:`BladeCacheShadow` — per-blade page *recency* tracking alongside
+  the packed presence/dirty planes: a host-side LRU mirror over the
+  dense page index, consumed by the engine's cache-occupancy pre-pass to
+  place blade-cache capacity evictions exactly where the scalar
+  ``BladePageCache`` fires them.
 * :class:`DataPlaneState` — the combination, plus the translate/protect
   match-action tables from ``InNetworkMMU.export_dataplane_tables``.
 
@@ -35,6 +40,7 @@ Export-layout invariants:
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -236,6 +242,80 @@ def build_page_map(segs: list[tuple[int, int, int]]) -> PageMap:
         run_ends=np.array(run_e, np.int64),
         run_dense=np.array(run_d, np.int64),
     )
+
+
+# --------------------------------------------------------------------- #
+class BladeCacheShadow:
+    """Host-side LRU mirror of one blade's page cache over *dense* page
+    indices — the per-page recency state the packed presence/dirty
+    planes cannot carry (LRU order is order-dependent by definition,
+    exactly like the directory's recency lists).
+
+    The engine's cache-occupancy pre-pass walks each chunk's packet
+    stream against these shadows to decide exactly where capacity
+    evictions fire and whether each victim is a dirty write-back,
+    mirroring the scalar :class:`~repro.core.cache.BladePageCache`'s
+    strict-LRU ``insert``.  ``pages`` maps dense page -> dirty in LRU
+    order (coldest first); ``words`` buckets cached pages by plane word
+    (``page >> 5``) so a region-invalidation drop costs time
+    proportional to the region's word span, not the cache occupancy —
+    the host analogue of the device kernel's masked word-clear.
+    """
+
+    __slots__ = ("capacity_pages", "pages", "words")
+
+    def __init__(self, capacity_pages: int):
+        self.capacity_pages = max(1, int(capacity_pages))
+        self.pages: "OrderedDict[int, bool]" = OrderedDict()
+        self.words: dict[int, set] = {}
+
+    def insert_or_touch(self, page: int, dirty: bool):
+        """Requester-side data movement for one access: refresh recency
+        (and ``dirty |= w``) when the page is present, else evict LRU
+        victims down to capacity and insert.  Returns the
+        ``(victim_page, victim_was_dirty)`` evictions, coldest first —
+        empty for the no-eviction common case."""
+        od = self.pages
+        if page in od:
+            if dirty:
+                od[page] = True
+            od.move_to_end(page)
+            return ()
+        evicted = []
+        while len(od) >= self.capacity_pages:
+            vp, vd = od.popitem(last=False)
+            bucket = self.words[vp >> 5]
+            bucket.discard(vp)
+            if not bucket:
+                del self.words[vp >> 5]
+            evicted.append((vp, vd))
+        od[page] = bool(dirty)
+        self.words.setdefault(page >> 5, set()).add(page)
+        return evicted
+
+    def drop_range(self, p0: int, p1: int) -> None:
+        """An invalidation multicast hit this blade: drop every cached
+        page in the dense span ``[p0, p1)`` (the membership effect of
+        ``BladePageCache.invalidate_region``; the device kernel does the
+        matching popcount accounting)."""
+        if p1 <= p0 or not self.pages:
+            return
+        od = self.pages
+        words = self.words
+        for wkey in range(p0 >> 5, ((p1 - 1) >> 5) + 1):
+            bucket = words.get(wkey)
+            if not bucket:
+                continue
+            doomed = [p for p in bucket if p0 <= p < p1]
+            for p in doomed:
+                del od[p]
+                bucket.discard(p)
+            if not bucket:
+                del words[wkey]
+
+    @property
+    def occupancy(self) -> int:
+        return len(self.pages)
 
 
 # --------------------------------------------------------------------- #

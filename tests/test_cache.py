@@ -1,0 +1,97 @@
+"""BladePageCache behaviour: strict LRU, eviction order, and the
+shadow structure the batched engine's cache-occupancy pre-pass replays.
+
+The cache is *strict LRU* (not CLOCK — see the module docstring of
+src/repro/core/cache.py): every touch/insert/dirtying moves the page to
+the MRU end, and capacity eviction pops the LRU end.  ``lru_pages()``
+exposes that order coldest-first; the pre-pass's
+``BladeCacheShadow`` must evict the exact same victims in the exact
+same order, which is what makes batched cache-eviction replay exact.
+"""
+
+import numpy as np
+
+from repro.core.cache import BladePageCache
+from repro.core.types import PAGE_SIZE, EpochStats
+from repro.dataplane.tables import BladeCacheShadow
+
+
+def _pg(i: int) -> int:
+    return i * PAGE_SIZE
+
+
+def test_lru_pages_exposes_eviction_order():
+    c = BladePageCache(0, 4 * PAGE_SIZE)
+    for i in range(4):
+        c.insert(_pg(i), dirty=(i % 2 == 1))
+    assert [p for p, _ in c.lru_pages()] == [_pg(0), _pg(1), _pg(2), _pg(3)]
+    # A touch refreshes recency; mark_dirty does too.
+    c.touch(_pg(0))
+    c.mark_dirty(_pg(1))
+    assert [p for p, _ in c.lru_pages()] == [_pg(2), _pg(3), _pg(0), _pg(1)]
+    assert dict(c.lru_pages())[_pg(1)] is True
+    # Evictions consume lru_pages() front-to-back.
+    expected_victims = [p for p, _ in c.lru_pages()]
+    for j, vp in enumerate(expected_victims):
+        c.insert(_pg(100 + j), dirty=False)
+        assert vp not in c.pages
+    assert c.evicted_dirty == 2 and c.evicted_clean == 2
+
+
+def test_insert_returns_dirty_writebacks_and_counts_stats():
+    c = BladePageCache(0, 2 * PAGE_SIZE)
+    c.stats = EpochStats()
+    assert c.insert(_pg(0), dirty=True) == 0
+    assert c.insert(_pg(1), dirty=False) == 0
+    # Evicts page 0 (dirty) -> one write-back reported.
+    assert c.insert(_pg(2), dirty=False) == 1
+    # Evicts page 1 (clean) -> no write-back.
+    assert c.insert(_pg(3), dirty=False) == 0
+    assert (c.evicted_dirty, c.evicted_clean) == (1, 1)
+    assert (c.stats.evicted_dirty, c.stats.evicted_clean) == (1, 1)
+
+
+def test_shadow_matches_bladepagecache_eviction_order(rng):
+    """Oracle test backing the pre-pass: drive BladePageCache and
+    BladeCacheShadow with the same access/invalidation stream and
+    require identical membership, LRU order and eviction events."""
+    cap = 6
+    c = BladePageCache(0, cap * PAGE_SIZE)
+    s = BladeCacheShadow(cap)
+    shadow_evicted: list = []
+    oracle_evicted: list = []
+    for step in range(2000):
+        if step % 97 == 13:  # region invalidation drops a page range
+            base = int(rng.integers(0, 24))
+            length = int(rng.integers(1, 8))
+            c.invalidate_region(_pg(base), length * PAGE_SIZE, None)
+            s.drop_range(base, base + length)
+            continue
+        page = int(rng.integers(0, 32))
+        dirty = bool(rng.integers(0, 2))
+        before = dict(c.pages)
+        flushed = c.insert(_pg(page), dirty)
+        evicted = [p for p in before if p not in c.pages]
+        oracle_evicted += [(p // PAGE_SIZE, before[p]) for p in evicted]
+        assert flushed == sum(1 for p in evicted if before[p])
+        shadow_evicted += list(s.insert_or_touch(page, dirty))
+        assert sorted(s.pages) == sorted(p // PAGE_SIZE for p in c.pages)
+        assert [p // PAGE_SIZE for p, _ in c.lru_pages()] == list(s.pages)
+        assert [d for _, d in c.lru_pages()] == list(s.pages.values())
+    assert oracle_evicted == shadow_evicted
+    assert shadow_evicted  # the stream actually exercised evictions
+
+
+def test_shadow_word_index_stays_consistent():
+    s = BladeCacheShadow(4)
+    for p in (0, 31, 32, 95):
+        s.insert_or_touch(p, False)
+    assert s.occupancy == 4
+    s.drop_range(0, 33)  # drops 0, 31, 32 across two words
+    assert sorted(s.pages) == [95]
+    assert set(s.words) == {2}
+    # Eviction cleans the word buckets too.
+    for p in (1, 2, 3, 4):
+        s.insert_or_touch(p, False)
+    assert 95 not in s.pages and sorted(s.pages) == [1, 2, 3, 4]
+    assert all(all(q in s.pages for q in b) for b in s.words.values())

@@ -1,13 +1,14 @@
 """Batched data-plane engine vs the scalar emulator oracle.
 
-The contract (ISSUE 1, extended by ISSUE 2): the batched engine must
-produce *identical* coherence statistics and runtimes for every mind*
-system — including traces with directory capacity evictions (regions >
-``max_directory_entries``) and Bounded-Splitting epochs, whose
-boundaries the engine lands on exactly; the conflict scheduler must
-serialize same-region packets and keep waves conflict-free; behaviours
-that remain unsupported (blade-cache overflow, systems without a switch
-data plane) must be refused loudly rather than silently diverging.
+The contract (ISSUE 1, extended by ISSUEs 2 and 3): the batched engine
+must produce *identical* coherence statistics and runtimes for every
+mind* system — including traces with directory capacity evictions
+(regions > ``max_directory_entries``), blade page-cache capacity
+evictions (working set > a blade's cache) and Bounded-Splitting epochs,
+whose boundaries the engine lands on exactly; the conflict scheduler
+must serialize same-region packets and keep waves conflict-free; the
+behaviours that remain unsupported (systems without a switch data
+plane) must be refused loudly rather than silently diverging.
 """
 
 import numpy as np
@@ -24,7 +25,7 @@ from repro.dataplane.tables import build_page_map
 STAT_FIELDS = (
     "accesses", "local_hits", "remote_fetches", "invalidations",
     "invalidated_pages", "false_invalidated_pages", "flushed_pages",
-    "faults",
+    "evicted_dirty", "evicted_clean", "faults",
 )
 
 
@@ -259,10 +260,81 @@ def test_region_table_exports_recency():
     assert d.lru_keys()[-1] == coldest
 
 
-def test_batched_rejects_cache_overflow():
+# --------------------------------------------------------------------- #
+# Blade page-cache capacity evictions (ISSUE 3): the last working-set
+# refusal is gone — cache-evicting traces replay batched with exact
+# scalar parity via the cache-occupancy pre-pass + eviction packets.
+# --------------------------------------------------------------------- #
+def test_cache_overflow_refusal_is_gone():
+    """A working set far beyond the blade caches replays on
+    engine='batched' instead of raising UnsupportedByBatchedEngine."""
     trace = _uniform_trace()
     rack = DisaggregatedRack(system="mind", num_compute_blades=2,
                              threads_per_blade=2, engine="batched",
+                             splitting_enabled=False,
                              cache_bytes_per_blade=1 << 14)
-    with pytest.raises(UnsupportedByBatchedEngine):
-        rack.run(trace)
+    r = rack.run(trace)
+    assert r.engine == "batched"
+    assert r.stats.evicted_clean + r.stats.evicted_dirty > 0
+
+
+@pytest.mark.parametrize("system", ["mind", "mind-pso"])
+def test_batched_cache_eviction_parity(system):
+    """ISSUE 3 acceptance: per-blade working set >> blade page cache,
+    mixed reads/writes so both dirty write-backs (evicted_dirty, and
+    their flushed_pages share) and clean drops (evicted_clean) fire —
+    stats, runtime and the latency breakdown identical to scalar."""
+    trace = _zipf_trace()
+    for cache_bytes in (1 << 14, 1 << 15):  # 4 and 8 pages per blade
+        rs, rb = _pair(system, trace, cache_bytes_per_blade=cache_bytes)
+        assert rs.stats.evicted_dirty > 0 and rs.stats.evicted_clean > 0
+        for f in STAT_FIELDS:
+            assert getattr(rs.stats, f) == getattr(rb.stats, f), \
+                (cache_bytes, f)
+        np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
+        np.testing.assert_allclose(rb.total_thread_us, rs.total_thread_us,
+                                   rtol=1e-9)
+        for k, v in rs.latency_breakdown_us.items():
+            np.testing.assert_allclose(rb.latency_breakdown_us[k], v,
+                                       rtol=1e-6, err_msg=k)
+
+
+def test_batched_cache_eviction_chunk_and_lane_invariance():
+    """Cache-eviction packets must land in the right lane and survive
+    chunk boundaries: LRU shadow state carries across chunks and the
+    covering-region lane pinning keeps any lane count exact."""
+    trace = _zipf_trace()
+    kw = dict(cache_bytes_per_blade=1 << 14)
+    rs, _ = _pair("mind", trace, **kw)
+    for opts in ({"chunk_size": 64}, {"chunk_size": 7}, {"lanes": 1},
+                 {"lanes": 8}):
+        rb = DisaggregatedRack(
+            system="mind", num_compute_blades=2, threads_per_blade=2,
+            splitting_enabled=False, engine="batched", engine_options=opts,
+            **kw).run(trace)
+        for f in STAT_FIELDS:
+            assert getattr(rs.stats, f) == getattr(rb.stats, f), (opts, f)
+        np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
+
+
+def test_batched_cache_plus_directory_capacity_multi_epoch_parity():
+    """The full pressure cocktail — directory SRAM evictions, blade
+    page-cache evictions and Bounded-Splitting epochs in one trace —
+    stays stat-identical for any chunk size."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=600, store_mb=4, seed=7)
+    kw = dict(num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=120, epoch_us=4000.0,
+              cache_bytes_per_blade=1 << 16)
+    rs = DisaggregatedRack(system="mind", engine="scalar",
+                           splitting_enabled=True, **kw).run(trace)
+    assert rs.stats.evicted_dirty + rs.stats.evicted_clean > 0
+    for chunk in (32768, 97):
+        rb = DisaggregatedRack(
+            system="mind", engine="batched", splitting_enabled=True,
+            engine_options={"chunk_size": chunk}, **kw).run(trace)
+        for f in STAT_FIELDS:
+            assert getattr(rs.stats, f) == getattr(rb.stats, f), (chunk, f)
+        assert len(rs.epoch_reports) == len(rb.epoch_reports)
+        assert rs.directory_timeline == rb.directory_timeline
+        np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
