@@ -85,14 +85,35 @@ class CoherenceEngine:
     # Allocation hook (§4.4 'Pre-populating cache directory entries').
     # ------------------------------------------------------------------ #
     def prepopulate(self, base: int, length: int, owner_blade: int) -> None:
+        d = self.directory
+        lg = d.initial_region_log2
+        step = 1 << lg
+        end = base + length
+        me = 1 << owner_blade
+        shift = d.VA_BUCKET_LOG2
+        va_high = d.va_high
         addr = base
-        while addr < base + length:
-            e = self.directory.get_or_create(addr)
-            e.state = MSIState.M
-            e.owner = owner_blade
-            e.sharers = 1 << owner_blade
-            self._prepopulated.add((e.base, e.size_log2))
-            addr = e.end
+        while addr < end:
+            b0 = align_down(addr, step)
+            if b0 >= va_high.get(b0 >> shift, 0):
+                # Fresh VA beyond every region installed in this blade's
+                # VA bucket: the window provably misses at every lookup
+                # level, so install directly — same install order, clock
+                # ticks and recency-list state as the probing path,
+                # minus the per-window probe.
+                e = d._install(b0, lg)
+                e.state = MSIState.M
+                e.owner = owner_blade
+                e.sharers = me
+                self._prepopulated.add((b0, lg))
+                addr = b0 + step
+            else:
+                e = d.get_or_create(addr)
+                e.state = MSIState.M
+                e.owner = owner_blade
+                e.sharers = me
+                self._prepopulated.add((e.base, e.size_log2))
+                addr = e.end
 
     # ------------------------------------------------------------------ #
     # The data-plane access path.

@@ -55,7 +55,7 @@ DEFAULT_MAX_REGION_LOG2 = 21  # M = 2 MB (512 pages), as in the paper's Fig. 10
 DEFAULT_INITIAL_REGION_LOG2 = 14  # 16 KB default initial region (§5, §7)
 
 
-@dataclass
+@dataclass(slots=True)
 class RegionStats:
     """Per-entry counters for the current epoch (feeds Bounded Splitting)."""
 
@@ -66,6 +66,8 @@ class RegionStats:
 
 class CacheDirectory:
     """Control-plane + data-plane view of the region directory."""
+
+    VA_BUCKET_LOG2 = 36  # = the default 64 GB per-blade VA span
 
     def __init__(
         self,
@@ -90,6 +92,15 @@ class CacheDirectory:
         # to come back).
         self._lru: "OrderedDict[tuple[int, int], None]" = OrderedDict()
         self._ilru: "OrderedDict[tuple[int, int], None]" = OrderedDict()
+        # Per-bucket high-water marks of installed region ends: an
+        # address at or beyond its bucket's mark provably misses at
+        # every level (regions are pow2-sized, naturally aligned and
+        # <= 2**max_region_log2 <= the bucket size, so none crosses a
+        # bucket boundary), which lets bulk installs over fresh vmas
+        # (prepopulation) skip the per-window lookup probe.  Buckets
+        # match the per-blade VA spans of the global address space.
+        assert max_region_log2 <= self.VA_BUCKET_LOG2
+        self.va_high: dict[int, int] = {}
         # Telemetry for Fig. 9 (left) and §7.2.
         self.peak_entries = 0
         self.capacity_evictions = 0
@@ -148,6 +159,10 @@ class CacheDirectory:
                            sharers=sharers, owner=owner)
         key = (base, log2)
         self.entries[key] = e
+        end = base + (1 << log2)
+        bucket = base >> self.VA_BUCKET_LOG2
+        if end > self.va_high.get(bucket, 0):
+            self.va_high[bucket] = end
         self._clock += 1
         self.stats[key] = RegionStats(last_touch=self._clock)
         self._lru[key] = None

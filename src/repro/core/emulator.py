@@ -55,6 +55,10 @@ class EmulationResult:
     transition_latencies: dict[str, list[float]] = field(default_factory=dict)
     total_thread_us: float = 0.0  # sum of all per-thread clock time
     engine: str = "scalar"  # which data-plane engine produced this result
+    # Wall-clock seconds per engine phase (batched engine only): host
+    # pre-passes / scheduling / device replay / latency reconstruction /
+    # epoch control — the per-phase perf trajectory BENCH_*.json tracks.
+    phase_times: dict = field(default_factory=dict)
 
     @property
     def mean_access_us(self) -> float:

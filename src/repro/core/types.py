@@ -75,7 +75,7 @@ class MemAccess:
     access: AccessType
 
 
-@dataclass
+@dataclass(slots=True)
 class DirectoryEntry:
     """One region's coherence entry (lives in switch SRAM in the paper)."""
 

@@ -30,19 +30,20 @@ are accumulated as ``jnp`` reductions and assembled into the same
 so the scalar engine remains the reference oracle (see
 tests/test_dataplane.py for the parity suite).
 
-Directory SRAM capacity evictions, blade page-cache capacity evictions
-and Bounded-Splitting epochs all replay with exact stat parity: a
-host-side residency pre-pass walks pressure chunks against the
-directory's O(1) LRU structure, a cache-occupancy pre-pass walks the
-packet stream against per-blade LRU shadows
-(:class:`~repro.dataplane.tables.BladeCacheShadow`), both inject
-*eviction packets* into the device stream, and chunk sizing is bounded
-so epoch boundaries land on exactly the access the scalar oracle fires
-them at (see :mod:`repro.dataplane.engine`).  The engine still refuses
-(raises :class:`UnsupportedByBatchedEngine`) the behaviours that stay
-scalar-engine-only — systems without a switch data plane (gam,
-fastswap) and the ``downgrade_keeps_copy`` variant — instead of
-silently diverging from the oracle.
+Directory SRAM capacity evictions, blade page-cache capacity
+evictions, the ``downgrade_keeps_copy`` variant and Bounded-Splitting
+epochs all replay with exact stat parity: a host-side residency
+pre-pass resolves pressure chunks against the directory's O(1) LRU
+structure, a vectorized cache-occupancy pre-pass (segmented-scan MSI
+decode + per-blade fast/slow LRU replay over
+:class:`~repro.dataplane.tables.BladeCacheShadow`) places blade-cache
+evictions, both inject *eviction packets* into the device stream, and
+speculate-and-truncate chunking lands epoch boundaries on exactly the
+access the scalar oracle fires them at (see
+:mod:`repro.dataplane.engine`).  The engine still refuses (raises
+:class:`UnsupportedByBatchedEngine`) the behaviours that stay
+scalar-engine-only — the systems without a switch data plane (gam,
+fastswap) — instead of silently diverging from the oracle.
 """
 
 from repro.dataplane.engine import BatchedDataPlane, UnsupportedByBatchedEngine

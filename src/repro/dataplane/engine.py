@@ -61,25 +61,41 @@ write-backs — scalar parity), and ``evicted_dirty`` / ``evicted_clean``
 / the write-back share of ``flushed_pages`` are accounted from the
 pre-pass, which knows each victim exactly.
 
-**Epoch boundaries are exact.**  Bounded-Splitting epochs fire when the
-mean thread clock crosses ``epoch_us`` — a per-access condition in the
-scalar loop.  The engine bounds each chunk so the crossing access is
-always the *last* access of its chunk (a worst-case per-access latency
-bound shrinks the chunk as the boundary approaches, down to single-access
-chunks at the boundary itself), so split/merge passes run at exactly the
-access the scalar oracle runs them at.  The one remaining timing
-approximation: traces containing protection faults charge all fault
-latencies up front (as the seed engine did), so epoch timing on faulting
-traces can lead the scalar engine's.
+**Epoch boundaries are exact** — via *speculate-and-truncate* chunking.
+Bounded-Splitting epochs fire when the mean thread clock crosses
+``epoch_us``, a per-access condition in the scalar loop.  Near a
+boundary the engine replays a chunk sized from the observed per-access
+charge model (not the worst-case bound, which would collapse to
+single-access chunks), locates the exact crossing access from the
+materialized charges with the scalar oracle's own arithmetic, and
+truncates: fast-path chunks defer every host mutation into a commit
+closure that mis-speculation simply discards; pre-pass chunks
+speculate under a full snapshot and roll back.  Split/merge passes
+therefore run at exactly the access the scalar oracle runs them at
+(see docs/ARCHITECTURE.md).  The one remaining timing approximation:
+traces containing protection faults charge all fault latencies up
+front (as the seed engine did), so epoch timing on faulting traces can
+lead the scalar engine's.
 
-The engine still *refuses* (raises :class:`UnsupportedByBatchedEngine`)
-when the modelled system has no switch data plane (gam/fastswap) or
-uses the scalar-only ``downgrade_keeps_copy`` variant.
+The cache-occupancy pre-pass is vectorized: per-packet invalidation
+targets come from a segmented-scan MSI decode (cache-independent state
+evolution), and each blade's LRU shadow is caught up with one NumPy
+pass whenever the chunk (or a drop-free run inside it) provably cannot
+evict there; only contended stretches walk packet-by-packet.  The
+sequential walk survives as the property-tested oracle
+(tests/test_prepass.py).
+
+The beyond-paper ``downgrade_keeps_copy`` variant replays batched as
+well (the kernel keeps the downgraded owner's presence bits, flushes
+its dirty bits, and leaves it a sharer).  The engine still *refuses*
+(raises :class:`UnsupportedByBatchedEngine`) only when the modelled
+system has no switch data plane (gam/fastswap).
 """
 
 from __future__ import annotations
 
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +117,7 @@ _KINDS = ("I->S", "I->M", "S->S", "S->M", "M->M", "M->S")
 # --------------------------------------------------------------------- #
 # Stage 3: the fused directory/cache wave loop.
 # --------------------------------------------------------------------- #
-def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
+def _lane_replay(nwaves, dkc, slot, blade, write, valid, ptype, w0, rw, bit,
                  dirrows, cmask, planes):
     """Replay one lane's waves sequentially (vmapped across lanes).
 
@@ -131,16 +147,21 @@ def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
     """
     L = slot.shape[0]
     NB = planes.shape[0] // 2
-    stats = jnp.zeros((7,), jnp.int32)
-    fac = jnp.zeros((dirrows.shape[0],), jnp.int32)
-    acnt = jnp.zeros((dirrows.shape[0],), jnp.int32)
-    flags = jnp.zeros((L,), jnp.int32)
-    invals = jnp.zeros((L,), jnp.int32)
+    # Three packed per-packet output words instead of five scatter
+    # targets (int32 — this build runs JAX in 32-bit mode):
+    # w1 = action flags (7 bits) | invalidation mask << 7
+    # w2 = nfalse | dropped << 15      w3 = flushed
+    # EpochStats totals and the per-region Bounded-Splitting counters are
+    # reduced from these on the host, which keeps the wave loop's carry
+    # and per-wave scatter count minimal.
+    w1 = jnp.zeros((L,), jnp.int32)
+    w2 = jnp.zeros((L,), jnp.int32)
+    w3 = jnp.zeros((L,), jnp.int32)
     blades_iota = jax.lax.broadcasted_iota(jnp.int32, (NB,), 0)
     span = cmask.shape[1]
 
     def body(i, c):
-        dirrows, planes, fac, acnt, stats, flags, invals = c
+        dirrows, planes, w1, w2, w3 = c
         s = slot[i]
         b = blade[i]
         w = write[i]
@@ -178,8 +199,13 @@ def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
         seq = m_other  # owner flush precedes the fetch (M->S / M->M)
         par = is_s & wr & (others != 0)  # multicast overlaps the fetch
         new_st = jnp.where(wr | (is_m & is_ow), jnp.int32(2), jnp.int32(1))
+        # downgrade_keeps_copy: the M->S downgrade leaves a read-only
+        # copy at the old owner, who therefore stays a sharer.
+        down = dkc & m_other & ~wr & ~ev & ~cev
+        down_sh = me | (jnp.int32(1) << jnp.maximum(cow, 0))
         new_sh = jnp.where(is_m & is_ow, csh,
-                           jnp.where(is_s & ~wr, csh | me, me))
+                           jnp.where(is_s & ~wr, csh | me,
+                                     jnp.where(down, down_sh, me)))
         new_ow = jnp.where(is_m & is_ow, cow,
                            jnp.where(wr, b, jnp.int32(-1)))
         new_pp = jnp.where(m_other | (is_s & wr), jnp.int32(0), cpp)
@@ -196,16 +222,17 @@ def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
         inval = jnp.where(ev, ev_targets, jnp.where(cev, 0, inval))
 
         # ---- egress multicast: invalidation + false-inval accounting -
+        # A downgrade flushes (dirty popcount into flushed_pages) but
+        # drops nothing: presence bits survive, no false invalidations.
         sel = ((inval >> blades_iota) & 1) == 1  # [NB]
         pcnt = jax.lax.population_count(win_p & mask[None, :]).sum(axis=-1)
         dcnt = jax.lax.population_count(win_d & mask[None, :]).sum(axis=-1)
         # An eviction has no requesting page: every dropped page is false.
         reqb = jnp.where(ev, 0, (win_p[:, rwi] >> biti) & 1)
-        dropped = jnp.sum(jnp.where(sel, pcnt, 0))
+        dropped = jnp.where(down, 0, jnp.sum(jnp.where(sel, pcnt, 0)))
         flushed = jnp.sum(jnp.where(sel, dcnt, 0))
-        nfalse = jnp.sum(jnp.where(sel, pcnt - reqb, 0))
-        ninv = jnp.sum(sel.astype(jnp.int32))
-        win_p = jnp.where(sel[:, None], win_p & ~mask[None, :], win_p)
+        nfalse = jnp.where(down, 0, jnp.sum(jnp.where(sel, pcnt - reqb, 0)))
+        win_p = jnp.where(sel[:, None] & ~down, win_p & ~mask[None, :], win_p)
         win_d = jnp.where(sel[:, None], win_d & ~mask[None, :], win_d)
 
         # ---- requester-side data movement (accesses only), or the
@@ -221,7 +248,6 @@ def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
 
         # ---- write-back (fused recirculation) ------------------------
         vi = v.astype(jnp.int32)
-        acci = jnp.where(ev | cev, 0, vi)  # eviction packets: not accesses
         newwin = jnp.where(v, jnp.concatenate([win_p, win_d], axis=0), win)
         planes = jax.lax.dynamic_update_slice(planes, newwin, (0, w0i))
         freed = jnp.stack([jnp.int32(0), jnp.int32(0), jnp.int32(-1),
@@ -231,32 +257,27 @@ def _lane_replay(nwaves, slot, blade, write, valid, ptype, w0, rw, bit,
         newrow = jnp.where(cev, drow, newrow)  # cache evictions: row as-is
         newrow = jnp.where(v, newrow, drow)
         dirrows = jax.lax.dynamic_update_slice(dirrows, newrow[None], (s, 0))
-        # A re-install after eviction starts with fresh epoch counters.
-        evi = ev & v
-        fac = fac.at[s].set(jnp.where(evi, 0, fac[s] + nfalse * acci))
-        acnt = acnt.at[s].set(jnp.where(evi, 0, acnt[s] + acci))
-        stats = stats + vi * jnp.stack(
-            [acci, hit.astype(jnp.int32) * acci,
-             (~hit).astype(jnp.int32) * acci,
-             ninv, dropped, flushed, nfalse])
-        word_out = (
+        word1 = (
             hit.astype(jnp.int32)
             | (fetch.astype(jnp.int32) << 1)
             | (seq.astype(jnp.int32) << 2)
             | (par.astype(jnp.int32) << 3)
-            | (kind << 4))
-        flags = flags.at[i].set(word_out)
-        invals = invals.at[i].set(jnp.where(ev | cev, 0, inval))
-        return (dirrows, planes, fac, acnt, stats, flags, invals)
+            | (kind << 4)
+            | (inval << 7))
+        word2 = nfalse | (dropped << 15)
+        w1 = w1.at[i].set(vi * word1)
+        w2 = w2.at[i].set(vi * word2)
+        w3 = w3.at[i].set(vi * flushed)
+        return (dirrows, planes, w1, w2, w3)
 
-    init = (dirrows, planes, fac, acnt, stats, flags, invals)
+    init = (dirrows, planes, w1, w2, w3)
     # Traced upper bound: streams are padded to a pow2 compile bucket,
     # but only the first `nwaves` of them are real packets.
     return jax.lax.fori_loop(0, jnp.minimum(nwaves, L), body, init)
 
 
 _replay = jax.jit(jax.vmap(
-    _lane_replay, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)))
+    _lane_replay, in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)))
 
 
 def _popcount32(a: np.ndarray) -> int:
@@ -267,17 +288,35 @@ def _popcount32(a: np.ndarray) -> int:
 class BatchedDataPlane:
     """Batched replay engine bound to one DisaggregatedRack."""
 
-    def __init__(self, rack, chunk_size: int = 32768, lanes: int = 4):
+    def __init__(self, rack, chunk_size: int = 65536,
+                 lanes: int | None = None):
         if rack.system not in ("mind", "mind-pso", "mind-pso+"):
             raise UnsupportedByBatchedEngine(
                 f"batched engine models the in-network MMU; {rack.system!r} "
                 "has no switch data plane — use engine='scalar'")
-        if rack.mmu.engine.downgrade_keeps_copy:
+        # The packed int32 kernel output words bound the configuration:
+        # w1 carries the invalidation mask at bits 7..30 (<= 24 blades)
+        # and w2 packs two 15-bit page counts, each bounded by one
+        # multicast's worst case (all other blades dropping a full
+        # max-size region).  Refuse loudly instead of overflowing.
+        nb = rack.nb
+        lg = rack.mmu.engine.directory.max_region_log2
+        if nb > 24 or nb * (1 << (lg - PAGE_SHIFT)) >= 1 << 15:
             raise UnsupportedByBatchedEngine(
-                "downgrade_keeps_copy is a scalar-engine-only variant")
+                f"packed kernel outputs support <= 24 compute blades and "
+                f"blades * max-region-pages < 2^15; got {nb} blades with "
+                f"2^{lg - PAGE_SHIFT} pages/region — use engine='scalar'")
         self.rack = rack
         self.chunk_size = int(chunk_size)
-        self.lanes = int(lanes)
+        # None = auto: per chunk, as many lanes as the serialization
+        # floor (the hottest region's packet share) can actually fill.
+        self.lanes = None if lanes is None else int(lanes)
+        # M->S downgrades keep a read-only copy at the old owner; the
+        # kernel and both pre-passes model it, so no refusal needed.
+        self._dkc = bool(rack.mmu.engine.downgrade_keeps_copy)
+        # Wall-clock per engine phase of the last run() — the perf
+        # trajectory benchmarks persist into BENCH_*.json.
+        self.phase_times: dict[str, float] = {}
         self._rt = None  # sorted RegionTable cache (fast-path lookup)
         # Persistent device table for the capacity-pressure regime:
         # unsorted rows (live + evicted) keyed by `keys`/`_row_of`, kept
@@ -295,7 +334,15 @@ class BatchedDataPlane:
         from repro.core.emulator import EmulationResult
 
         rack = self.rack
+        self.phase_times = {k: 0.0 for k in (
+            "arena_setup", "state_build", "stage12_tcam",
+            "residency_prepass", "cache_prepass", "schedule", "device",
+            "merge_writeback", "latency_reconstruct", "epoch_control",
+            "speculation_overhead")}
+        pt = self.phase_times
+        t0 = time.perf_counter()
         segs = rack._map_arena(trace)
+        t0 = self._tick("arena_setup", t0)
         n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
         nthreads = rack.nb * rack.tpb
         mmu = rack.mmu
@@ -319,6 +366,7 @@ class BatchedDataPlane:
             # Mirror the scalar engine's first-access drain of evictions
             # queued during mmap-time prepopulation (§4.4 overflow).
             self._drain_pending_host(state)
+        t0 = self._tick("state_build", t0)
 
         # Pipeline stages 1+2 over the whole trace: the Pallas TCAM
         # kernels (protection in parallel with translation, §3.2).
@@ -335,6 +383,7 @@ class BatchedDataPlane:
                 raise UnsupportedByBatchedEngine(
                     "trace touches vaddrs outside every blade range")
             faults = ~np.asarray(allow)
+        t0 = self._tick("stage12_tcam", t0)
 
         stats = mmu.engine.stats
         clocks = np.zeros(nthreads, np.float64)
@@ -361,21 +410,147 @@ class BatchedDataPlane:
             breakdown["switch"] += nfaults * switch_us
 
         keep = ~faults
+
+        # Observed per-access charge model from the last committed
+        # chunk: rate `chg_a` now plus growth `chg_g` per access
+        # (queueing delay ramps roughly linearly within an epoch, so a
+        # flat average systematically mis-sizes speculative chunks).
+        chg_a, chg_g = 0.0, 0.0
+
+        def note_avg(charged):
+            nonlocal chg_a, chg_g
+            k = len(charged)
+            if k >= 128:
+                m1 = float(charged[: k // 2].mean())
+                m2 = float(charged[k // 2:].mean())
+                chg_a = m2
+                chg_g = max(0.0, (m2 - m1) / max(1, k // 2))
+            elif k:
+                chg_a = float(charged.mean())
+
+        def est_crossing(gap):
+            """Accesses until the mean clock crosses, under the linear
+            charge-ramp model: gap = a*n + g*n^2/2."""
+            if chg_a <= 0:
+                return 0
+            if chg_g <= 1e-12:
+                return int(gap / chg_a)
+            disc = chg_a * chg_a + 2.0 * chg_g * gap
+            return int((math.sqrt(disc) - chg_a) / chg_g)
+
+        def span(lo, hi):
+            m = keep[lo:hi]
+            if not m.any():
+                return np.zeros(0, np.int64), np.zeros(0, np.float64)
+            charged = self._process_chunk(
+                vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
+                writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
+                breakdown, trans_lat, inflight)
+            note_avg(charged)
+            return np.flatnonzero(m), charged
+
+        def span_defer(lo, hi):
+            m = keep[lo:hi]
+            if not m.any():
+                return (np.zeros(0, np.int64), np.zeros(0, np.float64),
+                        lambda: None)
+            res = self._process_chunk(
+                vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
+                writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
+                breakdown, trans_lat, inflight, defer=True)
+            if res is None:
+                return None
+            charged, commit = res
+            return np.flatnonzero(m), charged, commit
+
+        # Epochs are near-periodic in access count: the previous epoch's
+        # length predicts the next boundary far better than the charge
+        # model right after a queue-resetting boundary.
+        last_epoch_len = 0
+        since_epoch = 0
         lo = 0
         while lo < n:
-            hi = min(n, lo + self._next_chunk_size(clocks, next_epoch_at,
-                                                   inflight))
-            m = keep[lo:hi]
-            if m.any():
-                self._process_chunk(
-                    vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
-                    writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
-                    breakdown, trans_lat, inflight)
+            full = min(self.chunk_size, n - lo)
+            safe = (self._next_chunk_size(clocks, next_epoch_at, inflight)
+                    if rack.splitting_enabled else full)
+            if safe >= full:
+                span(lo, lo + full)
+                hi = lo + full
+            elif safe <= 1:
+                # At the boundary itself: one access, exactly like the
+                # scalar per-access check.
+                span(lo, lo + 1)
+                hi = lo + 1
+            else:
+                # Speculate-and-truncate (ISSUE 4): the worst-case bound
+                # `safe` collapses to single-access chunks near every
+                # boundary, so instead replay a chunk sized from the
+                # observed mean charge (slightly undershooting so most
+                # speculative chunks commit crossing-free), locate the
+                # exact crossing access from the materialized per-access
+                # charges, and truncate to it.
+                gap = (next_epoch_at - clocks.mean()) * nthreads
+                est = est_crossing(gap) or 2 * safe
+                if last_epoch_len:
+                    est = max(est, last_epoch_len - since_epoch)
+                spec = min(full, max(int(0.95 * est), 64))
+                ts = time.perf_counter()
+                pt_before = dict(pt)
+
+                def discard_phases():
+                    # A discarded speculative replay is pure speculation
+                    # overhead: undo its per-phase attribution so the
+                    # phases trajectory reports the waste where it
+                    # belongs.
+                    waste = time.perf_counter() - ts
+                    for k, v in pt_before.items():
+                        pt[k] = v
+                    pt["speculation_overhead"] += waste
+
+                res = (span_defer(lo, lo + spec)
+                       if self._cache_shadows is None else None)
+                if res is not None:
+                    # Fast-path chunk: all host effects are deferred in
+                    # `commit`, so mis-speculation just discards it.
+                    kept, charged, commit = res
+                    cross = self._exact_crossing(
+                        clocks, threads[lo:lo + spec], kept, charged,
+                        next_epoch_at)
+                    if cross is None or cross == spec - 1:
+                        commit()
+                        note_avg(charged)
+                        hi = lo + spec
+                    else:
+                        discard_phases()
+                        hi = lo + cross + 1
+                        span(lo, hi)  # the exact pre-boundary prefix
+                else:
+                    # Installs / capacity pressure / cache shadows mutate
+                    # state mid-chunk: speculate under a full snapshot.
+                    t1 = time.perf_counter()
+                    snap = self._snapshot(clocks, inflight, breakdown,
+                                          trans_lat)
+                    pt["speculation_overhead"] += time.perf_counter() - t1
+                    kept, charged = span(lo, lo + spec)
+                    cross = self._exact_crossing(
+                        snap["clocks"], threads[lo:lo + spec], kept, charged,
+                        next_epoch_at)
+                    if cross is None or cross == spec - 1:
+                        hi = lo + spec
+                    else:
+                        self._rollback(snap, clocks, inflight, breakdown,
+                                       trans_lat)
+                        discard_phases()
+                        hi = lo + cross + 1
+                        span(lo, hi)  # the exact pre-boundary prefix
+            since_epoch += hi - lo
             # One boundary per check, like the scalar per-access `if` —
             # the exact chunk sizing guarantees the crossing access ended
             # this chunk, so this fires exactly where scalar fires.
             if (rack.splitting_enabled and nthreads
                     and clocks.mean() >= next_epoch_at):
+                last_epoch_len, since_epoch = since_epoch, 0
+                ts = time.perf_counter()
                 rack.cp.maybe_run_epoch(now_us=next_epoch_at)
                 dir_timeline.append(mmu.engine.directory.num_entries())
                 mmu.network.begin_window()
@@ -383,6 +558,7 @@ class BatchedDataPlane:
                 next_epoch_at += rack.epoch_us
                 self._rt = None  # splits/merges re-shape the table
                 self._dtab = None
+                pt["epoch_control"] += time.perf_counter() - ts
             lo = hi
 
         mmu.network._inflight = {
@@ -406,21 +582,132 @@ class BatchedDataPlane:
             transition_latencies=trans_lat,
             total_thread_us=float(clocks.sum()),
             engine="batched",
+            phase_times=dict(self.phase_times),
         )
+
+    # ------------------------------------------------------------------ #
+    def _tick(self, key: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        self.phase_times[key] = self.phase_times.get(key, 0.0) + (t1 - t0)
+        return t1
+
+    # ------------------------------------------------------------------ #
+    # Speculative epoch chunking: snapshot / exact-crossing / rollback.
+    # ------------------------------------------------------------------ #
+    def _snapshot(self, clocks, inflight, breakdown, trans_lat) -> dict:
+        """Capture every piece of state a chunk replay mutates, so a
+        speculative chunk that overshoots the epoch boundary can be
+        rolled back and replayed as the exact pre-boundary prefix."""
+        eng = self.rack.mmu.engine
+        d = eng.directory
+        stats = eng.stats
+        return {
+            "clocks": clocks.copy(),
+            "inflight": inflight.copy(),
+            "breakdown": dict(breakdown),
+            "trans_lens": {k: len(v) for k, v in trans_lat.items()},
+            "stats": {f: getattr(stats, f)
+                      for f in stats.__dataclass_fields__},
+            "entries": {k: (e, e.state, e.sharers, e.owner)
+                        for k, e in d.entries.items()},
+            "dstats": {k: (s, s.false_invalidations, s.accesses,
+                           s.last_touch) for k, s in d.stats.items()},
+            "lru": list(d._lru),
+            "ilru": list(d._ilru),
+            "clock": d._clock,
+            "peak": d.peak_entries,
+            "cap_ev": d.capacity_evictions,
+            "va_high": dict(d.va_high),
+            "pending": list(d.pending_evictions),
+            "prepop": set(eng._prepopulated),
+            "planes": self.state.planes.copy(),
+            "shadows": ([sh.clone() for sh in self._cache_shadows]
+                        if self._cache_shadows is not None else None),
+        }
+
+    def _rollback(self, snap, clocks, inflight, breakdown, trans_lat):
+        eng = self.rack.mmu.engine
+        d = eng.directory
+        stats = eng.stats
+        clocks[:] = snap["clocks"]
+        inflight[:] = snap["inflight"]
+        breakdown.clear()
+        breakdown.update(snap["breakdown"])
+        lens = snap["trans_lens"]
+        for k in list(trans_lat):
+            if k in lens:
+                del trans_lat[k][lens[k]:]
+            else:
+                del trans_lat[k]
+        for f, v in snap["stats"].items():
+            setattr(stats, f, v)
+        d.entries = {}
+        for k, (e, st, sh, ow) in snap["entries"].items():
+            e.state, e.sharers, e.owner = st, sh, ow
+            d.entries[k] = e
+        d.stats = {}
+        for k, (s, fi, acc, lt) in snap["dstats"].items():
+            s.false_invalidations, s.accesses, s.last_touch = fi, acc, lt
+            d.stats[k] = s
+        from collections import OrderedDict
+        d._lru = OrderedDict.fromkeys(snap["lru"])
+        d._ilru = OrderedDict.fromkeys(snap["ilru"])
+        d._clock = snap["clock"]
+        d.peak_entries = snap["peak"]
+        d.capacity_evictions = snap["cap_ev"]
+        d.va_high = snap["va_high"]
+        d.pending_evictions = snap["pending"]
+        eng._prepopulated = snap["prepop"]
+        self.state.planes = snap["planes"]
+        self._cache_shadows = snap["shadows"]
+        self._rt = None
+        self._dtab = None
+        self._row_of = {}
+
+    def _exact_crossing(self, clocks0, threads_chunk, kept, charged,
+                        next_epoch_at):
+        """Position (unfiltered, within the chunk) of the access whose
+        charge first pushes the mean thread clock across the boundary —
+        found with exactly the scalar oracle's arithmetic (per-access
+        ``clocks.mean()``), narrowed first by an approximate prefix sum.
+
+        Returns None when the chunk never crosses."""
+        nthreads = len(clocks0)
+        nk = len(kept)
+        if nthreads == 0 or nk == 0:
+            return None
+        target = next_epoch_at * nthreads
+        csum = clocks0.sum() + np.cumsum(charged)
+        maxc = float(charged.max())
+        if maxc <= 0.0:
+            return None
+        w = 64  # float-error safety window, >> any cumsum rounding
+        if csum[-1] < target - w * maxc:
+            return None
+        start = int(np.searchsorted(csum, target - w * maxc))
+        c = clocks0.copy()
+        tk = threads_chunk[kept]
+        if start > 0:
+            np.add.at(c, tk[:start], charged[:start])
+        for j in range(start, nk):
+            c[tk[j]] += charged[j]
+            if c.mean() >= next_epoch_at:
+                return int(kept[j])
+        return None
 
     # ------------------------------------------------------------------ #
     def _next_chunk_size(self, clocks, next_epoch_at, inflight) -> int:
         """Largest batch guaranteed not to cross the next epoch boundary
-        before its final access.
+        before its final access — the worst-case *floor* under which no
+        speculation bookkeeping is needed at all.
 
         The mean thread clock advances by ``charged / nthreads`` per
         access, and one access can charge at most ``switch + rdma +
         invalidation + tlb + queue_service * (inflight + position)`` us.
         Solving ``(k-1) * bound(k) < gap * nthreads`` for the batch size
-        ``k`` guarantees the crossing access is the batch's last one, so
-        Bounded-Splitting epochs fire at exactly the access the scalar
-        oracle fires them at (single-access batches right at the
-        boundary)."""
+        ``k`` guarantees the crossing access cannot precede the batch's
+        last one.  Chunks beyond this floor speculate and truncate to
+        the exact crossing instead (see ``run``)."""
         if not self.rack.splitting_enabled:
             return self.chunk_size
         nthreads = len(clocks)
@@ -688,8 +975,13 @@ class BatchedDataPlane:
         walk applies the same transitions the kernel applies, including
         the Invalid reset of directory-eviction packets, so the shadow
         decode and the device replay see identical sharer sets.
+
+        This is the *oracle*: the production path is the vectorized
+        decode + per-blade fast/slow split of :meth:`_cache_events`,
+        property-tested byte-identical to this walk.
         """
         shadows = self._cache_shadows
+        dkc = self._dkc
         st = st0.tolist()
         sh = sh0.tolist()
         ow = ow0.tolist()
@@ -721,10 +1013,16 @@ class BatchedDataPlane:
             if stv == 2:
                 o = ow[s]
                 if o != b:
-                    # M at another blade: flush drops the owner's pages.
-                    shadows[o].drop_range(lo[s], hi[s])
+                    if w or not dkc:
+                        # M at another blade: flush drops owner's pages.
+                        shadows[o].drop_range(lo[s], hi[s])
+                    else:
+                        # downgrade_keeps_copy M->S: flush, keep pages.
+                        shadows[o].clean_range(lo[s], hi[s])
                     if w:
                         st[s], sh[s], ow[s] = 2, me, b
+                    elif dkc:
+                        st[s], sh[s], ow[s] = 1, me | (1 << o), -1
                     else:
                         st[s], sh[s], ow[s] = 1, me, -1
             elif w:
@@ -745,8 +1043,244 @@ class BatchedDataPlane:
         return events
 
     # ------------------------------------------------------------------ #
+    def _decode_invals(self, slot_of_pkt, pkt_type, pkt_blade, pkt_write,
+                       st0, sh0, ow0):
+        """Vectorized MSI decode of one chunk's packet stream: the
+        per-packet invalidation-target mask (and, under
+        ``downgrade_keeps_copy``, the downgrade flag), computed without
+        walking the stream in Python.
+
+        Directory state (state/sharers/owner) evolves independently of
+        cache contents — none of the kernel's transition formulas read
+        the presence planes — so per-slot evolution is a segmented scan:
+        every write and every directory-eviction packet *resets* the
+        sharer set, reads *accumulate* into it, and an M phase ends at
+        its first foreign read.  For each packet that invalidates (a
+        write over S, any foreign access over M, an eviction packet) the
+        target mask is reconstructed from per-blade last-read positions
+        — O(P log P + NB*P) instead of a per-packet Python walk.
+        Property-tested equal to the sequential decode of
+        :meth:`_cache_prepass` and to the device kernel's own masks.
+        """
+        P = len(slot_of_pkt)
+        inval = np.zeros(P, np.int64)
+        down = np.zeros(P, bool)
+        if P == 0:
+            return inval, down
+        order = np.argsort(slot_of_pkt, kind="stable")
+        s = slot_of_pkt[order]
+        t = pkt_type[order]
+        b = np.asarray(pkt_blade, np.int64)[order]
+        w = pkt_write[order]
+        idx = np.arange(P, dtype=np.int64)
+        run_start = np.ones(P, bool)
+        run_start[1:] = s[1:] != s[:-1]
+        is_ev = t == 1
+        is_acc = t == 0
+        is_w = is_acc & (w == 1)
+        is_r = is_acc & (w == 0)
+        anchor = run_start | is_w | is_ev
+        seg_id = np.cumsum(anchor) - 1
+        seg_starts = np.flatnonzero(anchor)
+        sfirst = seg_starts
+        seg_is_w = is_w[sfirst]
+        seg_is_ev = is_ev[sfirst]
+        slot_at = s[sfirst]
+        st_i, sh_i, ow_i = st0[slot_at], sh0[slot_at], ow0[slot_at]
+        # Per-segment phase: M with a writer (a write packet, or the
+        # slot's initial M state), else S (I == S with no sharers).
+        seg_writer = np.where(
+            seg_is_w, b[sfirst],
+            np.where(seg_is_ev, -1, np.where(st_i == 2, ow_i, -1)))
+        seg_sh_init = np.where(
+            seg_is_w | seg_is_ev, 0, np.where(st_i == 1, sh_i, 0))
+        writer_of = seg_writer[seg_id]
+        BIG = np.int64(P + 1)
+        cand = np.where(is_r & (writer_of >= 0) & (b != writer_of), idx, BIG)
+        seg_f = np.minimum.reduceat(cand, seg_starts)
+        seg_acc = np.where(seg_writer >= 0, seg_f, seg_starts)
+
+        # First foreign read of an M phase: downgrade (M->S), target =
+        # the owner.
+        is_f = idx == seg_f[seg_id]
+        inval_s = np.zeros(P, np.int64)
+        down_s = np.zeros(P, bool)
+        inval_s[is_f] = np.int64(1) << np.maximum(writer_of[is_f], 0)
+        if self._dkc:
+            down_s[is_f] = True
+
+        # Anchor packets (writes + eviction packets): invalidate against
+        # the state the *previous* segment left behind.
+        nb = self.rack.nb
+        a_sel = seg_is_w | seg_is_ev
+        aq = seg_starts[a_sel]
+        if len(aq):
+            a_run = run_start[aq]
+            prev = np.maximum(seg_id[aq] - 1, 0)
+            slot_a = s[aq]
+            pw = np.where(a_run,
+                          np.where(st0[slot_a] == 2, ow0[slot_a], -1),
+                          seg_writer[prev])
+            pf = np.where(a_run, BIG, seg_f[prev])
+            psh = np.where(a_run,
+                           np.where(st0[slot_a] == 1, sh0[slot_a], 0),
+                           seg_sh_init[prev]).astype(np.int64)
+            pacc = np.where(a_run, aq, seg_acc[prev])
+            m_state = (pw >= 0) & (pf >= aq)
+            sh = psh
+            if self._dkc:
+                # The downgraded owner stayed a sharer.
+                came_from_m = (pw >= 0) & ~m_state
+                sh = sh | np.where(came_from_m,
+                                   np.int64(1) << np.maximum(pw, 0), 0)
+            for c in range(nb):
+                rc = np.where(is_r & (b == c), idx, -1)
+                lre = np.empty(P, np.int64)
+                lre[0] = -1
+                if P > 1:
+                    np.maximum.accumulate(rc[:-1], out=lre[1:])
+                sh = sh | ((lre[aq] >= pacc).astype(np.int64) << c)
+            a_ev = is_ev[aq]
+            a_b = b[aq]
+            ow_mask = np.int64(1) << np.maximum(pw, 0)
+            inval_a = np.where(
+                m_state,
+                np.where(a_ev | (a_b != pw), ow_mask, 0),
+                np.where(a_ev, sh, sh & ~(np.int64(1) << a_b)))
+            inval_s[aq] = inval_a
+        inval[order] = inval_s
+        down[order] = down_s
+        return inval, down
+
+    # ------------------------------------------------------------------ #
+    def _cache_events(self, slot_of_pkt, pkt_type, pkt_blade, pkt_write,
+                      pkt_dense, st0, sh0, ow0, d0, npages):
+        """Production cache-occupancy pre-pass: vectorized MSI decode,
+        then per blade either the O(occupancy + unique-pages) vectorized
+        LRU catch-up (when the chunk provably cannot evict there:
+        occupancy + worst-case inserts fit the capacity) or the
+        sequential walk over just that blade's drop/touch events.
+        Per-blade decomposition is exact because a packet's invalidation
+        targets never include its requester, so no two same-position
+        events hit one shadow.  Returns the capacity evictions as
+        ``(packet-position, blade, victim-page, was_dirty)`` in stream
+        order, exactly like the oracle walk."""
+        inval, down = self._decode_invals(
+            slot_of_pkt, pkt_type, pkt_blade, pkt_write, st0, sh0, ow0)
+        shadows = self._cache_shadows
+        lo = d0
+        hi = d0 + npages
+        is_acc_pkt = pkt_type == 0
+        events: list = []
+        for c in range(self.rack.nb):
+            dpos = np.flatnonzero((inval >> c) & 1 == 1)
+            tpos = np.flatnonzero(is_acc_pkt & (pkt_blade == c))
+            if len(dpos) == 0 and len(tpos) == 0:
+                continue
+            sh_c = shadows[c]
+            dslot = slot_of_pkt[dpos]
+            dlo, dhi, dd = lo[dslot], hi[dslot], down[dpos]
+            tpage = pkt_dense[tpos]
+            tw = pkt_write[tpos]
+            if sh_c.occupancy + len(np.unique(tpage)) <= sh_c.capacity_pages:
+                sh_c.catch_up(dpos, dlo, dhi, dd, tpos, tpage, tw)
+            else:
+                for p, vp, vd in self._walk_blade(sh_c, dpos, dlo, dhi, dd,
+                                                  tpos, tpage, tw):
+                    events.append((p, c, vp, vd))
+        events.sort()  # packet positions are unique across blades
+        return events
+
+    @staticmethod
+    def _walk_blade(shadow, dpos, dlo, dhi, ddown, tpos, tpage, tw):
+        """Slow path for one blade that may evict: merge the blade's
+        drop and touch events by stream position and replay them against
+        the LRU shadow, yielding ``(pos, victim, was_dirty)``.
+
+        Even here most packets avoid Python-per-packet work: within each
+        drop-free run of touches, the longest prefix whose *potential*
+        inserts (first occurrences since the run start) fit the
+        remaining capacity provably cannot evict and is replayed with
+        the vectorized catch-up; only the contended tail — where the
+        next insert may pop an LRU victim — single-steps."""
+        events: list = []
+        nt, nd = len(tpos), len(dpos)
+        po = np.full(nt, -1, np.int64)
+        if nt:
+            order = np.argsort(tpage, kind="stable")
+            same = tpage[order][1:] == tpage[order][:-1]
+            po[order[1:][same]] = order[:-1][same]
+        # Touch index each drop lands before (positions are unique).
+        dins = np.searchsorted(tpos, dpos).tolist() if nd else []
+        dl = dlo.tolist()
+        dh = dhi.tolist()
+        dd = ddown.tolist()
+        tp_l = tpos.tolist()
+        pg_l = tpage.tolist()
+        tw_l = tw.tolist()
+        iot = shadow.insert_or_touch
+        drop = shadow.drop_range
+        clean = shadow.clean_range
+        cap = shadow.capacity_pages
+        ti = di = 0
+        while ti < nt:
+            while di < nd and dins[di] <= ti:
+                (clean if dd[di] else drop)(dl[di], dh[di])
+                di += 1
+            run_end = dins[di] if di < nd else nt
+            budget = cap - len(shadow.pages)
+            # A long drop-free run with real headroom: replay the prefix
+            # whose potential inserts provably fit with the vectorized
+            # catch-up (one numpy pass instead of per-touch dict work).
+            if budget >= 16 and run_end - ti >= 64:
+                w = min(run_end - ti, max(4 * budget, 64))
+                cum = np.cumsum(po[ti:ti + w] < ti)
+                k = int(np.searchsorted(cum, budget, side="right"))
+                if k >= 64:
+                    pg = tpage[ti:ti + k]
+                    ps = tpos[ti:ti + k]
+                    wr = tw[ti:ti + k]
+                    order = np.lexsort((ps, pg))
+                    pg_s = pg[order]
+                    first = np.ones(k, bool)
+                    first[1:] = pg_s[1:] != pg_s[:-1]
+                    last = np.ones(k, bool)
+                    last[:-1] = pg_s[1:] != pg_s[:-1]
+                    grp = np.cumsum(first) - 1  # group id per sorted touch
+                    anyw = np.zeros(int(first.sum()), np.int64)
+                    np.maximum.at(anyw, grp, wr[order].astype(np.int64))
+                    upage = pg_s[last]
+                    ulast = ps[order][last]
+                    reorder = np.argsort(ulast, kind="stable")
+                    shadow.touch_batch(upage[reorder], (anyw > 0)[reorder])
+                    ti += k
+                    continue
+            # Contended (or short) stretch: step touch by touch.
+            for j in range(ti, run_end):
+                for vp, vd in iot(pg_l[j], tw_l[j] == 1):
+                    events.append((tp_l[j], vp, vd))
+            ti = run_end
+        while di < nd:
+            (clean if dd[di] else drop)(dl[di], dh[di])
+            di += 1
+        return events
+
+    # ------------------------------------------------------------------ #
     def _process_chunk(self, vaddr, dense, blade, write, thread, kvec, pso,
-                       clocks, breakdown, trans_lat, inflight) -> None:
+                       clocks, breakdown, trans_lat, inflight,
+                       defer: bool = False):
+        """Replay one chunk.  Returns the per-kept-access charge vector.
+
+        With ``defer=True`` (speculative epoch chunks) every host-state
+        mutation — recency touches, directory/plane write-back, stats,
+        clocks — is packed into a ``commit`` closure and ``(charged,
+        commit)`` is returned instead: the caller inspects the exact
+        epoch crossing first and either commits or simply discards the
+        closure, so mis-speculation needs no state rollback at all.
+        Chunks that would install regions, evict, or run the cache
+        pre-pass mutate state mid-flight and cannot defer; they return
+        ``None`` (before any mutation) and the caller falls back to the
+        snapshot/rollback path."""
         rack = self.rack
         nb, nthreads = rack.nb, rack.nb * rack.tpb
         d = rack.mmu.engine.directory
@@ -757,29 +1291,47 @@ class BatchedDataPlane:
         maxe = d.resources.max_directory_entries
 
         # ---- residency: installs and capacity evictions ----------------
+        t0 = time.perf_counter()
         lg0 = d.initial_region_log2
         evict_events: list = []
         # Upper bound: even if every window the chunk touches were a
         # miss, would the directory still fit?  If so the chunk cannot
-        # evict and the vectorized (conflict-free) path applies.
+        # evict and the vectorized (conflict-free) path applies.  The
+        # bound is refined with an actual lookup when it trips: only
+        # *missing* windows consume SRAM slots, so a chunk whose misses
+        # still fit takes the vectorized path even at high occupancy.
+        rows0 = None
         pressure = (len(d.entries) + len(np.unique(vaddr >> lg0)) > maxe)
-        if not pressure:
-            self._dtab = None  # fast-path write-back bypasses it
+        if pressure:
             rt = self._region_table()
-            rows = rt.lookup(vaddr)
+            rows0 = rt.lookup(vaddr)
+            miss = rows0 < 0
+            nmiss = (len(np.unique(vaddr[miss] >> lg0))
+                     if miss.any() else 0)
+            pressure = len(d.entries) + nmiss > maxe
+        if pressure and defer:
+            return None  # mutates mid-walk; nothing touched yet
+        if not pressure:
+            rt = self._region_table()
+            rows = rows0 if rows0 is not None else rt.lookup(vaddr)
             if (rows < 0).any():
+                if defer:
+                    return None  # installs mutate the directory up front
                 self._install_missing_regions(
                     np.unique(vaddr[rows < 0] >> lg0) << lg0)
                 rt = self._region_table()
                 rows = rt.lookup(vaddr)
+            self._dtab = None  # fast-path write-back bypasses it
             # End-of-chunk recency: touched regions ordered by their
             # last access (conflict-free, so vectorized instead of the
             # sequential walk the pressure path needs).
             rev = rows[::-1]
             uniq, idx = np.unique(rev, return_index=True)
             last_pos = len(rows) - 1 - idx
-            for j in uniq[np.argsort(last_pos)].tolist():
-                d.touch_key(rt.keys[j])
+            touch_rows = uniq[np.argsort(last_pos)].tolist()
+            if not defer:
+                for j in touch_rows:
+                    d.touch_key(rt.keys[j])
         else:
             rt = self._device_table()  # before the walk mutates entries
             keys_acc, installed, evict_events = (
@@ -788,6 +1340,7 @@ class BatchedDataPlane:
             row_of = self._row_of
             rows = np.fromiter((row_of[k] for k in keys_acc), np.int64, bk)
             self._rt = None
+        t0 = self._tick("residency_prepass", t0)
 
         # ---- packet stream: accesses + injected eviction packets -------
         if evict_events:
@@ -825,9 +1378,11 @@ class BatchedDataPlane:
             np.uint32).view(np.int32)
 
         # ---- cache-occupancy pre-pass: blade-cache eviction packets ----
+        t0 = time.perf_counter()
         host_clears: list = []
         if self._cache_shadows is not None:
-            cache_events = self._cache_prepass(
+            assert not defer  # run() never defers with shadows armed
+            cache_events = self._cache_events(
                 slot_of_pkt, pkt_type, pkt_blade, pkt_write, pkt_dense,
                 rt.state[act_rows], rt.sharers[act_rows], rt.owner[act_rows],
                 d0, npages)
@@ -868,6 +1423,7 @@ class BatchedDataPlane:
                 # host after the lane merge (their words are unowned and
                 # survive the merge unchanged).
                 host_clears = list(zip(cbl[~cov].tolist(), cpg[~cov].tolist()))
+        t0 = self._tick("cache_prepass", t0)
 
         # Overlapping active regions (coarse re-installs over surviving
         # split children) share cache-plane bits: pin each overlap
@@ -885,7 +1441,20 @@ class BatchedDataPlane:
                 group_of_slot = np.empty(sa, np.int64)
                 group_of_slot[order] = comp
 
-        sched = build_wave_schedule(slot_of_pkt, sa, lanes=self.lanes,
+        lanes = self.lanes
+        if lanes is None:
+            # Wave count is floored by the hottest scheduling group;
+            # lanes beyond batch/hottest add vmap width (per-wave cost)
+            # without removing waves.
+            counts = np.bincount(slot_of_pkt, minlength=max(sa, 1))
+            if group_of_slot is not None:
+                hot = float(np.bincount(group_of_slot,
+                                        weights=counts).max())
+            else:
+                hot = float(counts.max()) if sa else 1.0
+            ideal = len(slot_of_pkt) / max(1.0, hot)
+            lanes = int(min(16, max(2, next_pow2(int(ideal) + 1) // 2)))
+        sched = build_wave_schedule(slot_of_pkt, sa, lanes=lanes,
                                     group_of_slot=group_of_slot)
         g = sched.lanes
         s_dev = next_pow2(sched.slots_per_lane + 1)
@@ -927,38 +1496,75 @@ class BatchedDataPlane:
         cm_dev[lane_idx, local_idx] = cmask
         planes = np.zeros((g, 2 * nb, words + span), np.int32)
         planes[:, :, :words] = state.planes[None]
+        t0 = self._tick("schedule", t0)
 
         out = _replay(
             jnp.asarray(np.int32(sched.num_waves)),
+            jnp.asarray(self._dkc),
             jnp.asarray(acc_slot), jnp.asarray(acc_blade),
             jnp.asarray(acc_write), jnp.asarray(acc_valid),
             jnp.asarray(acc_type),
             jnp.asarray(acc_w0), jnp.asarray(acc_rw), jnp.asarray(acc_bit),
             jnp.asarray(dirrows), jnp.asarray(cm_dev), jnp.asarray(planes))
-        (dir_o, planes_o, fac_o, acnt_o, stats_o, flags_o, invals_o) = map(
-            np.asarray, out)
+        (dir_o, planes_o, w1_o, w2_o, w3_o) = map(np.asarray, out)
+        t0 = self._tick("device", t0)
+
+        # ---- unpack the per-packet output words ------------------------
+        npkt = len(slot_of_pkt)
+        vmask = sched.acc_valid
+        posm = sched.acc_index[vmask]
+        w1_all = np.empty(npkt, np.int64)
+        w2_all = np.empty(npkt, np.int64)
+        flushed_all = np.empty(npkt, np.int64)
+        w1_all[posm] = w1_o[:, : sched.num_waves][vmask]
+        w2_all[posm] = w2_o[:, : sched.num_waves][vmask]
+        flushed_all[posm] = w3_o[:, : sched.num_waves][vmask]
+        inval_all = w1_all >> 7
+        ninv_all = np.zeros(npkt, np.int64)
+        for c in range(nb):
+            ninv_all += (inval_all >> c) & 1
+        nfalse_all = w2_all & 0x7FFF
+        dropped_all = w2_all >> 15
+        is_acc = pkt_orig >= 0
+        nhits = int((w1_all[is_acc] & 1).sum())
 
         # ---- merge lane planes by bit ownership ------------------------
+        # Ownership scatter over (lane, word) pairs: expand each active
+        # row to exactly its occupied words (most regions span one) —
+        # O(sum of spans), not O(sa * max_span).
         own = np.zeros((g, words + span), np.int32)
-        for j in range(span):
-            np.bitwise_or.at(own, (lane_idx, w0 + j), cmask[:, j])
+        nword = ((bitoff + npages + 31) >> 5).astype(np.int64)
+        totw = int(nword.sum())
+        if totw:
+            repr_ = np.repeat(np.arange(sa), nword)
+            offs = np.arange(totw) - np.repeat(nword.cumsum() - nword, nword)
+            np.bitwise_or.at(
+                own, (lane_idx[repr_], w0[repr_] + offs),
+                cmask[repr_, offs])
         all_owned = np.bitwise_or.reduce(own, axis=0) if sa else np.zeros(
             words + span, np.int32)
         merged = state.planes & ~all_owned[:words]
         for gg in range(g):
             merged |= planes_o[gg, :, :words] & own[gg, :words]
-        state.planes = merged
-        if host_clears:
-            hb = np.array([b for b, _ in host_clears], np.int64)
-            hp = np.array([p for _, p in host_clears], np.int64)
-            hm = ~(np.uint32(1) << (hp & 31).astype(np.uint32)).view(np.int32)
-            for rowbase in (hb, nb + hb):  # presence plane, dirty plane
-                np.bitwise_and.at(state.planes, (rowbase, hp >> 5), hm)
 
         # ---- write-back: directory entries + per-region epoch stats ---
         dir_n = dir_o[lane_idx, local_idx]
-        fac_n = fac_o[lane_idx, local_idx]
-        acnt_n = acnt_o[lane_idx, local_idx]
+        # Per-region Bounded-Splitting counters, reduced host-side from
+        # the packed words: accesses and false invalidations per slot,
+        # counting only packets after the slot's last eviction packet (a
+        # re-install starts with fresh epoch counters, exactly the
+        # kernel's old in-loop reset).
+        fac_n = acnt_n = None
+        if rack.splitting_enabled:
+            acc_pkt = pkt_type == 0
+            if evict_events:
+                lastev = np.full(sa, -1, np.int64)
+                evp = np.flatnonzero(pkt_type == 1)
+                np.maximum.at(lastev, slot_of_pkt[evp], evp)
+                acc_pkt = acc_pkt & (np.arange(npkt) > lastev[slot_of_pkt])
+            fac_n = np.zeros(sa, np.int64)
+            np.add.at(fac_n, slot_of_pkt[acc_pkt], nfalse_all[acc_pkt])
+            acnt_n = np.bincount(slot_of_pkt[acc_pkt], minlength=sa)
         # Under capacity pressure an entry can be evicted and re-installed
         # within the chunk: its host object is then a *fresh* Invalid
         # entry even when the device row ends where it started, so every
@@ -967,36 +1573,50 @@ class BatchedDataPlane:
             touched = range(sa)
         else:
             touched = np.flatnonzero((dir_n != dir_pre).any(axis=1)).tolist()
-        for j in touched:
-            key = rt.keys[act_rows[j]]
-            e = d.entries.get(key)
-            if e is not None:
-                e.state = MSIState(int(dir_n[j, 0]))
-                e.sharers = int(dir_n[j, 1])
-                e.owner = int(dir_n[j, 2])
-            if not dir_n[j, 3]:
-                engine._prepopulated.discard(key)
-        if rack.splitting_enabled:  # RegionStats only feed Bounded Splitting
-            for j in np.flatnonzero((fac_n > 0) | (acnt_n > 0)).tolist():
-                rst = d.stats.get(rt.keys[act_rows[j]])
-                if rst is not None:
-                    rst.false_invalidations += int(fac_n[j])
-                    rst.accesses += int(acnt_n[j])
-        rt.state[act_rows] = dir_n[:, 0]
-        rt.sharers[act_rows] = dir_n[:, 1]
-        rt.owner[act_rows] = dir_n[:, 2]
-        rt.prepop[act_rows] = dir_n[:, 3].astype(bool)
 
-        # ---- reductions: coherence stats ------------------------------
-        stats = engine.stats
-        tot = stats_o.sum(axis=0)
-        stats.accesses += int(tot[0])
-        stats.local_hits += int(tot[1])
-        stats.remote_fetches += int(tot[2])
-        stats.invalidations += int(tot[3])
-        stats.invalidated_pages += int(tot[4])
-        stats.flushed_pages += int(tot[5])
-        stats.false_invalidated_pages += int(tot[6])
+        def commit_state():
+            if defer:
+                for j in touch_rows:
+                    d.touch_key(rt.keys[j])
+            state.planes = merged
+            if host_clears:
+                hb = np.array([b for b, _ in host_clears], np.int64)
+                hp = np.array([p for _, p in host_clears], np.int64)
+                hm = ~(np.uint32(1) << (hp & 31).astype(np.uint32)).view(
+                    np.int32)
+                for rowbase in (hb, nb + hb):  # presence + dirty planes
+                    np.bitwise_and.at(state.planes, (rowbase, hp >> 5), hm)
+            for j in touched:
+                key = rt.keys[act_rows[j]]
+                e = d.entries.get(key)
+                if e is not None:
+                    e.state = MSIState(int(dir_n[j, 0]))
+                    e.sharers = int(dir_n[j, 1])
+                    e.owner = int(dir_n[j, 2])
+                if not dir_n[j, 3]:
+                    engine._prepopulated.discard(key)
+            if rack.splitting_enabled:  # RegionStats feed Bounded Splitting
+                for j in np.flatnonzero((fac_n > 0) | (acnt_n > 0)).tolist():
+                    rst = d.stats.get(rt.keys[act_rows[j]])
+                    if rst is not None:
+                        rst.false_invalidations += int(fac_n[j])
+                        rst.accesses += int(acnt_n[j])
+            rt.state[act_rows] = dir_n[:, 0]
+            rt.sharers[act_rows] = dir_n[:, 1]
+            rt.owner[act_rows] = dir_n[:, 2]
+            rt.prepop[act_rows] = dir_n[:, 3].astype(bool)
+            stats = engine.stats
+            stats.accesses += bk
+            stats.local_hits += nhits
+            stats.remote_fetches += bk - nhits
+            stats.invalidations += int(ninv_all.sum())
+            stats.invalidated_pages += int(dropped_all.sum())
+            stats.flushed_pages += int(flushed_all.sum())
+            stats.false_invalidated_pages += int(nfalse_all.sum())
+
+        if not defer:
+            commit_state()
+        t0 = self._tick("merge_writeback", t0)
 
         # ---- exact-order latency reconstruction -----------------------
         # The lanes emitted per-access action words; queueing delay
@@ -1006,16 +1626,8 @@ class BatchedDataPlane:
         # latency — the scalar drain and BladePageCache.insert's
         # write-back are both free in NetworkModel terms — and are
         # filtered back out of the stream first.
-        npkt = len(slot_of_pkt)
-        vmask = sched.acc_valid
-        posm = sched.acc_index[vmask]
-        flags_all = np.empty(npkt, np.int32)
-        invals_all = np.empty(npkt, np.int32)
-        flags_all[posm] = flags_o[:, : sched.num_waves][vmask]
-        invals_all[posm] = invals_o[:, : sched.num_waves][vmask]
-        is_acc = pkt_orig >= 0
-        flags = flags_all[is_acc]
-        invals = invals_all[is_acc]
+        flags = w1_all[is_acc] & 0x7F
+        invals = inval_all[is_acc]
         hit = (flags & 1) == 1
         fetch = ((flags >> 1) & 1) == 1
         seq = ((flags >> 2) & 1) == 1
@@ -1044,16 +1656,27 @@ class BatchedDataPlane:
                 (write == 1) & ~hit, k_switch + lb_queue, total)
         else:
             charged = total
-        np.add.at(clocks, thread, charged)
-        breakdown["fetch"] += float(lb_fetch.sum())
-        breakdown["invalidation"] += float(lb_inv.sum())
-        breakdown["tlb"] += float(lb_tlb.sum())
-        breakdown["queue"] += float(lb_queue.sum())
-        breakdown["switch"] += float(lb_switch.sum())
-        inflight += ind.sum(axis=0).astype(np.int32)
-        # Per-kind latency samples: keep arrays per chunk, flattened to
-        # plain lists once at the end of run().
-        for code, kname in enumerate(_KINDS):
-            m = kind == code
-            if m.any():
-                trans_lat.setdefault(kname, []).append(total[m])
+
+        def commit_latency():
+            np.add.at(clocks, thread, charged)
+            breakdown["fetch"] += float(lb_fetch.sum())
+            breakdown["invalidation"] += float(lb_inv.sum())
+            breakdown["tlb"] += float(lb_tlb.sum())
+            breakdown["queue"] += float(lb_queue.sum())
+            breakdown["switch"] += float(lb_switch.sum())
+            inflight[:] = inflight + ind.sum(axis=0).astype(np.int32)
+            # Per-kind latency samples: arrays per chunk, flattened to
+            # plain lists once at the end of run().
+            for code, kname in enumerate(_KINDS):
+                m = kind == code
+                if m.any():
+                    trans_lat.setdefault(kname, []).append(total[m])
+
+        self._tick("latency_reconstruct", t0)
+        if defer:
+            def commit():
+                commit_state()
+                commit_latency()
+            return charged, commit
+        commit_latency()
+        return charged

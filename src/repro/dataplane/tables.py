@@ -14,7 +14,9 @@ Four exports bridge the Python control plane and the device pipeline:
   place blade-cache capacity evictions exactly where the scalar
   ``BladePageCache`` fires them.
 * :class:`DataPlaneState` — the combination, plus the translate/protect
-  match-action tables from ``InNetworkMMU.export_dataplane_tables``.
+  match-action tables (the same rows
+  ``InNetworkMMU.export_dataplane_tables`` materializes; the replay
+  path exports just these two directly).
 
 Export-layout invariants:
 
@@ -25,11 +27,12 @@ Export-layout invariants:
   has base ``vaddr & ~(2**L - 1)`` — the per-level LPM index exploits
   exactly this.
 * ``recency[i]`` carries the directory's LRU rank (0 = coldest) for row
-  ``i`` — the state the capacity-eviction policy is keyed on, carried
-  with the device view (and in ``directory_recency`` of
-  ``export_dataplane_tables``) for diagnostics and failover snapshots;
-  victim *choice* itself runs in the engine's host residency pre-pass
-  against the live recency lists.
+  ``i`` — the state the capacity-eviction policy is keyed on, exported
+  on demand (``build_region_table(..., with_recency=True)`` and
+  ``directory_recency`` of ``export_dataplane_tables``) for diagnostics
+  and failover snapshots; victim *choice* itself runs in the engine's
+  host residency pre-pass against the live recency lists, so the
+  per-chunk table rebuilds skip the column.
 * When regions are disjoint (``overlapping`` False) lookup is a single
   ``searchsorted``; otherwise each of the <= 1 + log2(M) - 12 levels is
   probed smallest-first, mirroring ``CacheDirectory.lookup``.
@@ -109,27 +112,44 @@ class RegionTable:
             unresolved &= ~hit
         return out
 
-def build_region_table(directory, prepopulated: set) -> RegionTable:
+def build_region_table(directory, prepopulated: set,
+                       with_recency: bool = False) -> RegionTable:
     """Materialize the directory as a :class:`RegionTable`.
 
     Overlapping entries (possible once capacity evictions punched holes
     the directory re-covered at a coarser granularity) switch the table
-    into per-level LPM lookup mode instead of refusing the export."""
-    entries = sorted(directory.entries.values(), key=lambda e: (e.base, e.size_log2))
-    rank = {k: i for i, k in enumerate(directory.lru_keys())}
-    keys = [(e.base, e.size_log2) for e in entries]
+    into per-level LPM lookup mode instead of refusing the export.
+
+    ``with_recency`` additionally materializes the per-row LRU rank —
+    diagnostics/failover state nothing on the replay path reads, so the
+    per-chunk rebuilds skip it (the engine's victim choice runs against
+    the directory's live recency lists, never this column)."""
+    src = directory.entries
+    n = len(src)
+    bases0 = np.fromiter((k[0] for k in src), np.int64, n)
+    log2s0 = np.fromiter((k[1] for k in src), np.int64, n)
+    vals = (np.fromiter(
+        ((int(e.state), e.sharers, e.owner) for e in src.values()),
+        np.dtype((np.int64, 3)), n) if n else np.zeros((0, 3), np.int64))
+    order = np.lexsort((log2s0, bases0))
+    keys0 = list(src.keys())
+    keys = [keys0[i] for i in order.tolist()]
+    bases = bases0[order]
+    log2s = log2s0[order]
     rt = RegionTable(
-        bases=np.array([e.base for e in entries], np.int64),
-        ends=np.array([e.end for e in entries], np.int64),
-        log2s=np.array([e.size_log2 for e in entries], np.int32),
-        state=np.array([int(e.state) for e in entries], np.int32),
-        sharers=np.array([e.sharers for e in entries], np.int32),
-        owner=np.array([e.owner for e in entries], np.int32),
-        prepop=np.array([k in prepopulated for k in keys], bool),
+        bases=bases,
+        ends=bases + (np.int64(1) << log2s),
+        log2s=log2s.astype(np.int32),
+        state=vals[order, 0].astype(np.int32),
+        sharers=vals[order, 1].astype(np.int32),
+        owner=vals[order, 2].astype(np.int32),
+        prepop=np.fromiter((k in prepopulated for k in keys), bool, n),
         keys=keys,
-        recency=np.array([rank[k] for k in keys], np.int64),
     )
-    if len(entries) > 1 and (rt.ends[:-1] > rt.bases[1:]).any():
+    if with_recency:
+        rank = {k: i for i, k in enumerate(directory.lru_keys())}
+        rt.recency = np.fromiter((rank[k] for k in keys), np.int64, n)
+    if n > 1 and (rt.ends[:-1] > rt.bases[1:]).any():
         rt.overlapping = True
         rt.levels = _build_lpm_levels(rt.bases, rt.log2s)
     return rt
@@ -260,6 +280,17 @@ class BladeCacheShadow:
     (``page >> 5``) so a region-invalidation drop costs time
     proportional to the region's word span, not the cache occupancy —
     the host analogue of the device kernel's masked word-clear.
+
+    Two replay paths keep a shadow current across a chunk:
+
+    * the *sequential walk* (``insert_or_touch`` / ``drop_range`` /
+      ``clean_range`` per packet) — the oracle, and the only path that
+      can place capacity evictions;
+    * the *vectorized catch-up* (``catch_up``) — an O(occupancy +
+      unique-pages) NumPy replay of a whole chunk's drop/touch events at
+      once, legal only when the caller proved the chunk cannot evict at
+      this blade.  The two are property-tested byte-identical
+      (tests/test_prepass.py).
     """
 
     __slots__ = ("capacity_pages", "pages", "words")
@@ -268,6 +299,13 @@ class BladeCacheShadow:
         self.capacity_pages = max(1, int(capacity_pages))
         self.pages: "OrderedDict[int, bool]" = OrderedDict()
         self.words: dict[int, set] = {}
+
+    def clone(self) -> "BladeCacheShadow":
+        """Deep copy (speculative epoch chunks snapshot the shadows)."""
+        c = BladeCacheShadow(self.capacity_pages)
+        c.pages = self.pages.copy()
+        c.words = {k: set(v) for k, v in self.words.items()}
+        return c
 
     def insert_or_touch(self, page: int, dirty: bool):
         """Requester-side data movement for one access: refresh recency
@@ -313,9 +351,168 @@ class BladeCacheShadow:
             if not bucket:
                 del words[wkey]
 
+    def clean_range(self, p0: int, p1: int) -> None:
+        """An M->S *downgrade* hit this blade (``downgrade_keeps_copy``):
+        dirty pages in ``[p0, p1)`` flush and stay cached read-only —
+        membership and LRU order are untouched (the membership effect of
+        ``BladePageCache.downgrade_region``)."""
+        if p1 <= p0 or not self.pages:
+            return
+        od = self.pages
+        for wkey in range(p0 >> 5, ((p1 - 1) >> 5) + 1):
+            bucket = self.words.get(wkey)
+            if not bucket:
+                continue
+            for p in bucket:
+                if p0 <= p < p1:
+                    od[p] = False
+
+    # ------------------------------------------------------------------ #
+    def catch_up(self, dpos, dlo, dhi, ddown, tpos, tpage, tw) -> None:
+        """Vectorized replay of one chunk's events at this blade — legal
+        ONLY when the caller proved no capacity eviction can fire here
+        (``occupancy + potential inserts <= capacity``).
+
+        Inputs are parallel NumPy arrays in packet-stream order:
+        ``(dpos, dlo, dhi, ddown)`` the invalidation events targeting
+        this blade (stream position, dense span, downgrade flag) and
+        ``(tpos, tpage, tw)`` the requester-side touches (stream
+        position, dense page, write flag).  Reproduces the sequential
+        walk exactly:
+
+        * final membership: a page survives iff its last membership
+          event is a touch (downgrades never drop), or it was cached at
+          chunk start and no drop covers it;
+        * final LRU order: untouched survivors keep their old relative
+          order (they never moved), then touched survivors ordered by
+          last touch — precisely the ``move_to_end`` outcome;
+        * final dirty bit: OR of write-touches after the last
+          drop/clean event, plus the old bit when no such event exists.
+        """
+        touched = len(tpage) > 0
+        if touched:
+            order = np.lexsort((tpos, tpage))
+            tp_s, tt_s, tw_s = tpage[order], tpos[order], tw[order]
+            last = np.ones(len(tp_s), bool)
+            last[:-1] = tp_s[1:] != tp_s[:-1]
+            upages = tp_s[last]          # sorted unique touched pages
+            ulast = tt_s[last]           # last-touch stream position
+        else:
+            upages = np.zeros(0, np.int64)
+            ulast = np.zeros(0, np.int64)
+
+        # Last drop / last drop-or-clean position per touched page.
+        nd = len(dpos)
+        lastdrop = np.full(len(upages), -1, np.int64)
+        cutoff = np.full(len(upages), -1, np.int64)
+        if nd and len(upages):
+            lo_i = np.searchsorted(upages, dlo)
+            hi_i = np.searchsorted(upages, dhi)
+            cnt = hi_i - lo_i
+            tot = int(cnt.sum())
+            if tot:
+                rep = np.repeat(np.arange(nd), cnt)
+                within = np.arange(tot) - np.repeat(cnt.cumsum() - cnt, cnt)
+                pidx = lo_i[rep] + within
+                ev_pos = dpos[rep]
+                np.maximum.at(cutoff, pidx, ev_pos)
+                real = ~ddown[rep]
+                np.maximum.at(lastdrop, pidx[real], ev_pos[real])
+
+        present = ulast > lastdrop
+        # Dirty: any write-touch strictly after the cutoff event.
+        dirty_new = np.zeros(len(upages), bool)
+        if touched:
+            uidx = np.searchsorted(upages, tp_s)
+            wmask = (tw_s > 0) & (tt_s > cutoff[uidx])
+            np.logical_or.at(dirty_new, uidx[wmask], True)
+
+        # Old (chunk-start) pages, in LRU order.
+        od = self.pages
+        n0 = len(od)
+        op = np.fromiter(od.keys(), np.int64, n0)
+        odirty = np.fromiter(od.values(), bool, n0)
+        # Carry the old dirty bit for touched old pages with no cutoff.
+        if len(upages) and n0:
+            os_ = np.sort(op)
+            osd = odirty[np.argsort(op, kind="stable")]
+            j = np.searchsorted(os_, upages)
+            jc = np.minimum(j, n0 - 1)
+            in_old = (j < n0) & (os_[jc] == upages)
+            carry = in_old & (cutoff < 0)
+            dirty_new |= carry & osd[jc]
+
+        # Untouched old pages: covered-by-any-drop removes, clean clears.
+        if n0:
+            untouched = np.ones(n0, bool)
+            if len(upages):
+                j = np.searchsorted(upages, op)
+                jc = np.minimum(j, max(0, len(upages) - 1))
+                untouched = ~((j < len(upages)) & (upages[jc] == op))
+            keep_old = untouched.copy()
+            clean_old = np.zeros(n0, bool)
+            if nd:
+                real = ~ddown
+                keep_old &= ~_covered(op, dlo[real], dhi[real])
+                clean_old = untouched & _covered(op, dlo[~real], dhi[~real])
+            old_sel = np.flatnonzero(keep_old)
+            old_pages = op[old_sel]
+            old_dirty = odirty[old_sel] & ~clean_old[old_sel]
+        else:
+            old_pages = np.zeros(0, np.int64)
+            old_dirty = np.zeros(0, bool)
+
+        new_sel = np.argsort(ulast[present], kind="stable")
+        new_pages = upages[present][new_sel]
+        new_dirty = dirty_new[present][new_sel]
+
+        pages = np.concatenate([old_pages, new_pages])
+        dirt = np.concatenate([old_dirty, new_dirty])
+        self.pages = OrderedDict(zip(pages.tolist(), dirt.tolist()))
+        words: dict[int, set] = {}
+        if len(pages):
+            wkeys = pages >> 5
+            order = np.argsort(wkeys, kind="stable")
+            wk_s = wkeys[order]
+            pg_s = pages[order]
+            cutpts = np.flatnonzero(wk_s[1:] != wk_s[:-1]) + 1
+            for wk, grp in zip(wk_s[np.r_[0, cutpts]].tolist(),
+                               np.split(pg_s, cutpts)):
+                words[wk] = set(grp.tolist())
+        self.words = words
+
+    def touch_batch(self, pages, dirty) -> None:
+        """Incremental no-eviction batch update for a *drop-free* run:
+        ``pages`` are the run's unique touched pages in last-touch
+        order, ``dirty`` whether any touch in the run wrote them.
+        Equivalent to ``insert_or_touch`` per touch (caller guarantees
+        capacity headroom), but one pass over unique pages with no
+        full-structure rebuild."""
+        od = self.pages
+        words = self.words
+        for p, dy in zip(pages.tolist(), dirty.tolist()):
+            if p in od:
+                if dy:
+                    od[p] = True
+                od.move_to_end(p)
+            else:
+                od[p] = dy
+                words.setdefault(p >> 5, set()).add(p)
+
     @property
     def occupancy(self) -> int:
         return len(self.pages)
+
+
+def _covered(pages: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Membership of each page in the union of ``[lo, hi)`` intervals."""
+    if len(lo) == 0 or len(pages) == 0:
+        return np.zeros(len(pages), bool)
+    order = np.argsort(lo, kind="stable")
+    lo_s, hi_s = lo[order], np.maximum.accumulate(hi[order])
+    idx = np.searchsorted(lo_s, pages, side="right") - 1
+    idxc = np.clip(idx, 0, len(lo_s) - 1)
+    return (idx >= 0) & (pages < hi_s[idxc])
 
 
 # --------------------------------------------------------------------- #
@@ -338,15 +535,22 @@ class DataPlaneState:
 
 
 def build_dataplane_state(mmu, segs, num_compute_blades: int) -> DataPlaneState:
-    tables = mmu.export_dataplane_tables()
+    # Only the translate/protect match-action tables are taken from the
+    # MMU export — the directory rows come from build_region_table
+    # directly (mmu.export_dataplane_tables() would additionally
+    # materialize directory/prepop/recency arrays this path never
+    # reads; failover and diagnostics still use the full export).
     page_map = build_page_map(segs)
-    regions = build_region_table(mmu.engine.directory, mmu.engine._prepopulated)
+    regions = build_region_table(mmu.engine.directory,
+                                 mmu.engine._prepopulated)
     words = (page_map.total_pages + 31) // 32
     return DataPlaneState(
         regions=regions,
         page_map=page_map,
-        translate=tables["translate"],
-        protect=tables["protect"],
+        translate=np.asarray(mmu.gas.export_tables(),
+                             dtype=np.int64).reshape(-1, 4),
+        protect=np.asarray(mmu.protection.export_tables(),
+                           dtype=np.int64).reshape(-1, 4),
         planes=np.zeros((2 * num_compute_blades, words), np.int32),
         num_blades=num_compute_blades,
     )

@@ -21,11 +21,18 @@ def _default_interpret() -> bool:
 
 def translate_lookup(vaddrs, table, **kw):
     kw.setdefault("interpret", _default_interpret())
+    if kw["interpret"]:
+        # Interpret mode pays Python-level cost per grid step: use a
+        # large request block so big batches run in a handful of steps
+        # (on TPU the default 256 keeps the match matrix in VREGs).
+        kw.setdefault("block_b", 8192)
     return _rm.translate_lookup(vaddrs, table, **kw)
 
 
 def protect_check(pdids, vaddrs, need, table, **kw):
     kw.setdefault("interpret", _default_interpret())
+    if kw["interpret"]:
+        kw.setdefault("block_b", 8192)
     return _rm.protect_check(pdids, vaddrs, need, table, **kw)
 
 

@@ -1,0 +1,325 @@
+"""Vectorized pre-pass fast paths vs the sequential oracles (ISSUE 4).
+
+The production cache-occupancy pre-pass (vectorized MSI decode +
+per-blade fast/slow split, ``BatchedDataPlane._cache_events``) must
+leave every ``BladeCacheShadow`` *byte-identical* — membership, LRU
+order, dirty bits, word buckets, occupancy — to the sequential
+packet-walk oracle (``_cache_prepass``), and emit the exact same
+eviction events.  The speculative epoch chunking must land every
+Bounded-Splitting boundary on the exact scalar access for any chunk
+size, including boundaries at chunk edges, one before an edge,
+mid-chunk, and back-to-back epochs.
+
+The randomized suites run with plain NumPy rngs so they execute even
+without hypothesis; the hypothesis variants widen the search when the
+``[dev]`` extra is installed (CI always installs it).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import traces as T
+from repro.core.emulator import DisaggregatedRack
+from repro.dataplane.engine import BatchedDataPlane
+from repro.dataplane.tables import BladeCacheShadow
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the [dev] extra
+    HAVE_HYPOTHESIS = False
+
+STAT_FIELDS = (
+    "accesses", "local_hits", "remote_fetches", "invalidations",
+    "invalidated_pages", "false_invalidated_pages", "flushed_pages",
+    "evicted_dirty", "evicted_clean", "faults",
+)
+
+
+# --------------------------------------------------------------------- #
+# Cache pre-pass: vectorized production path vs the sequential oracle.
+# --------------------------------------------------------------------- #
+def _make_engine(nb: int, dkc: bool) -> BatchedDataPlane:
+    rack = DisaggregatedRack(system="mind", num_compute_blades=nb,
+                             threads_per_blade=1,
+                             downgrade_keeps_copy=dkc)
+    return BatchedDataPlane(rack)
+
+
+def _random_case(rng, nb, npkt, nslots, pages_per_slot, p_ev, p_write):
+    """A random (but MSI-consistent at chunk start) packet stream over
+    disjoint slot spans of the dense page index."""
+    d0 = (np.arange(nslots, dtype=np.int64) * pages_per_slot)
+    npages = np.full(nslots, pages_per_slot, np.int64)
+    st0 = rng.integers(0, 3, nslots).astype(np.int32)
+    ow0 = np.where(st0 == 2, rng.integers(0, nb, nslots), -1).astype(np.int32)
+    sh0 = np.where(st0 == 1, rng.integers(1, 1 << nb, nslots), 0)
+    sh0 = np.where(st0 == 2, 1 << np.maximum(ow0, 0), sh0).astype(np.int32)
+    pkt_type = (rng.random(npkt) < p_ev).astype(np.int32)
+    slot = rng.integers(0, nslots, npkt).astype(np.int32)
+    blade = rng.integers(0, nb, npkt).astype(np.int32)
+    write = np.where(pkt_type == 0, rng.random(npkt) < p_write, 0).astype(
+        np.int32)
+    dense = (d0[slot] + rng.integers(0, pages_per_slot, npkt)).astype(
+        np.int64)
+    dense[pkt_type == 1] = 0
+    return (slot, pkt_type, blade, write, dense, st0, sh0, ow0, d0, npages)
+
+
+def _seed_shadows(rng, nb, cache_pages, total_pages, fill):
+    shadows = []
+    for _ in range(nb):
+        sh = BladeCacheShadow(cache_pages)
+        pages = rng.choice(total_pages, size=min(fill, total_pages),
+                           replace=False)
+        for p in pages.tolist():
+            sh.insert_or_touch(int(p), bool(rng.integers(0, 2)))
+        shadows.append(sh)
+    return shadows
+
+
+def _assert_shadows_identical(prod, oracle):
+    for a, b in zip(prod, oracle):
+        assert list(a.pages.items()) == list(b.pages.items())
+        assert a.words == b.words
+        assert a.occupancy == b.occupancy
+
+
+def _check_case(nb, dkc, case, shadows):
+    eng = _make_engine(nb, dkc)
+    oracle_shadows = [sh.clone() for sh in shadows]
+    eng._cache_shadows = shadows
+    got = eng._cache_events(*case)
+    eng._cache_shadows = oracle_shadows
+    want = eng._cache_prepass(*case)
+    assert got == want
+    _assert_shadows_identical(shadows, oracle_shadows)
+
+
+# Regimes chosen to force every production path: the whole-chunk
+# vectorized catch-up (huge capacity), the in-run touch_batch prefix
+# (headroom + long drop-free runs), the contended single-step walk
+# (tiny capacity), eviction packets, and the downgrade variant.
+_REGIMES = [
+    # (nb, npkt, nslots, pages/slot, cache_pages, fill, p_ev, p_write, dkc)
+    (2, 1024, 4, 16, 4096, 16, 0.0, 0.0, False),    # catch-up, reads only
+    (2, 1024, 4, 16, 4096, 32, 0.0, 0.5, False),    # catch-up, mixed
+    (4, 2048, 6, 8, 512, 80, 0.0, 0.02, False),     # touch_batch prefixes
+    (4, 1024, 6, 8, 12, 12, 0.0, 0.5, False),       # contended walk
+    (4, 1024, 6, 8, 20, 16, 0.05, 0.3, False),      # + eviction packets
+    (4, 1024, 6, 8, 20, 16, 0.05, 0.3, True),       # + downgrade variant
+    (2, 2048, 3, 32, 40, 40, 0.0, 0.3, True),       # downgrades + pressure
+    (2, 4096, 4, 64, 200, 60, 0.0, 0.005, False),   # in-run touch_batch
+]
+
+
+@pytest.mark.parametrize("regime", range(len(_REGIMES)))
+def test_cache_prepass_matches_sequential_oracle(regime):
+    (nb, npkt, nslots, pps, cache_pages, fill, p_ev, p_write,
+     dkc) = _REGIMES[regime]
+    rng = np.random.default_rng(1000 + regime)
+    for trial in range(4):
+        case = _random_case(rng, nb, npkt, nslots, pps, p_ev, p_write)
+        shadows = _seed_shadows(rng, nb, cache_pages, nslots * pps, fill)
+        _check_case(nb, dkc, case, shadows)
+
+
+def test_catch_up_oracle_direct(rng):
+    """BladeCacheShadow.catch_up / touch_batch vs the per-event walk, on
+    raw event streams (no engine in the loop)."""
+    for trial in range(50):
+        cap = int(rng.integers(8, 64))
+        total = 256
+        a = BladeCacheShadow(10 ** 6)  # large cap: catch_up legal
+        b = BladeCacheShadow(10 ** 6)
+        for p in rng.choice(total, size=cap, replace=False).tolist():
+            d = bool(rng.integers(0, 2))
+            a.insert_or_touch(p, d)
+            b.insert_or_touch(p, d)
+        ne = int(rng.integers(1, 64))
+        kinds = rng.random(ne)
+        pos = np.sort(rng.choice(10 ** 4, size=ne, replace=False))
+        dpos, dlo, dhi, dd, tpos, tpg, tw = [], [], [], [], [], [], []
+        for i in range(ne):
+            if kinds[i] < 0.3:
+                lo = int(rng.integers(0, total - 8))
+                dpos.append(int(pos[i]))
+                dlo.append(lo)
+                dhi.append(lo + int(rng.integers(1, 16)))
+                dd.append(bool(rng.integers(0, 2)))
+            else:
+                tpos.append(int(pos[i]))
+                tpg.append(int(rng.integers(0, total)))
+                tw.append(int(rng.integers(0, 2)))
+        a.catch_up(np.array(dpos, np.int64), np.array(dlo, np.int64),
+                   np.array(dhi, np.int64), np.array(dd, bool),
+                   np.array(tpos, np.int64), np.array(tpg, np.int64),
+                   np.array(tw, np.int64))
+        di = ti = 0
+        while di < len(dpos) or ti < len(tpos):
+            if ti >= len(tpos) or (di < len(dpos) and dpos[di] < tpos[ti]):
+                (b.clean_range if dd[di] else b.drop_range)(dlo[di], dhi[di])
+                di += 1
+            else:
+                assert list(b.insert_or_touch(tpg[ti], tw[ti] == 1)) == []
+                ti += 1
+        assert list(a.pages.items()) == list(b.pages.items())
+        assert a.words == b.words
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           regime=st.integers(0, len(_REGIMES) - 1))
+    def test_cache_prepass_oracle_hypothesis(seed, regime):
+        (nb, npkt, nslots, pps, cache_pages, fill, p_ev, p_write,
+         dkc) = _REGIMES[regime]
+        rng = np.random.default_rng(seed)
+        case = _random_case(rng, nb, npkt // 2, nslots, pps, p_ev, p_write)
+        shadows = _seed_shadows(rng, nb, cache_pages, nslots * pps, fill)
+        _check_case(nb, dkc, case, shadows)
+
+
+# --------------------------------------------------------------------- #
+# Residency shadow: vectorized recency catch-up vs the scalar walk.
+# --------------------------------------------------------------------- #
+def test_residency_recency_matches_scalar():
+    """After a full replay, the directory's LRU recency *order* (the
+    state capacity eviction is keyed on) must match the scalar engine's
+    per-access touches exactly — the vectorized last-access-order
+    catch-up collapses repeated touches but must preserve the order."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=400, store_mb=4, seed=3)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False)
+    rs = DisaggregatedRack(engine="scalar", **kw)
+    rb = DisaggregatedRack(engine="batched", **kw)
+    rs.run(trace)
+    rb.run(trace)
+    ds, db = rs.mmu.engine.directory, rb.mmu.engine.directory
+    assert ds.lru_keys() == db.lru_keys()
+    assert set(ds.entries) == set(db.entries)
+    for k, e in ds.entries.items():
+        o = db.entries[k]
+        assert (e.state, e.sharers, e.owner) == (o.state, o.sharers, o.owner)
+
+
+def test_refined_pressure_bound_avoids_sequential_walk():
+    """A chunk whose windows are all resident takes the vectorized path
+    even when the naive bound (entries + unique windows) trips."""
+    trace = T.uniform_trace(num_threads=4, read_ratio=0.7, sharing_ratio=0.5,
+                            accesses_per_thread=300, working_set_pages=500,
+                            seed=9)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False)
+    rs = DisaggregatedRack(engine="scalar", **kw).run(trace)
+    rb_rack = DisaggregatedRack(engine="batched", **kw)
+    eng = BatchedDataPlane(rb_rack)
+    walks = []
+    orig = eng._residency_prepass
+    eng._residency_prepass = lambda *a: (walks.append(1) or orig(*a))
+    rb = eng.run(trace)
+    # Everything is prepopulated at mmap time: the sequential residency
+    # walk must never run, yet stats stay identical.
+    assert walks == []
+    for f in STAT_FIELDS:
+        assert getattr(rs.stats, f) == getattr(rb.stats, f), f
+
+
+# --------------------------------------------------------------------- #
+# Speculative epoch chunking: exact boundaries under every alignment.
+# --------------------------------------------------------------------- #
+def _epoch_pair(chunk, epoch_us, accesses=600, threads=4):
+    trace = T.ycsb_trace("zipf", num_threads=threads, read_ratio=0.5,
+                         accesses_per_thread=accesses, store_mb=4, seed=7)
+    kw = dict(num_compute_blades=2, threads_per_blade=2, epoch_us=epoch_us)
+    rs = DisaggregatedRack(system="mind", engine="scalar", **kw).run(trace)
+    rb = DisaggregatedRack(
+        system="mind", engine="batched",
+        engine_options={"chunk_size": chunk}, **kw).run(trace)
+    return rs, rb
+
+
+def _assert_exact(rs, rb, ctx):
+    for f in STAT_FIELDS:
+        assert getattr(rs.stats, f) == getattr(rb.stats, f), (ctx, f)
+    assert rs.directory_timeline == rb.directory_timeline, ctx
+    assert len(rs.epoch_reports) == len(rb.epoch_reports), ctx
+    for a, b in zip(rs.epoch_reports, rb.epoch_reports):
+        assert (a.splits, a.merges, a.directory_entries) == (
+            b.splits, b.merges, b.directory_entries), ctx
+    np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9,
+                               err_msg=str(ctx))
+    np.testing.assert_allclose(rb.total_thread_us, rs.total_thread_us,
+                               rtol=1e-9, err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("chunk", [32768, 256, 255, 97, 64, 63])
+def test_epoch_boundary_stress_chunk_alignments(chunk):
+    """Boundaries at chunk edges, one before an edge, and mid-chunk:
+    sweeping chunk sizes around pow2 edges walks the crossing access
+    through every alignment relative to the speculative chunks."""
+    for epoch_us in (4000.0, 1700.0):
+        rs, rb = _epoch_pair(chunk, epoch_us)
+        assert len(rs.epoch_reports) >= 2
+        _assert_exact(rs, rb, (chunk, epoch_us))
+
+
+def test_epoch_back_to_back_boundaries():
+    """Epochs only a handful of accesses apart force the single-access
+    boundary path (gap <= 0) and speculation in quick succession."""
+    rs, rb = _epoch_pair(chunk=128, epoch_us=150.0, accesses=250)
+    assert len(rs.epoch_reports) >= 10
+    _assert_exact(rs, rb, "back-to-back")
+
+
+def test_epoch_exactness_with_cache_and_directory_pressure():
+    """Speculation must fall back to snapshot/rollback when the chunk
+    runs pre-passes (installs, capacity evictions, cache shadows) — the
+    full pressure cocktail stays exact at every chunk size."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=600, store_mb=4, seed=7)
+    kw = dict(num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=120, epoch_us=3000.0,
+              cache_bytes_per_blade=1 << 16)
+    rs = DisaggregatedRack(system="mind", engine="scalar", **kw).run(trace)
+    for chunk in (16384, 173):
+        rb = DisaggregatedRack(
+            system="mind", engine="batched",
+            engine_options={"chunk_size": chunk}, **kw).run(trace)
+        _assert_exact(rs, rb, chunk)
+
+
+# --------------------------------------------------------------------- #
+# downgrade_keeps_copy: the refusal is retired (ISSUE 4 satellite).
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("cache_bytes", [512 << 20, 1 << 15])
+def test_downgrade_keeps_copy_parity(cache_bytes):
+    """The M->S downgrade variant replays batched with exact stats,
+    runtime and latency parity — including under blade-cache pressure,
+    where kept read-only copies change later eviction victims."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=300, store_mb=4, seed=11)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False, downgrade_keeps_copy=True,
+              cache_bytes_per_blade=cache_bytes)
+    rs = DisaggregatedRack(engine="scalar", **kw).run(trace)
+    rb = DisaggregatedRack(engine="batched", **kw).run(trace)
+    for f in STAT_FIELDS:
+        assert getattr(rs.stats, f) == getattr(rb.stats, f), f
+    np.testing.assert_allclose(rb.runtime_us, rs.runtime_us, rtol=1e-9)
+    np.testing.assert_allclose(rb.total_thread_us, rs.total_thread_us,
+                               rtol=1e-9)
+    for k, v in rs.latency_breakdown_us.items():
+        np.testing.assert_allclose(rb.latency_breakdown_us[k], v, rtol=1e-6,
+                                   err_msg=k)
+
+
+def test_downgrade_keeps_copy_with_epochs():
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=500, store_mb=4, seed=13)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              epoch_us=4000.0, downgrade_keeps_copy=True)
+    rs = DisaggregatedRack(engine="scalar", **kw).run(trace)
+    rb = DisaggregatedRack(engine="batched", **kw).run(trace)
+    _assert_exact(rs, rb, "dkc-epochs")
