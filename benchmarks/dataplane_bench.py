@@ -38,6 +38,15 @@ scheduling, device replay, latency reconstruction, epoch control,
 speculation overhead) — so future perf PRs have a phase-level
 trajectory instead of a single wall number.
 
+The ISSUE 5 acceptance benchmark: a multi-switch *sharded-directory*
+scaling cell — the same deterministic cross-shard conflict trace
+(`repro.core.traces.sharded_conflict_trace`) replayed on 1/2/4-shard
+``ShardedRack``s, scalar vs batched (one TCAM/MSI kernel invocation
+per shard).  Coherence stats must be byte-identical to the
+single-switch oracle in every cell, and the emulated runtime must
+exceed the oracle's by exactly the cross-shard hop total.  Results
+land in ``benchmarks/results/BENCH_sharded.json``.
+
 Usage: PYTHONPATH=src python -m benchmarks.dataplane_bench
        [--quick] [--perf-floor X]
 
@@ -314,6 +323,100 @@ def bench_cache_eviction(quick: bool, perf_floor: float = 0.0,
     return out
 
 
+# --------------------------------------------------------------------- #
+# ISSUE 5: multi-switch sharded-directory scaling (BENCH_sharded.json).
+# --------------------------------------------------------------------- #
+def bench_sharded(quick: bool, perf_floor: float = 0.0,
+                  repeats: int = 2) -> dict:
+    """Sharded-rack scaling cell: the *same* deterministic cross-shard
+    conflict trace replayed on 1/2/4-shard ``ShardedRack``s, scalar vs
+    batched (one TCAM/MSI kernel invocation per shard).  Every cell's
+    coherence stats must be byte-identical to the single-switch scalar
+    oracle — the sharding-invariance contract of tests/test_sharded.py
+    — while the emulated runtime grows by exactly the cross-shard hop
+    total and the wall-clock speedup stays >= the floor."""
+    from repro.core.emulator import ShardedRack
+    from repro.core.types import NetworkConstants
+
+    threads = BLADES * THREADS_PER_BLADE
+    per_thread = 500 if quick else 2500
+    trace = T.sharded_conflict_trace(
+        num_threads=threads, accesses_per_thread=per_thread,
+        num_shards=4, blocks_per_shard=2, conflict_frac=0.5,
+        write_frac=0.3, seed=42)
+    kw = dict(system="mind", num_compute_blades=BLADES,
+              threads_per_blade=THREADS_PER_BLADE, splitting_enabled=False)
+    n = len(trace)
+    oracle = DisaggregatedRack(engine="scalar", **kw).run(trace)
+    hop = NetworkConstants().switch_to_switch_us
+    cells = []
+    for nsh in (1, 2, 4):
+        # Warm the per-shard kernel shapes once (jit is per-process).
+        ShardedRack(num_shards=nsh, engine="batched", **kw).run(trace)
+
+        def best_wall(engine: str):
+            best, result = float("inf"), None
+            for _ in range(repeats):
+                rack = ShardedRack(num_shards=nsh, engine=engine, **kw)
+                t0 = time.perf_counter()
+                result = rack.run(trace)
+                best = min(best, time.perf_counter() - t0)
+            return best, result
+
+        wall_b, rb = best_wall("batched")
+        wall_s, rs = best_wall("scalar")
+        parity = all(getattr(oracle.stats, f) == getattr(rb.stats, f)
+                     and getattr(oracle.stats, f) == getattr(rs.stats, f)
+                     for f in STAT_FIELDS)
+        hop_total = rs.cross_shard_accesses * hop
+        cells.append({
+            "num_shards": nsh,
+            "scalar_wall_s": wall_s,
+            "batched_wall_s": wall_b,
+            "scalar_acc_per_s": n / wall_s,
+            "batched_acc_per_s": n / wall_b,
+            "speedup": wall_s / wall_b,
+            "stats_identical_vs_oracle": parity,
+            "shard_accesses": rs.shard_accesses,
+            "cross_shard_accesses": rs.cross_shard_accesses,
+            "hop_us_total": hop_total,
+            "runtime_us": {"oracle": oracle.runtime_us,
+                           "scalar": rs.runtime_us,
+                           "batched": rb.runtime_us},
+            "total_thread_us_delta_vs_oracle":
+                rs.total_thread_us - oracle.total_thread_us,
+            "phases": _phases(rb),
+        })
+        emit(f"sharded/{nsh}/scalar", wall_s / n * 1e6,
+             f"acc_per_s={n / wall_s:.0f};cross={rs.cross_shard_accesses}")
+        emit(f"sharded/{nsh}/batched", wall_b / n * 1e6,
+             f"acc_per_s={n / wall_b:.0f};"
+             f"speedup={wall_s / wall_b:.1f}x;"
+             f"parity={'identical' if parity else 'DIVERGED'}")
+    out = {
+        "workload": "XS (deterministic cross-shard conflicts)",
+        "blades": BLADES, "threads_per_blade": THREADS_PER_BLADE,
+        "accesses": n,
+        "switch_to_switch_us": hop,
+        "cells": cells,
+    }
+    path = save_json("BENCH_sharded", out)
+    print(f"# wrote {path}")
+    for c in cells:
+        assert c["stats_identical_vs_oracle"], \
+            f"{c['num_shards']}-shard cell diverged from the oracle!"
+        np.testing.assert_allclose(
+            c["total_thread_us_delta_vs_oracle"], c["hop_us_total"],
+            rtol=1e-9, err_msg="cross-shard hop accounting drifted")
+        if c["speedup"] < 10.0:
+            print(f"# WARNING: {c['num_shards']}-shard speedup "
+                  f"{c['speedup']:.1f}x below 10x target")
+        if perf_floor:
+            assert c["speedup"] >= perf_floor, \
+                f"{c['num_shards']}-shard cell below {perf_floor}x floor"
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -323,7 +426,7 @@ def main() -> None:
                     help="assert every cell's speedup >= this floor "
                          "(0 = warnings only; CI smoke uses 2)")
     ap.add_argument("--only", choices=["all", "dataplane", "eviction",
-                                       "cache"], default="all",
+                                       "cache", "sharded"], default="all",
                     help="run one section in a fresh process (long "
                          "single-process runs can throttle and skew "
                          "late cells)")
@@ -336,6 +439,9 @@ def main() -> None:
         return
     if args.only == "cache":
         bench_cache_eviction(args.quick, args.perf_floor, repeats)
+        return
+    if args.only == "sharded":
+        bench_sharded(args.quick, args.perf_floor, repeats)
         return
 
     trace = T.ma_trace(num_threads=BLADES * THREADS_PER_BLADE,
@@ -379,6 +485,7 @@ def main() -> None:
     if args.only == "all":
         bench_eviction(args.quick, args.perf_floor)
         bench_cache_eviction(args.quick, args.perf_floor, repeats)
+        bench_sharded(args.quick, args.perf_floor, repeats)
 
 
 if __name__ == "__main__":

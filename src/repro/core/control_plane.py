@@ -39,6 +39,12 @@ class ControlPlane:
         self.splitting = BoundedSplitting(mmu.engine.directory, c=splitting_c)
         self._last_epoch_at_us = 0.0
         self.epoch_reports: list[EpochReport] = []
+        # Multi-switch racks: the VA-range shard map (set by ShardedRack).
+        # The control plane stays centralized across switch shards — it
+        # owns every shard's SRAM free list — but snapshots become
+        # shard-aware so a single failed switch can be rebuilt from just
+        # its shard's directory slice.
+        self.shard_map = None
 
     # ------------------------------------------------------------------ #
     # Syscall intercepts (§6.1 'Managing vmas').
@@ -108,9 +114,22 @@ class ControlPlane:
     # coldest-first (LRU order) and re-installed in that order on
     # restore, so the backup switch makes the *same* capacity-eviction
     # decisions the failed switch would have.
+    #
+    # Sharded racks: when a shard map is attached, every entry carries
+    # its home switch, and ``snapshot(shard=k)`` serializes only shard
+    # k's directory slice (plus the global vma/blade state every switch
+    # replicates) — the state a backup for switch k needs.  Entries stay
+    # in global LRU order, so restoring each shard preserves the
+    # relative recency of its entries.
     # ------------------------------------------------------------------ #
-    def snapshot(self) -> str:
+    def snapshot(self, shard: int | None = None) -> str:
         d = self.mmu.engine.directory
+        smap = self.shard_map
+        if shard is not None:
+            assert smap is not None, "shard snapshots need a shard map"
+            assert 0 <= shard < smap.num_shards
+        keys = [k for k in d.lru_keys()
+                if shard is None or smap.home_of_key(k) == shard]
         state = {
             "blades": {
                 str(b): {"va_base": s.va_base, "capacity": s.capacity}
@@ -133,13 +152,21 @@ class ControlPlane:
                     "state": int(e.state),
                     "sharers": e.sharers,
                     "owner": e.owner,
+                    **({"home": smap.home_of_key((e.base, e.size_log2))}
+                       if smap is not None else {}),
                 }
                 # Coldest-first: restore re-installs in this order, which
                 # reproduces the recency ranking byte for byte.
-                for e in (d.entries[k] for k in d.lru_keys())
+                for e in (d.entries[k] for k in keys)
             ],
             "splitting": {"c": self.splitting.c, "epoch": self.splitting.epoch},
         }
+        if smap is not None:
+            state["shards"] = {
+                "num_shards": smap.num_shards,
+                "home_log2": smap.home_log2,
+                "shard": shard,  # None == full-rack snapshot
+            }
         return json.dumps(state)
 
     @staticmethod
@@ -174,6 +201,12 @@ class ControlPlane:
             _ = ent
         cp.splitting.c = state["splitting"]["c"]
         cp.splitting.epoch = state["splitting"]["epoch"]
+        if "shards" in state:
+            from repro.core.switch import ShardMap
+
+            cp.shard_map = ShardMap(
+                num_shards=state["shards"]["num_shards"],
+                home_log2=state["shards"]["home_log2"])
         return cp
 
 

@@ -28,7 +28,7 @@ import numpy as np
 from repro.core.cache import BladePageCache
 from repro.core.control_plane import ControlPlane
 from repro.core.network_model import NetworkModel
-from repro.core.switch import make_mmu
+from repro.core.switch import InNetworkMMU, ShardMap, make_mmu
 from repro.core.traces import Trace
 from repro.core.types import (
     PAGE_SIZE,
@@ -59,6 +59,15 @@ class EmulationResult:
     # pre-passes / scheduling / device replay / latency reconstruction /
     # epoch control — the per-phase perf trajectory BENCH_*.json tracks.
     phase_times: dict = field(default_factory=dict)
+    # Multi-switch (sharded-directory) racks: how many switch shards the
+    # directory was partitioned across, the per-shard access counts
+    # (accesses homed at each shard, faults included), and how many
+    # accesses actually traversed the switch-to-switch link (home shard
+    # != ingress switch, excluding pure local hits and faults — exactly
+    # the accesses that paid `switch_to_switch_us`).
+    num_shards: int = 1
+    shard_accesses: list[int] = field(default_factory=list)
+    cross_shard_accesses: int = 0
 
     @property
     def mean_access_us(self) -> float:
@@ -95,6 +104,11 @@ class DisaggregatedRack:
         self.system = system
         self.engine = engine
         self.engine_options = dict(engine_options or {})
+        # Multi-switch sharding (overridden by ShardedRack): a single
+        # switch is the 1-shard degenerate case — every access is homed
+        # at its ingress switch and no cross-shard hop is ever charged.
+        self.num_shards = 1
+        self.shard_map = None
         self.nb = num_compute_blades
         self.tpb = threads_per_blade
         self.epoch_us = epoch_us
@@ -239,6 +253,12 @@ class DisaggregatedRack:
         )
 
     # ------------------------------------------------------------------ #
+    def _route(self, blade: int, vaddr: int, req: MemAccess):
+        """Route one packet to its switch.  The single-switch rack has
+        exactly one pipeline; :class:`ShardedRack` overrides this with
+        home-switch routing plus the cross-shard hop."""
+        return self.mmu.handle(req)
+
     def _mind_access(self, blade, vaddr, is_write, pso, breakdown, trans_lat) -> float:
         req = MemAccess(
             blade_id=blade,
@@ -246,7 +266,7 @@ class DisaggregatedRack:
             vaddr=vaddr,
             access=AccessType.WRITE if is_write else AccessType.READ,
         )
-        res = self.mmu.handle(req)
+        res = self._route(blade, vaddr, req)
         lb = res.latency
         breakdown["fetch"] += lb.fetch_us
         breakdown["invalidation"] += lb.invalidation_us
@@ -335,6 +355,101 @@ class DisaggregatedRack:
         us = net.fastswap_remote_us() + net.page_transfer_us(flushed)
         breakdown["fetch"] += us
         return us
+
+
+class ShardedRack(DisaggregatedRack):
+    """Multi-switch rack: the region directory sharded across N switch
+    instances by a VA-range :class:`~repro.core.switch.ShardMap`.
+
+    Each access is processed at the *home switch* of its VA shard
+    (block-cyclic over max-region-sized blocks, so a Bounded-Splitting
+    region never straddles shards); compute blades enter the rack
+    round-robin (`blade % num_shards`), and an access whose home shard
+    differs from its ingress switch pays one extra switch-to-switch hop
+    (``NetworkConstants.switch_to_switch_us``) on every path that
+    reaches the switch — pure local hits never leave the blade and
+    protection faults are decided at the ingress pipeline, so neither
+    pays it.
+
+    **The sharding-invariance contract** (pinned by
+    ``tests/test_sharded.py``): the control plane stays centralized —
+    it owns every shard's SRAM free list, installs/evicts entries and
+    drives Bounded-Splitting epochs globally, exactly as MIND's §3.2
+    control plane owns the data-plane state of the switch — so
+    *coherence decisions are shard-count-invariant*.  A 1/2/4-shard
+    replay produces byte-identical coherence statistics to the
+    single-switch oracle; with ``switch_to_switch_us == 0`` the
+    runtimes and latency breakdowns are identical too, and with a
+    nonzero hop they differ from the oracle by exactly
+    ``cross_shard_accesses * switch_to_switch_us`` of thread time on
+    epoch-free TSO replays (the hop relocates time but never changes a
+    transition).  What sharding *adds* is capacity: each switch ASIC
+    carries only its shard's directory slice (``shard_occupancy``),
+    per-shard failover snapshots (`ControlPlane.snapshot(shard=k)`),
+    and — on ``engine="batched"`` — a per-shard TCAM/MSI kernel
+    invocation whose conflict lanes only serialize that shard's
+    regions.
+    """
+
+    def __init__(self, num_shards: int = 2, shard_map: ShardMap | None = None,
+                 **rack_kw):
+        system = rack_kw.get("system", "mind")
+        if not system.startswith("mind"):
+            raise ValueError(
+                f"sharded directories need an in-network MMU; {system!r} "
+                "has no switch to shard — use DisaggregatedRack")
+        super().__init__(**rack_kw)
+        d = self.mmu.engine.directory
+        self.shard_map = shard_map or ShardMap(
+            num_shards=num_shards, home_log2=d.max_region_log2)
+        self.num_shards = self.shard_map.num_shards
+        assert self.shard_map.home_log2 >= d.max_region_log2, (
+            "shard blocks must be at least max-region-sized so no region "
+            "straddles a shard boundary")
+        self.cp.shard_map = self.shard_map
+        # One InNetworkMMU per shard.  The switches share the global
+        # address space, the protection table (replicated rules in a
+        # real rack), the network model (queueing happens at the target
+        # *blades*) and the coherence engine whose directory the control
+        # plane owns globally — switch 0 is the primary `self.mmu`.
+        self.switches = [self.mmu] + [
+            InNetworkMMU(self.mmu.gas, self.mmu.protection,
+                         self.mmu.engine, self.mmu.network)
+            for _ in range(self.num_shards - 1)
+        ]
+        self._shard_counts = np.zeros(self.num_shards, np.int64)
+        self._cross_count = 0
+
+    # ------------------------------------------------------------------ #
+    def shard_occupancy(self) -> list[int]:
+        """Directory entries currently homed at each switch shard (the
+        per-ASIC SRAM occupancy a real deployment would provision by)."""
+        counts = [0] * self.num_shards
+        for key in self.mmu.engine.directory.entries:
+            counts[self.shard_map.home_of_key(key)] += 1
+        return counts
+
+    # ------------------------------------------------------------------ #
+    def run(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
+        self._shard_counts = np.zeros(self.num_shards, np.int64)
+        self._cross_count = 0
+        res = super().run(trace, max_accesses)
+        if res.engine == "scalar":  # batched fills these itself
+            res.num_shards = self.num_shards
+            res.shard_accesses = self._shard_counts.tolist()
+            res.cross_shard_accesses = int(self._cross_count)
+        return res
+
+    def _route(self, blade: int, vaddr: int, req: MemAccess):
+        home = self.shard_map.home_of(vaddr)
+        self._shard_counts[home] += 1
+        res = self.switches[home].handle(req)
+        if res.acts.fault is None:
+            pure_local = res.acts.hit_local and not res.acts.needed_invalidation
+            if not pure_local and home != self.shard_map.ingress_of(blade):
+                res.latency.switch_us += self.mmu.network.cross_shard_us()
+                self._cross_count += 1
+        return res
 
 
 def _bits(bm: int) -> list[int]:

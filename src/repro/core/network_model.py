@@ -93,6 +93,19 @@ class NetworkModel:
         return lb
 
     # ------------------------------------------------------------------ #
+    # Multi-switch (sharded-directory) racks.
+    # ------------------------------------------------------------------ #
+    def cross_shard_us(self) -> float:
+        """Extra hop charged when a packet enters at one switch but its
+        VA shard is homed at another: the packet traverses the
+        switch-to-switch link to the home switch's pipeline before the
+        directory MAUs run.  Pure local hits never leave the blade and
+        never pay it; protection faults are decided at the *ingress*
+        switch (stage A runs in every pipeline) and never pay it
+        either."""
+        return self.k.switch_to_switch_us
+
+    # ------------------------------------------------------------------ #
     # Baseline models (§7.1 compared systems).
     # ------------------------------------------------------------------ #
     def gam_local_us(self) -> float:

@@ -29,6 +29,56 @@ from repro.core.protection import ProtectionTable
 from repro.core.types import AccessType, CoherenceActions, MemAccess
 
 
+@dataclass(frozen=True)
+class ShardMap:
+    """VA-range shard map of a multi-switch (sharded-directory) rack.
+
+    The region directory is partitioned across ``num_shards`` switch
+    instances block-cyclically over ``1 << home_log2``-sized,
+    naturally-aligned VA blocks: block ``vaddr >> home_log2`` is homed
+    at switch ``block % num_shards``.  Because ``home_log2`` is at
+    least the directory's ``max_region_log2`` and regions are
+    pow2-sized and naturally aligned (the Bounded-Splitting region-tree
+    invariant), **no region ever straddles a shard boundary** — a
+    region's home switch is the home of its base address, and every
+    split/merge of the region tree stays inside one shard.
+
+    Compute blades are cabled round-robin: blade ``b`` enters the rack
+    at switch ``b % num_shards``.  An access whose home shard differs
+    from its ingress switch pays one extra switch-to-switch hop
+    (:meth:`~repro.core.network_model.NetworkModel.cross_shard_us`).
+    """
+
+    num_shards: int
+    home_log2: int = 21  # >= CacheDirectory.max_region_log2 (checked by users)
+
+    def __post_init__(self):
+        assert self.num_shards >= 1
+        assert self.home_log2 >= 12
+
+    # ---- home-switch routing ----------------------------------------- #
+    def home_of(self, vaddr: int) -> int:
+        return (vaddr >> self.home_log2) % self.num_shards
+
+    def home_of_batch(self, vaddrs: np.ndarray) -> np.ndarray:
+        v = np.asarray(vaddrs, np.int64)
+        return ((v >> self.home_log2) % self.num_shards).astype(np.int32)
+
+    def home_of_key(self, key: tuple[int, int]) -> int:
+        """Home shard of a directory entry ``(base, log2)`` — well
+        defined because regions never straddle shard boundaries."""
+        base, log2 = key
+        assert log2 <= self.home_log2, "region larger than a shard block"
+        return self.home_of(base)
+
+    # ---- blade ingress ------------------------------------------------ #
+    def ingress_of(self, blade: int) -> int:
+        return blade % self.num_shards
+
+    def ingress_of_batch(self, blades: np.ndarray) -> np.ndarray:
+        return (np.asarray(blades, np.int64) % self.num_shards).astype(np.int32)
+
+
 @dataclass
 class SwitchResult:
     acts: CoherenceActions

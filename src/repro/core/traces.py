@@ -15,6 +15,11 @@ matched traces instead (no PIN on TPU hosts):
   * M_C — YCSB-C: 100% reads over zipfian keys, all shared.
   * uniform(read_ratio, sharing_ratio) — the microbenchmark of Fig. 8
           (center/right): uniform random over 400k pages.
+  * XS  — deterministic cross-shard conflict workload for multi-switch
+          (sharded-directory) racks: contended zipfian hot sets swept
+          round-robin over max-region-sized VA blocks so every shard of
+          a block-cyclic shard map sees sharers from every blade
+          (``sharded_conflict_trace``).
 
 Every generator yields (thread_id, op, vaddr_offset) triples with
 vaddr_offset relative to a workload-owned arena; the emulator maps threads
@@ -213,6 +218,71 @@ def kv_serving_trace(
     return _interleave("KV", ths, ops, offs, arena, shared_bytes, rng)
 
 
+def sharded_conflict_trace(
+    num_threads: int,
+    accesses_per_thread: int = 2_000,
+    num_shards: int = 4,
+    blocks_per_shard: int = 2,
+    block_log2: int = 21,  # = the directory's max-region (2 MB) blocks
+    conflict_frac: float = 0.5,
+    write_frac: float = 0.30,
+    hot_pages_per_block: int = 24,
+    private_kb_per_thread: int = 256,
+    seed: int = 9,
+) -> Trace:
+    """Deterministic cross-shard conflict trace for multi-switch racks.
+
+    Shard-map-aware by construction: the shared prefix of the arena is
+    ``num_shards * blocks_per_shard`` max-region-sized, naturally
+    aligned VA *blocks* — the granularity a block-cyclic
+    :class:`~repro.core.switch.ShardMap` homes switches by — and every
+    thread's conflict accesses sweep the blocks round-robin, so **every
+    shard of a 1/2/4-shard map receives contended sharers from every
+    blade** (the allocator places the shared vma pow2-aligned to its
+    size, so arena blocks stay whole shard blocks after mapping;
+    block counts are a multiple of ``num_shards``, so any constant
+    block rotation the mapping introduces preserves per-shard
+    coverage).  Within a block, accesses hit a small zipfian hot set
+    (``hot_pages_per_block``) with ``write_frac`` writes — S->M and
+    M->S storms whose invalidation multicasts repeatedly cross shard
+    boundaries.  The remaining accesses stream each thread's private
+    slice, giving the directory install pressure on every shard.
+
+    Fully seeded: identical arguments produce byte-identical traces
+    (`tests/test_sharded.py::test_generator_deterministic`).  Reused by
+    the parity suite and ``benchmarks/dataplane_bench.py --only
+    sharded``.
+    """
+    assert num_shards >= 1 and blocks_per_shard >= 1
+    rng = np.random.default_rng(seed)
+    nblocks = num_shards * blocks_per_shard
+    block_bytes = 1 << block_log2
+    shared_bytes = nblocks * block_bytes
+    priv_bytes = private_kb_per_thread << 10
+    arena = shared_bytes + num_threads * priv_bytes
+    hot = max(1, min(hot_pages_per_block, block_bytes // PAGE_SIZE))
+    priv_pages = max(1, priv_bytes // PAGE_SIZE)
+    ths, ops, offs = [], [], []
+    for t in range(num_threads):
+        n = accesses_per_thread
+        to_shared = rng.random(n) < conflict_frac
+        # Round-robin over the blocks (phase-shifted per thread) makes
+        # per-shard coverage deterministic rather than probabilistic.
+        block = (np.arange(n) + t) % nblocks
+        page = _zipf_pages(rng, n, hot, a=1.2)
+        shr = block * block_bytes + page * PAGE_SIZE
+        stream = ((np.arange(n) * 3) + rng.integers(0, 2, n)) % priv_pages
+        prv = shared_bytes + t * priv_bytes + stream * PAGE_SIZE
+        off = np.where(to_shared, shr, prv).astype(np.int64)
+        op = np.where(to_shared, rng.random(n) < write_frac,
+                      rng.random(n) < 0.5).astype(np.int8)
+        ths.append(np.full(n, t, np.int32))
+        ops.append(op)
+        offs.append(off)
+    return _interleave(f"XS(shards={num_shards})", ths, ops, offs, arena,
+                       shared_bytes, rng)
+
+
 def _interleave(name, ths, ops, offs, arena, shared_bytes, rng) -> Trace:
     th = np.concatenate(ths)
     op = np.concatenate(ops)
@@ -236,4 +306,5 @@ WORKLOADS = {
     "M_A": ma_trace,
     "M_C": mc_trace,
     "KV": kv_serving_trace,
+    "XS": sharded_conflict_trace,  # cross-shard conflicts (multi-switch)
 }

@@ -223,3 +223,9 @@ class NetworkConstants:
     queue_service_us: float = 1.2  # per queued invalidation at a blade
     link_gbps: float = 100.0  # per-blade NIC
     switch_pipeline_ns: float = 400.0  # ASIC pipeline traversal
+    # Multi-switch (sharded-directory) racks: one switch-to-switch hop
+    # charged when a packet's ingress switch is not the home switch of
+    # its VA shard — a second pipeline traversal plus the inter-switch
+    # link (§4.1 range partitioning extended across ASICs).  Single-
+    # switch racks never charge it.
+    switch_to_switch_us: float = 1.0

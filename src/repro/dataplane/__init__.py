@@ -40,14 +40,22 @@ decode + per-blade fast/slow LRU replay over
 evictions, both inject *eviction packets* into the device stream, and
 speculate-and-truncate chunking lands epoch boundaries on exactly the
 access the scalar oracle fires them at (see
-:mod:`repro.dataplane.engine`).  The engine still refuses (raises
-:class:`UnsupportedByBatchedEngine`) the behaviours that stay
+:mod:`repro.dataplane.engine`).  Multi-switch *sharded-directory*
+racks (:class:`~repro.core.emulator.ShardedRack`) replay with the
+same exactness: each shard's packets run through their own TCAM/MSI
+kernel invocation (:func:`partition_by_shard`) and cross-shard
+accesses charge the switch-to-switch hop.  The engine still refuses
+(raises :class:`UnsupportedByBatchedEngine`) the behaviours that stay
 scalar-engine-only — the systems without a switch data plane (gam,
 fastswap) — instead of silently diverging from the oracle.
 """
 
 from repro.dataplane.engine import BatchedDataPlane, UnsupportedByBatchedEngine
-from repro.dataplane.scheduler import WaveSchedule, build_wave_schedule
+from repro.dataplane.scheduler import (
+    WaveSchedule,
+    build_wave_schedule,
+    partition_by_shard,
+)
 from repro.dataplane.tables import DataPlaneState, PageMap, RegionTable
 
 __all__ = [
@@ -58,4 +66,5 @@ __all__ = [
     "UnsupportedByBatchedEngine",
     "WaveSchedule",
     "build_wave_schedule",
+    "partition_by_shard",
 ]

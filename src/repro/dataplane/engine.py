@@ -90,6 +90,20 @@ well (the kernel keeps the downgraded owner's presence bits, flushes
 its dirty bits, and leaves it a sharer).  The engine still *refuses*
 (raises :class:`UnsupportedByBatchedEngine`) only when the modelled
 system has no switch data plane (gam/fastswap).
+
+**Multi-switch (sharded-directory) racks** replay with the same exact
+parity: when the bound rack is a
+:class:`~repro.core.emulator.ShardedRack`, each chunk's packets are
+partitioned by the home shard of their region
+(:func:`~repro.dataplane.scheduler.partition_by_shard`) and each
+shard runs *its own* TCAM/MSI kernel invocation — protection at the
+ingress pipeline, translation at the home pipeline, conflict lanes
+serializing only that shard's regions.  The split is exact because
+shards partition the VA space at max-region blocks (no shared or
+overlapping regions across shards; plane merges compose over disjoint
+bit sets).  Cross-shard accesses charge the ``switch_to_switch_us``
+hop in the host latency reconstruction, mirroring the scalar
+``ShardedRack._route`` — pure local hits and faults never pay it.
 """
 
 from __future__ import annotations
@@ -102,7 +116,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import PAGE_SHIFT, MSIState, next_pow2
-from repro.dataplane.scheduler import build_wave_schedule
+from repro.dataplane.scheduler import build_wave_schedule, partition_by_shard
 from repro.dataplane.tables import (
     BladeCacheShadow,
     RegionTable,
@@ -311,6 +325,14 @@ class BatchedDataPlane:
         # None = auto: per chunk, as many lanes as the serialization
         # floor (the hottest region's packet share) can actually fill.
         self.lanes = None if lanes is None else int(lanes)
+        # Multi-switch (sharded-directory) racks: each shard's packets
+        # replay through their own TCAM/MSI kernel invocation, and
+        # cross-shard accesses charge the switch-to-switch hop in the
+        # host latency reconstruction (exact scalar parity either way).
+        self._smap = getattr(rack, "shard_map", None)
+        self._nshards = int(getattr(rack, "num_shards", 1) or 1)
+        self._sharded = self._smap is not None and self._nshards > 1
+        self._cross_acc = 0  # hop charges committed so far this run
         # M->S downgrades keep a read-only copy at the old owner; the
         # kernel and both pre-passes model it, so no refusal needed.
         self._dkc = bool(rack.mmu.engine.downgrade_keeps_copy)
@@ -355,13 +377,26 @@ class BatchedDataPlane:
         vaddrs = (rack._to_vaddr_batch(segs, trace.offsets[:n])
                   if n else np.zeros(0, np.int64))
 
-        state = build_dataplane_state(mmu, segs, rack.nb)
+        state = build_dataplane_state(mmu, segs, rack.nb,
+                                      shard_map=self._smap)
         self.state = state
         self._rt = state.regions
         self._dtab = None  # mapping may have grown since a prior run
         self._row_of = {}
         dense = state.page_map.dense_of(vaddrs)
         self._plan_cache_replay(blades, dense, state)
+        # Home-switch routing: the shard each access's region is homed
+        # at, and whether it enters the rack at a different switch (the
+        # accesses that pay the switch-to-switch hop unless they turn
+        # out to be pure local hits).
+        self._cross_acc = 0
+        if self._sharded:
+            home_acc = self._smap.home_of_batch(vaddrs)
+            ingress_acc = self._smap.ingress_of_batch(blades)
+            cross_acc = home_acc != ingress_acc
+        else:
+            home_acc = np.zeros(n, np.int32)
+            cross_acc = np.zeros(n, bool)
         if n:
             # Mirror the scalar engine's first-access drain of evictions
             # queued during mmap-time prepopulation (§4.4 overflow).
@@ -369,16 +404,35 @@ class BatchedDataPlane:
         t0 = self._tick("state_build", t0)
 
         # Pipeline stages 1+2 over the whole trace: the Pallas TCAM
-        # kernels (protection in parallel with translation, §3.2).
+        # kernels (protection in parallel with translation, §3.2).  On a
+        # sharded rack each switch runs its own TCAM invocation:
+        # protection at every packet's *ingress* pipeline, translation
+        # at its *home* pipeline (the tables are control-plane replicas,
+        # so the split changes where the work runs, never the result).
         faults = np.zeros(n, bool)
         if n:
             from repro.kernels import ops as K
             from repro.kernels.range_match import NO_MATCH
 
             need = np.where(writes == 1, 2, 1).astype(np.int32)
-            allow = K.protect_check(
-                np.ones(n, np.int32), vaddrs, need, state.protect)
-            _, rows = K.translate_lookup(vaddrs, state.translate)
+            if self._sharded:
+                allow = np.ones(n, bool)
+                rows = np.full(n, NO_MATCH, np.int64)
+                for s in range(self._nshards):
+                    isel = np.flatnonzero(ingress_acc == s)
+                    if len(isel):
+                        allow[isel] = np.asarray(K.protect_check(
+                            np.ones(len(isel), np.int32), vaddrs[isel],
+                            need[isel], state.protect))
+                    hsel = np.flatnonzero(home_acc == s)
+                    if len(hsel):
+                        _, r = K.translate_lookup(vaddrs[hsel],
+                                                  state.translate)
+                        rows[hsel] = np.asarray(r)
+            else:
+                allow = K.protect_check(
+                    np.ones(n, np.int32), vaddrs, need, state.protect)
+                _, rows = K.translate_lookup(vaddrs, state.translate)
             if (np.asarray(rows) == NO_MATCH).any():
                 raise UnsupportedByBatchedEngine(
                     "trace touches vaddrs outside every blade range")
@@ -400,7 +454,8 @@ class BatchedDataPlane:
         next_epoch_at = rack.epoch_us
         kvec = (knet.local_dram_ns / 1000.0, knet.rdma_fetch_us,
                 knet.invalidation_us, knet.tlb_shootdown_us,
-                knet.queue_service_us, knet.switch_pipeline_ns / 1000.0)
+                knet.queue_service_us, knet.switch_pipeline_ns / 1000.0,
+                knet.switch_to_switch_us)
 
         switch_us = kvec[5]
         nfaults = int(faults.sum())
@@ -444,8 +499,8 @@ class BatchedDataPlane:
                 return np.zeros(0, np.int64), np.zeros(0, np.float64)
             charged = self._process_chunk(
                 vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
-                writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
-                breakdown, trans_lat, inflight)
+                writes[lo:hi][m], threads[lo:hi][m], cross_acc[lo:hi][m],
+                kvec, pso, clocks, breakdown, trans_lat, inflight)
             note_avg(charged)
             return np.flatnonzero(m), charged
 
@@ -456,8 +511,9 @@ class BatchedDataPlane:
                         lambda: None)
             res = self._process_chunk(
                 vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
-                writes[lo:hi][m], threads[lo:hi][m], kvec, pso, clocks,
-                breakdown, trans_lat, inflight, defer=True)
+                writes[lo:hi][m], threads[lo:hi][m], cross_acc[lo:hi][m],
+                kvec, pso, clocks, breakdown, trans_lat, inflight,
+                defer=True)
             if res is None:
                 return None
             charged, commit = res
@@ -583,6 +639,11 @@ class BatchedDataPlane:
             total_thread_us=float(clocks.sum()),
             engine="batched",
             phase_times=dict(self.phase_times),
+            num_shards=self._nshards,
+            shard_accesses=(np.bincount(
+                home_acc, minlength=self._nshards).tolist()
+                if self._smap is not None else []),
+            cross_shard_accesses=int(self._cross_acc),
         )
 
     # ------------------------------------------------------------------ #
@@ -604,6 +665,7 @@ class BatchedDataPlane:
         return {
             "clocks": clocks.copy(),
             "inflight": inflight.copy(),
+            "cross_acc": self._cross_acc,
             "breakdown": dict(breakdown),
             "trans_lens": {k: len(v) for k, v in trans_lat.items()},
             "stats": {f: getattr(stats, f)
@@ -631,6 +693,7 @@ class BatchedDataPlane:
         stats = eng.stats
         clocks[:] = snap["clocks"]
         inflight[:] = snap["inflight"]
+        self._cross_acc = snap["cross_acc"]
         breakdown.clear()
         breakdown.update(snap["breakdown"])
         lens = snap["trans_lens"]
@@ -718,7 +781,8 @@ class BatchedDataPlane:
             return 1
         k = self.rack.mmu.network.k
         c1 = (k.switch_pipeline_ns / 1000.0 + k.rdma_fetch_us
-              + k.invalidation_us + k.tlb_shootdown_us)
+              + k.invalidation_us + k.tlb_shootdown_us
+              + (k.switch_to_switch_us if self._sharded else 0.0))
         kq = k.queue_service_us
         q0 = float(inflight.max()) if len(inflight) else 0.0
         a = kq
@@ -805,7 +869,8 @@ class BatchedDataPlane:
         if self._rt is None:
             mmu = self.rack.mmu
             self._rt = build_region_table(
-                mmu.engine.directory, mmu.engine._prepopulated)
+                mmu.engine.directory, mmu.engine._prepopulated,
+                shard_map=self._smap)
         return self._rt
 
     def _install_missing_regions(self, window_bases: np.ndarray) -> None:
@@ -926,6 +991,8 @@ class BatchedDataPlane:
                 owner=vals[:, 2].astype(np.int32),
                 prepop=np.fromiter((k in prepop for k in keys), bool, n),
                 keys=keys)
+            if self._sharded:
+                self._dtab.shard = self._smap.home_of_batch(bases)
             self._row_of = {k: i for i, k in enumerate(keys)}
         return self._dtab
 
@@ -949,6 +1016,9 @@ class BatchedDataPlane:
         rt.sharers = np.concatenate([rt.sharers, z])
         rt.owner = np.concatenate([rt.owner, z - 1])
         rt.prepop = np.concatenate([rt.prepop, np.zeros(len(fresh), bool)])
+        if rt.shard is not None:
+            rt.shard = np.concatenate(
+                [rt.shard, self._smap.home_of_batch(nb_)])
         rt.keys = rt.keys + fresh
 
     # ------------------------------------------------------------------ #
@@ -1266,10 +1336,16 @@ class BatchedDataPlane:
         return events
 
     # ------------------------------------------------------------------ #
-    def _process_chunk(self, vaddr, dense, blade, write, thread, kvec, pso,
-                       clocks, breakdown, trans_lat, inflight,
+    def _process_chunk(self, vaddr, dense, blade, write, thread, cross,
+                       kvec, pso, clocks, breakdown, trans_lat, inflight,
                        defer: bool = False):
         """Replay one chunk.  Returns the per-kept-access charge vector.
+
+        ``cross`` flags the accesses whose home shard differs from
+        their ingress switch: unless they resolve to pure local hits
+        they charge the extra switch-to-switch hop, exactly like the
+        scalar ``ShardedRack._route`` (all-False on single-switch
+        racks).
 
         With ``defer=True`` (speculative epoch chunks) every host-state
         mutation — recency touches, directory/plane write-back, stats,
@@ -1427,7 +1503,9 @@ class BatchedDataPlane:
 
         # Overlapping active regions (coarse re-installs over surviving
         # split children) share cache-plane bits: pin each overlap
-        # component to one lane so their packets serialize.
+        # component to one lane so their packets serialize.  Components
+        # never span shards — overlap needs overlapping VA, and shards
+        # partition the VA space at max-region blocks.
         group_of_slot = None
         if sa > 1:
             ab = rt.bases[act_rows]
@@ -1441,84 +1519,134 @@ class BatchedDataPlane:
                 group_of_slot = np.empty(sa, np.int64)
                 group_of_slot[order] = comp
 
-        lanes = self.lanes
-        if lanes is None:
-            # Wave count is floored by the hottest scheduling group;
-            # lanes beyond batch/hottest add vmap width (per-wave cost)
-            # without removing waves.
-            counts = np.bincount(slot_of_pkt, minlength=max(sa, 1))
-            if group_of_slot is not None:
-                hot = float(np.bincount(group_of_slot,
-                                        weights=counts).max())
-            else:
-                hot = float(counts.max()) if sa else 1.0
-            ideal = len(slot_of_pkt) / max(1.0, hot)
-            lanes = int(min(16, max(2, next_pow2(int(ideal) + 1) // 2)))
-        sched = build_wave_schedule(slot_of_pkt, sa, lanes=lanes,
-                                    group_of_slot=group_of_slot)
-        g = sched.lanes
-        s_dev = next_pow2(sched.slots_per_lane + 1)
-        l_dev = max(1, next_pow2(sched.num_waves))
-        dummy = s_dev - 1
         words = state.planes.shape[1]
-
-        def lane_stream(per_pkt, fill, dtype=np.int32):
-            out = np.full((g, l_dev), fill, dtype)
-            out[:, : sched.num_waves][sched.acc_valid] = per_pkt[
-                sched.acc_index[sched.acc_valid]]
-            return out
-
-        acc_slot = lane_stream(sched.local_of_slot[slot_of_pkt], dummy)
-        acc_blade = lane_stream(pkt_blade, 0)
-        acc_write = lane_stream(pkt_write, 0)
-        acc_type = lane_stream(pkt_type, 0)
-        acc_w0 = lane_stream(w0[slot_of_pkt], words)  # dummy -> pad words
+        npkt = len(slot_of_pkt)
         # Directory-eviction packets carry no page; accesses and
         # blade-cache eviction packets address (dense page) - (slot w0).
         rw_val = np.where(
             pkt_type == 1, 0,
             (pkt_dense >> 5) - w0[slot_of_pkt].astype(np.int64)).astype(np.int32)
         bit_val = np.where(pkt_type == 1, 0, pkt_dense & 31).astype(np.int32)
-        acc_rw = lane_stream(rw_val, 0)
-        acc_bit = lane_stream(bit_val, 0)
-        acc_valid = np.zeros((g, l_dev), bool)
-        acc_valid[:, : sched.num_waves] = sched.acc_valid
-
-        # Per-lane directory rows + clear-masks + plane copies.
-        lane_idx = sched.lane_of_slot
-        local_idx = sched.local_of_slot
         dir_pre = np.stack(
             [rt.state[act_rows], rt.sharers[act_rows], rt.owner[act_rows],
-             rt.prepop[act_rows].astype(np.int32)], axis=1)
-        dirrows = np.zeros((g, s_dev, 4), np.int32)
-        dirrows[lane_idx, local_idx] = dir_pre
-        cm_dev = np.zeros((g, s_dev, span), np.int32)
-        cm_dev[lane_idx, local_idx] = cmask
-        planes = np.zeros((g, 2 * nb, words + span), np.int32)
-        planes[:, :, :words] = state.planes[None]
-        t0 = self._tick("schedule", t0)
+             rt.prepop[act_rows].astype(np.int32)], axis=1).astype(np.int32)
+        nword = ((bitoff + npages + 31) >> 5).astype(np.int64)
 
-        out = _replay(
-            jnp.asarray(np.int32(sched.num_waves)),
-            jnp.asarray(self._dkc),
-            jnp.asarray(acc_slot), jnp.asarray(acc_blade),
-            jnp.asarray(acc_write), jnp.asarray(acc_valid),
-            jnp.asarray(acc_type),
-            jnp.asarray(acc_w0), jnp.asarray(acc_rw), jnp.asarray(acc_bit),
-            jnp.asarray(dirrows), jnp.asarray(cm_dev), jnp.asarray(planes))
-        (dir_o, planes_o, w1_o, w2_o, w3_o) = map(np.asarray, out)
-        t0 = self._tick("device", t0)
+        # ---- per-shard device replay -----------------------------------
+        # One wave schedule and one MSI kernel invocation per home
+        # shard: each shard's conflict lanes serialize only that shard's
+        # regions, and the subsets are exact (regions never straddle
+        # shards, so neither packets nor overlap groups do).  The
+        # single-switch rack degenerates to one invocation — the
+        # original path.
+        shard_of_slot = rt.shard[act_rows] if self._sharded else None
+        w1_all = np.zeros(npkt, np.int64)
+        w2_all = np.zeros(npkt, np.int64)
+        flushed_all = np.zeros(npkt, np.int64)
+        dir_n = dir_pre.copy()
+        merged = state.planes.copy()
 
-        # ---- unpack the per-packet output words ------------------------
-        npkt = len(slot_of_pkt)
-        vmask = sched.acc_valid
-        posm = sched.acc_index[vmask]
-        w1_all = np.empty(npkt, np.int64)
-        w2_all = np.empty(npkt, np.int64)
-        flushed_all = np.empty(npkt, np.int64)
-        w1_all[posm] = w1_o[:, : sched.num_waves][vmask]
-        w2_all[posm] = w2_o[:, : sched.num_waves][vmask]
-        flushed_all[posm] = w3_o[:, : sched.num_waves][vmask]
+        for _shard, pkt_idx, slots_sel in partition_by_shard(
+                slot_of_pkt, sa, shard_of_slot):
+            sa_s = len(slots_sel)
+            local_of_global = np.full(sa, -1, np.int32)
+            local_of_global[slots_sel] = np.arange(sa_s, dtype=np.int32)
+            sub_slot = local_of_global[slot_of_pkt[pkt_idx]]
+            sub_group = None
+            if group_of_slot is not None:
+                _, sub_group = np.unique(group_of_slot[slots_sel],
+                                         return_inverse=True)
+            lanes = self.lanes
+            if lanes is None:
+                # Wave count is floored by the hottest scheduling group;
+                # lanes beyond batch/hottest add vmap width (per-wave
+                # cost) without removing waves.
+                counts = np.bincount(sub_slot, minlength=max(sa_s, 1))
+                if sub_group is not None:
+                    hot = float(np.bincount(sub_group,
+                                            weights=counts).max())
+                else:
+                    hot = float(counts.max()) if sa_s else 1.0
+                ideal = len(sub_slot) / max(1.0, hot)
+                lanes = int(min(16, max(2, next_pow2(int(ideal) + 1) // 2)))
+            sched = build_wave_schedule(sub_slot, sa_s, lanes=lanes,
+                                        group_of_slot=sub_group)
+            g = sched.lanes
+            s_dev = next_pow2(sched.slots_per_lane + 1)
+            l_dev = max(1, next_pow2(sched.num_waves))
+            dummy = s_dev - 1
+
+            def lane_stream(per_pkt, fill, dtype=np.int32):
+                out = np.full((g, l_dev), fill, dtype)
+                out[:, : sched.num_waves][sched.acc_valid] = per_pkt[
+                    sched.acc_index[sched.acc_valid]]
+                return out
+
+            acc_slot = lane_stream(sched.local_of_slot[sub_slot], dummy)
+            acc_blade = lane_stream(pkt_blade[pkt_idx], 0)
+            acc_write = lane_stream(pkt_write[pkt_idx], 0)
+            acc_type = lane_stream(pkt_type[pkt_idx], 0)
+            acc_w0 = lane_stream(w0[slot_of_pkt[pkt_idx]], words)  # pad
+            acc_rw = lane_stream(rw_val[pkt_idx], 0)
+            acc_bit = lane_stream(bit_val[pkt_idx], 0)
+            acc_valid = np.zeros((g, l_dev), bool)
+            acc_valid[:, : sched.num_waves] = sched.acc_valid
+
+            # Per-lane directory rows + clear-masks + plane copies.
+            lane_idx = sched.lane_of_slot
+            local_idx = sched.local_of_slot
+            dirrows = np.zeros((g, s_dev, 4), np.int32)
+            dirrows[lane_idx, local_idx] = dir_pre[slots_sel]
+            cm_dev = np.zeros((g, s_dev, span), np.int32)
+            cm_dev[lane_idx, local_idx] = cmask[slots_sel]
+            planes = np.zeros((g, 2 * nb, words + span), np.int32)
+            planes[:, :, :words] = state.planes[None]
+            t0 = self._tick("schedule", t0)
+
+            out = _replay(
+                jnp.asarray(np.int32(sched.num_waves)),
+                jnp.asarray(self._dkc),
+                jnp.asarray(acc_slot), jnp.asarray(acc_blade),
+                jnp.asarray(acc_write), jnp.asarray(acc_valid),
+                jnp.asarray(acc_type),
+                jnp.asarray(acc_w0), jnp.asarray(acc_rw),
+                jnp.asarray(acc_bit),
+                jnp.asarray(dirrows), jnp.asarray(cm_dev),
+                jnp.asarray(planes))
+            (dir_o, planes_o, w1_o, w2_o, w3_o) = map(np.asarray, out)
+            t0 = self._tick("device", t0)
+
+            # ---- unpack this shard's per-packet output words ----------
+            vmask = sched.acc_valid
+            posm = pkt_idx[sched.acc_index[vmask]]
+            w1_all[posm] = w1_o[:, : sched.num_waves][vmask]
+            w2_all[posm] = w2_o[:, : sched.num_waves][vmask]
+            flushed_all[posm] = w3_o[:, : sched.num_waves][vmask]
+            dir_n[slots_sel] = dir_o[lane_idx, local_idx]
+
+            # ---- merge lane planes by bit ownership -------------------
+            # Ownership scatter over (lane, word) pairs: expand each
+            # active row to exactly its occupied words (most regions
+            # span one) — O(sum of spans), not O(sa * max_span).
+            # Shards own disjoint bit sets, so the per-shard merges
+            # compose in any order.
+            own = np.zeros((g, words + span), np.int32)
+            nword_s = nword[slots_sel]
+            totw = int(nword_s.sum())
+            if totw:
+                repr_ = np.repeat(np.arange(sa_s), nword_s)
+                offs = np.arange(totw) - np.repeat(
+                    nword_s.cumsum() - nword_s, nword_s)
+                grow = slots_sel[repr_]
+                np.bitwise_or.at(
+                    own, (lane_idx[repr_], w0[grow] + offs),
+                    cmask[grow, offs])
+            all_owned = np.bitwise_or.reduce(own, axis=0)
+            merged &= ~all_owned[:words]
+            for gg in range(g):
+                merged |= planes_o[gg, :, :words] & own[gg, :words]
+            t0 = self._tick("merge_writeback", t0)
+
         inval_all = w1_all >> 7
         ninv_all = np.zeros(npkt, np.int64)
         for c in range(nb):
@@ -1528,27 +1656,7 @@ class BatchedDataPlane:
         is_acc = pkt_orig >= 0
         nhits = int((w1_all[is_acc] & 1).sum())
 
-        # ---- merge lane planes by bit ownership ------------------------
-        # Ownership scatter over (lane, word) pairs: expand each active
-        # row to exactly its occupied words (most regions span one) —
-        # O(sum of spans), not O(sa * max_span).
-        own = np.zeros((g, words + span), np.int32)
-        nword = ((bitoff + npages + 31) >> 5).astype(np.int64)
-        totw = int(nword.sum())
-        if totw:
-            repr_ = np.repeat(np.arange(sa), nword)
-            offs = np.arange(totw) - np.repeat(nword.cumsum() - nword, nword)
-            np.bitwise_or.at(
-                own, (lane_idx[repr_], w0[repr_] + offs),
-                cmask[repr_, offs])
-        all_owned = np.bitwise_or.reduce(own, axis=0) if sa else np.zeros(
-            words + span, np.int32)
-        merged = state.planes & ~all_owned[:words]
-        for gg in range(g):
-            merged |= planes_o[gg, :, :words] & own[gg, :words]
-
         # ---- write-back: directory entries + per-region epoch stats ---
-        dir_n = dir_o[lane_idx, local_idx]
         # Per-region Bounded-Splitting counters, reduced host-side from
         # the packed words: accesses and false invalidations per slot,
         # counting only packets after the slot's last eviction packet (a
@@ -1637,7 +1745,7 @@ class BatchedDataPlane:
         ind = ((invals[:, None] >> np.arange(nb)) & 1).astype(np.int64)
         cum_excl = np.cumsum(ind, axis=0) - ind + inflight[None, :]
         q = np.where(ind > 0, cum_excl, 0).max(axis=1).astype(np.float64)
-        k_local, k_rdma, k_inval, k_tlb, k_queue, k_switch = kvec
+        k_local, k_rdma, k_inval, k_tlb, k_queue, k_switch, k_s2s = kvec
         queue_f = np.where(has_inv, k_queue * q, 0.0)
         tlb_f = np.where(has_inv, k_tlb, 0.0)
         inv_f = np.where(has_inv, k_inval, 0.0)
@@ -1649,7 +1757,13 @@ class BatchedDataPlane:
         lb_inv = np.where(seq, inv_f, 0.0)
         lb_tlb = np.where(par | pure_local, 0.0, tlb_f)
         lb_queue = np.where(par | pure_local, 0.0, queue_f)
-        lb_switch = np.where(pure_local, 0.0, k_switch)
+        # Cross-shard accesses traverse the switch-to-switch link to
+        # their home pipeline — the hop rides the switch term, exactly
+        # where ShardedRack._route puts it (pure local hits never leave
+        # the blade and pay nothing).
+        cross_hop = cross & ~pure_local
+        lb_switch = np.where(pure_local, 0.0, k_switch) + np.where(
+            cross_hop, k_s2s, 0.0)
         total = lb_fetch + lb_inv + lb_tlb + lb_queue + lb_switch
         if pso:
             charged = np.where(
@@ -1659,6 +1773,7 @@ class BatchedDataPlane:
 
         def commit_latency():
             np.add.at(clocks, thread, charged)
+            self._cross_acc += int(cross_hop.sum())
             breakdown["fetch"] += float(lb_fetch.sum())
             breakdown["invalidation"] += float(lb_inv.sum())
             breakdown["tlb"] += float(lb_tlb.sum())

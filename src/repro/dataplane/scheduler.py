@@ -25,6 +25,15 @@ regions (possible after capacity evictions re-cover split children at a
 coarser granularity) share cache-plane bits, so the engine passes them
 as one scheduling *group* via ``group_of_slot`` and they are pinned to
 one lane rather than racing across lanes.
+
+Multi-switch (sharded-directory) racks add one partitioning level
+*above* lanes: :func:`partition_by_shard` splits a chunk's packet
+stream by the home shard of each packet's region, and the engine builds
+one wave schedule — and runs one TCAM/MSI kernel invocation — per
+shard.  The split is exact because shards partition the VA space at
+max-region-block granularity: two packets of different shards can never
+touch the same region (or overlapping regions), so per-shard replay in
+stream order is indistinguishable from the single-switch interleaving.
 """
 
 from __future__ import annotations
@@ -54,6 +63,39 @@ class WaveSchedule:
     lane_len: np.ndarray  # int32 [lanes]
     acc_valid: np.ndarray  # bool  [lanes, num_waves]
     acc_index: np.ndarray  # int64 [lanes, num_waves] original batch pos
+
+
+def partition_by_shard(
+    slot_of_pkt: np.ndarray,
+    num_slots: int,
+    shard_of_slot: np.ndarray | None = None,
+) -> list[tuple[int, np.ndarray, np.ndarray]]:
+    """Split one chunk's packet stream into per-home-shard subsets.
+
+    Args:
+      slot_of_pkt: int array [P] of active-slot ids in stream order.
+      num_slots: number of active slots in the chunk.
+      shard_of_slot: optional int array [num_slots] of home-shard ids.
+        ``None`` (the single-switch rack) yields one part holding the
+        whole stream.
+
+    Returns a list of ``(shard, pkt_idx, slots)`` per shard present in
+    the chunk: ``pkt_idx`` the packet positions homed there (ascending,
+    so per-shard replay preserves stream order) and ``slots`` the
+    active-slot ids the shard owns (ascending).  Every packet and every
+    slot lands in exactly one part.
+    """
+    if shard_of_slot is None:
+        return [(0, np.arange(len(slot_of_pkt), dtype=np.int64),
+                 np.arange(num_slots, dtype=np.int64))]
+    shard_of_slot = np.asarray(shard_of_slot)
+    shard_of_pkt = shard_of_slot[slot_of_pkt]
+    return [
+        (int(s),
+         np.flatnonzero(shard_of_pkt == s).astype(np.int64),
+         np.flatnonzero(shard_of_slot == s).astype(np.int64))
+        for s in np.unique(shard_of_slot).tolist()
+    ]
 
 
 def build_wave_schedule(

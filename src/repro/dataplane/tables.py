@@ -80,6 +80,11 @@ class RegionTable:
     prepop: np.ndarray  # bool  [S]
     keys: list = field(default_factory=list)
     recency: np.ndarray = None  # int64 [S] LRU rank, 0 = coldest
+    # Multi-switch racks: home shard per row (int32 [S]), populated when
+    # a ShardMap is passed to the builder.  Regions never straddle shard
+    # boundaries (pow2-aligned, <= the shard-block size), so one row has
+    # exactly one home — the kernel invocation that replays it.
+    shard: np.ndarray = None
     overlapping: bool = False
     # LPM index, built iff overlapping: [(log2, sorted_bases, row_ids)],
     # ascending log2 (most specific first).
@@ -113,7 +118,8 @@ class RegionTable:
         return out
 
 def build_region_table(directory, prepopulated: set,
-                       with_recency: bool = False) -> RegionTable:
+                       with_recency: bool = False,
+                       shard_map=None) -> RegionTable:
     """Materialize the directory as a :class:`RegionTable`.
 
     Overlapping entries (possible once capacity evictions punched holes
@@ -149,6 +155,8 @@ def build_region_table(directory, prepopulated: set,
     if with_recency:
         rank = {k: i for i, k in enumerate(directory.lru_keys())}
         rt.recency = np.fromiter((rank[k] for k in keys), np.int64, n)
+    if shard_map is not None and shard_map.num_shards > 1:
+        rt.shard = shard_map.home_of_batch(rt.bases)
     if n > 1 and (rt.ends[:-1] > rt.bases[1:]).any():
         rt.overlapping = True
         rt.levels = _build_lpm_levels(rt.bases, rt.log2s)
@@ -534,7 +542,8 @@ class DataPlaneState:
     num_blades: int
 
 
-def build_dataplane_state(mmu, segs, num_compute_blades: int) -> DataPlaneState:
+def build_dataplane_state(mmu, segs, num_compute_blades: int,
+                          shard_map=None) -> DataPlaneState:
     # Only the translate/protect match-action tables are taken from the
     # MMU export — the directory rows come from build_region_table
     # directly (mmu.export_dataplane_tables() would additionally
@@ -542,7 +551,8 @@ def build_dataplane_state(mmu, segs, num_compute_blades: int) -> DataPlaneState:
     # reads; failover and diagnostics still use the full export).
     page_map = build_page_map(segs)
     regions = build_region_table(mmu.engine.directory,
-                                 mmu.engine._prepopulated)
+                                 mmu.engine._prepopulated,
+                                 shard_map=shard_map)
     words = (page_map.total_pages + 31) // 32
     return DataPlaneState(
         regions=regions,

@@ -1,0 +1,524 @@
+"""Multi-switch (sharded-directory) rack vs the single-switch oracle.
+
+The ISSUE 5 contract: a `ShardedRack` partitions the region directory
+across N switch instances by a VA-range `ShardMap` (block-cyclic over
+max-region-sized blocks, so no region ever straddles shards), routes
+every access through its home switch, and charges the
+`switch_to_switch_us` hop for cross-shard traffic.  Because the control
+plane stays centralized — it owns every shard's SRAM free list and
+drives Bounded-Splitting epochs globally — coherence decisions are
+*shard-count-invariant*:
+
+* 1/2/4-shard replays (scalar **and** batched) produce byte-identical
+  coherence statistics to the single-switch scalar oracle, including
+  directory capacity evictions, blade-cache evictions and multi-epoch
+  traces;
+* with ``switch_to_switch_us == 0`` runtimes/latency breakdowns are
+  identical to the oracle too; with a nonzero hop, epoch-free TSO
+  replays differ by exactly ``cross_shard_accesses * hop`` of thread
+  time, and scalar-sharded vs batched-sharded stay exactly equal
+  always;
+* the batched engine runs one TCAM/MSI kernel invocation per shard
+  (`partition_by_shard`), with per-shard conflict lanes.
+
+Also here: the deterministic cross-shard conflict-trace generator's
+unit tests, shard-aware failover snapshots, and the executable pin of
+the documented faulting-trace epoch-boundary lapse (ROADMAP open item).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import traces as T
+from repro.core.emulator import DisaggregatedRack, ShardedRack
+from repro.core.switch import ShardMap
+from repro.core.types import NetworkConstants, Perm
+from repro.dataplane import partition_by_shard
+
+STAT_FIELDS = (
+    "accesses", "local_hits", "remote_fetches", "invalidations",
+    "invalidated_pages", "false_invalidated_pages", "flushed_pages",
+    "evicted_dirty", "evicted_clean", "faults",
+)
+
+ZERO_HOP = NetworkConstants(switch_to_switch_us=0.0)
+
+
+def _xs_trace(threads=4, n=300, **kw):
+    kw.setdefault("seed", 9)
+    return T.sharded_conflict_trace(num_threads=threads,
+                                    accesses_per_thread=n, **kw)
+
+
+def _assert_stats_equal(a, b, ctx=""):
+    for f in STAT_FIELDS:
+        assert getattr(a.stats, f) == getattr(b.stats, f), (ctx, f)
+
+
+def _assert_timing_equal(a, b, ctx=""):
+    np.testing.assert_allclose(b.runtime_us, a.runtime_us, rtol=1e-9,
+                               err_msg=ctx)
+    np.testing.assert_allclose(b.total_thread_us, a.total_thread_us,
+                               rtol=1e-9, err_msg=ctx)
+    for k, v in a.latency_breakdown_us.items():
+        np.testing.assert_allclose(b.latency_breakdown_us[k], v, rtol=1e-6,
+                                   err_msg=f"{ctx}:{k}")
+
+
+# --------------------------------------------------------------------- #
+# ShardMap: home routing invariants.
+# --------------------------------------------------------------------- #
+def test_shard_map_block_cyclic_and_region_safe(rng):
+    sm = ShardMap(num_shards=4, home_log2=21)
+    vaddrs = rng.integers(1 << 40, (1 << 40) + (1 << 30), 2000)
+    homes = sm.home_of_batch(vaddrs)
+    # Batch == scalar loop; block-cyclic formula.
+    assert [sm.home_of(int(v)) for v in vaddrs] == homes.tolist()
+    np.testing.assert_array_equal(homes, (vaddrs >> 21) % 4)
+    # A pow2 region no larger than the shard block never straddles:
+    # first and last byte share a home.
+    for log2 in (12, 14, 18, 21):
+        base = (int(vaddrs[0]) >> log2) << log2
+        assert sm.home_of(base) == sm.home_of(base + (1 << log2) - 1)
+        assert sm.home_of_key((base, log2)) == sm.home_of(base)
+
+
+def test_shard_map_ingress_round_robin():
+    sm = ShardMap(num_shards=2, home_log2=21)
+    assert [sm.ingress_of(b) for b in range(5)] == [0, 1, 0, 1, 0]
+    np.testing.assert_array_equal(
+        sm.ingress_of_batch(np.arange(5)), [0, 1, 0, 1, 0])
+
+
+def test_shard_map_rejects_oversized_region():
+    sm = ShardMap(num_shards=2, home_log2=21)
+    with pytest.raises(AssertionError):
+        sm.home_of_key((0, 22))  # region larger than a shard block
+
+
+def test_sharded_rack_requires_in_network_mmu():
+    with pytest.raises(ValueError):
+        ShardedRack(num_shards=2, system="gam")
+
+
+# --------------------------------------------------------------------- #
+# partition_by_shard: exact, order-preserving subsets.
+# --------------------------------------------------------------------- #
+def test_partition_by_shard_exact_and_ordered(rng):
+    slots = rng.integers(0, 23, 400).astype(np.int64)
+    shard_of_slot = rng.integers(0, 3, 23).astype(np.int32)
+    parts = partition_by_shard(slots, 23, shard_of_slot)
+    all_pkts = np.concatenate([p for _, p, _ in parts])
+    all_slots = np.concatenate([s for _, _, s in parts])
+    # Every packet and slot in exactly one part.
+    np.testing.assert_array_equal(np.sort(all_pkts), np.arange(400))
+    np.testing.assert_array_equal(np.sort(all_slots), np.arange(23))
+    for shard, pkts, slot_sel in parts:
+        assert (np.diff(pkts) > 0).all()  # stream order preserved
+        assert (shard_of_slot[slot_sel] == shard).all()
+        assert (shard_of_slot[slots[pkts]] == shard).all()
+    # None == single-switch: one part with everything.
+    (shard, pkts, slot_sel), = partition_by_shard(slots, 23, None)
+    assert len(pkts) == 400 and len(slot_sel) == 23
+
+
+# --------------------------------------------------------------------- #
+# The cross-shard conflict-trace generator (satellite 2).
+# --------------------------------------------------------------------- #
+def test_generator_deterministic():
+    a = _xs_trace()
+    b = _xs_trace()
+    for f in ("threads", "ops", "offsets"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    c = _xs_trace(seed=10)
+    assert not np.array_equal(a.offsets, c.offsets)
+
+
+def test_generator_shapes_and_arena():
+    t = _xs_trace(threads=4, n=250, num_shards=4, blocks_per_shard=2)
+    assert len(t) == 1000
+    assert t.threads.dtype == np.int32 and t.ops.dtype == np.int8
+    assert t.offsets.dtype == np.int64
+    assert t.shared_bytes == 8 << 21  # num_shards * blocks_per_shard blocks
+    assert t.arena_bytes > t.shared_bytes
+    assert (t.offsets >= 0).all() and (t.offsets < t.arena_bytes).all()
+    assert set(t.ops.tolist()) <= {0, 1}
+
+
+def test_generator_covers_every_shard_with_conflicts():
+    """Shard-map awareness: once mapped onto a rack, every shard of a
+    2- and 4-shard map homes shared *writes* from >= 2 distinct blades
+    — the cross-shard invalidation traffic the parity suite exists
+    for."""
+    trace = _xs_trace(threads=8, n=200)
+    for nsh in (2, 4):
+        rack = ShardedRack(num_shards=nsh, system="mind",
+                           num_compute_blades=4, threads_per_blade=2)
+        segs = rack._map_arena(trace)
+        vaddrs = rack._to_vaddr_batch(segs, trace.offsets)
+        homes = rack.shard_map.home_of_batch(vaddrs)
+        shared = trace.offsets < trace.shared_bytes
+        writers = trace.threads % 8 // 2
+        for s in range(nsh):
+            blades = np.unique(writers[(homes == s) & shared
+                                       & trace.ops.astype(bool)])
+            assert len(blades) >= 2, (nsh, s)
+
+
+# --------------------------------------------------------------------- #
+# Oracle parity: deterministic cases (acceptance criterion).
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_sharded_matches_oracle_epoch_free(num_shards):
+    """Epoch-free cross-shard conflict trace, default (nonzero) hop:
+    coherence stats are shard-count-invariant for both engines, scalar
+    and batched sharded replays match each other exactly, and the hop
+    accounting is exact — total thread time exceeds the oracle's by
+    cross_shard_accesses * switch_to_switch_us."""
+    trace = _xs_trace()
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False)
+    oracle = DisaggregatedRack(engine="scalar", **kw).run(trace)
+    rs = ShardedRack(num_shards=num_shards, engine="scalar", **kw).run(trace)
+    rb = ShardedRack(num_shards=num_shards, engine="batched", **kw).run(trace)
+    _assert_stats_equal(oracle, rs, "oracle-vs-scalar")
+    _assert_stats_equal(oracle, rb, "oracle-vs-batched")
+    _assert_timing_equal(rs, rb, "scalar-vs-batched")
+    assert rs.num_shards == rb.num_shards == num_shards
+    assert rs.shard_accesses == rb.shard_accesses
+    assert sum(rs.shard_accesses) == len(trace)
+    assert rs.cross_shard_accesses == rb.cross_shard_accesses
+    hop = NetworkConstants().switch_to_switch_us
+    np.testing.assert_allclose(
+        rs.total_thread_us - oracle.total_thread_us,
+        rs.cross_shard_accesses * hop, rtol=1e-9)
+    if num_shards == 1:
+        assert rs.cross_shard_accesses == 0
+        _assert_timing_equal(oracle, rs, "oracle-vs-1shard")
+    else:
+        assert rs.cross_shard_accesses > 0
+        assert all(c > 0 for c in rs.shard_accesses)
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+@pytest.mark.parametrize("engine", ["scalar", "batched"])
+def test_sharded_zero_hop_full_identity_under_pressure(num_shards, engine):
+    """The full pressure cocktail — directory SRAM evictions, blade
+    page-cache evictions and Bounded-Splitting epochs — at zero
+    switch-to-switch cost: the sharded replay is *byte-identical* to
+    the single-switch scalar oracle (stats, runtimes, breakdowns,
+    epoch trajectory) because the centralized control plane makes the
+    same install/evict/split/merge decisions regardless of where
+    entries are homed."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=600, store_mb=4, seed=7)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=120, epoch_us=4000.0,
+              cache_bytes_per_blade=1 << 16, splitting_enabled=True)
+    oracle = DisaggregatedRack(engine="scalar", constants=ZERO_HOP,
+                               **kw).run(trace)
+    assert oracle.stats.evicted_dirty + oracle.stats.evicted_clean > 0
+    assert oracle.epoch_reports
+    r = ShardedRack(num_shards=num_shards, engine=engine,
+                    constants=ZERO_HOP, **kw).run(trace)
+    _assert_stats_equal(oracle, r, f"{engine}/{num_shards}")
+    _assert_timing_equal(oracle, r, f"{engine}/{num_shards}")
+    assert r.directory_timeline == oracle.directory_timeline
+    assert len(r.epoch_reports) == len(oracle.epoch_reports)
+    for a, b in zip(oracle.epoch_reports, r.epoch_reports):
+        assert (a.splits, a.merges, a.directory_entries) == (
+            b.splits, b.merges, b.directory_entries)
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_sharded_with_hop_scalar_batched_identical_under_pressure(num_shards):
+    """With a nonzero hop the sharded rack is its own oracle: the
+    scalar and batched sharded replays must stay exactly equal through
+    capacity evictions, cache evictions and epochs (the hop shifts
+    epoch boundaries identically in both engines)."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=600, store_mb=4, seed=7)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=120, epoch_us=4000.0,
+              cache_bytes_per_blade=1 << 16, splitting_enabled=True)
+    rs = ShardedRack(num_shards=num_shards, engine="scalar", **kw).run(trace)
+    rb = ShardedRack(num_shards=num_shards, engine="batched", **kw).run(trace)
+    assert rs.stats.evicted_dirty + rs.stats.evicted_clean > 0
+    _assert_stats_equal(rs, rb, str(num_shards))
+    _assert_timing_equal(rs, rb, str(num_shards))
+    assert rs.directory_timeline == rb.directory_timeline
+    assert rs.cross_shard_accesses == rb.cross_shard_accesses > 0
+
+
+def test_sharded_batched_chunk_and_lane_invariance():
+    """Per-shard kernel invocations must not leak chunk- or
+    lane-shape dependence: any chunk size / lane count yields the same
+    sharded replay."""
+    trace = _xs_trace()
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False)
+    rs = ShardedRack(num_shards=2, engine="scalar", **kw).run(trace)
+    for opts in ({"chunk_size": 64}, {"chunk_size": 7}, {"lanes": 1},
+                 {"lanes": 8}):
+        rb = ShardedRack(num_shards=2, engine="batched",
+                         engine_options=opts, **kw).run(trace)
+        _assert_stats_equal(rs, rb, str(opts))
+        _assert_timing_equal(rs, rb, str(opts))
+
+
+def test_pso_sharded_parity():
+    """PSO relaxation + sharding: posted writes still expose only the
+    issue cost (no hop on the store's critical path), identically in
+    both engines."""
+    trace = _xs_trace()
+    kw = dict(system="mind-pso", num_compute_blades=2, threads_per_blade=2,
+              splitting_enabled=False)
+    rs = ShardedRack(num_shards=2, engine="scalar", **kw).run(trace)
+    rb = ShardedRack(num_shards=2, engine="batched", **kw).run(trace)
+    _assert_stats_equal(rs, rb, "pso")
+    _assert_timing_equal(rs, rb, "pso")
+
+
+# --------------------------------------------------------------------- #
+# Epoch boundaries straddling shard homes (deterministic regression).
+# --------------------------------------------------------------------- #
+def test_epoch_boundaries_straddle_shard_homes():
+    """The regression the tentpole calls out: epoch boundaries that
+    land on accesses homed at *different* shards must not disturb the
+    parity contract.  Instrumented scalar replay records each boundary
+    access's home shard; the case is only valid if the boundaries
+    genuinely straddle homes — then scalar == batched == oracle."""
+    trace = _xs_trace(threads=4, n=600)
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              epoch_us=2500.0, splitting_enabled=True)
+
+    boundary_homes = []
+
+    class Instrumented(ShardedRack):
+        def _route(self, blade, vaddr, req):
+            self._last_home = self.shard_map.home_of(vaddr)
+            return super()._route(blade, vaddr, req)
+
+    rack = Instrumented(num_shards=4, engine="scalar", constants=ZERO_HOP,
+                        **kw)
+    orig_epoch = rack.cp.maybe_run_epoch
+    rack.cp.maybe_run_epoch = lambda now_us: (
+        boundary_homes.append(rack._last_home), orig_epoch(now_us))[1]
+    rs = rack.run(trace)
+    assert len(boundary_homes) >= 2
+    assert len(set(boundary_homes)) >= 2, (
+        "boundary accesses all homed at one shard — the regression "
+        f"case lost its straddle: {boundary_homes}")
+    oracle = DisaggregatedRack(engine="scalar", constants=ZERO_HOP,
+                               **kw).run(trace)
+    _assert_stats_equal(oracle, rs, "straddle-scalar")
+    _assert_timing_equal(oracle, rs, "straddle-scalar")
+    for chunk in (65536, 97):
+        rb = ShardedRack(num_shards=4, engine="batched", constants=ZERO_HOP,
+                         engine_options={"chunk_size": chunk}, **kw).run(trace)
+        _assert_stats_equal(oracle, rb, f"straddle-batched-{chunk}")
+        _assert_timing_equal(oracle, rb, f"straddle-batched-{chunk}")
+        assert rb.directory_timeline == oracle.directory_timeline
+
+
+# --------------------------------------------------------------------- #
+# Faulting traces: the documented epoch-boundary lapse, made executable
+# (satellite 3; ROADMAP "Faulting traces + epochs").
+# --------------------------------------------------------------------- #
+def _faulting_rack(engine, epochs, cls=DisaggregatedRack, **extra):
+    """A rack whose arena gets a read-only quarter after mapping, so a
+    deterministic slice of the trace's writes protection-fault."""
+    rack = cls(system="mind", num_compute_blades=2, threads_per_blade=2,
+               splitting_enabled=epochs, epoch_us=4000.0, engine=engine,
+               **extra)
+    orig = rack._map_arena
+
+    def patched(trace):
+        segs = orig(trace)
+        s, e, base = segs[0]
+        ln = max(4096, ((e - s) // 4) & ~4095)
+        rack.cp.sys_mprotect(1, base, ln, Perm.READ)
+        return segs
+
+    rack._map_arena = patched
+    return rack
+
+
+def _fault_trace():
+    return T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                        accesses_per_thread=600, store_mb=4, seed=7)
+
+
+def test_faulting_trace_epoch_free_exact_parity():
+    """Without epochs the fault path is fully parity-safe: both engines
+    charge one ingress-pipeline traversal per fault (the batched engine
+    merely charges them up front), so stats *and* runtimes match."""
+    trace = _fault_trace()
+    rs = _faulting_rack("scalar", epochs=False).run(trace)
+    rb = _faulting_rack("batched", epochs=False).run(trace)
+    assert rs.stats.faults == rb.stats.faults > 0
+    _assert_stats_equal(rs, rb, "faults-no-epochs")
+    _assert_timing_equal(rs, rb, "faults-no-epochs")
+    # Sharded: faults are decided at the ingress pipeline and never pay
+    # the cross-shard hop — parity still exact.
+    ss = _faulting_rack("scalar", epochs=False, cls=ShardedRack,
+                        num_shards=2).run(trace)
+    sb = _faulting_rack("batched", epochs=False, cls=ShardedRack,
+                        num_shards=2).run(trace)
+    assert ss.stats.faults == sb.stats.faults == rs.stats.faults
+    _assert_stats_equal(ss, sb, "faults-sharded")
+    _assert_timing_equal(ss, sb, "faults-sharded")
+    assert ss.cross_shard_accesses == sb.cross_shard_accesses
+
+
+def test_faulting_trace_epoch_boundary_lapse_is_pinned():
+    """docs/ARCHITECTURE.md documents: with faults present the batched
+    engine charges all fault latencies up front, so epoch *timing* can
+    lead the scalar engine and the epoch-dependent counters may drift
+    slightly.  This pins that caveat as executable: the lapse must (a)
+    actually reproduce on this trace, (b) stay confined to
+    epoch-granularity effects — faults, accesses and the epoch count
+    itself agree, and every counter stays within 1 %.  If (a) ever
+    fails, the lapse was fixed: delete this pin and the caveat."""
+    trace = _fault_trace()
+    rs = _faulting_rack("scalar", epochs=True).run(trace)
+    rb = _faulting_rack("batched", epochs=True).run(trace)
+    assert rs.stats.faults == rb.stats.faults > 0
+    assert rs.stats.accesses == rb.stats.accesses
+    assert len(rs.epoch_reports) == len(rb.epoch_reports) >= 1
+    drift = {
+        f: abs(getattr(rs.stats, f) - getattr(rb.stats, f))
+        / max(1, getattr(rs.stats, f))
+        for f in STAT_FIELDS
+    }
+    assert max(drift.values()) <= 0.01, drift
+    assert any(v > 0 for v in drift.values()), (
+        "the documented faulting-trace epoch lapse no longer reproduces "
+        "— the engines now agree exactly; update docs/ARCHITECTURE.md's "
+        "caveat and replace this pin with an exact-parity assertion")
+
+
+# --------------------------------------------------------------------- #
+# Shard-aware control-plane snapshots (failover).
+# --------------------------------------------------------------------- #
+def test_shard_snapshots_partition_the_directory():
+    from repro.core.control_plane import ControlPlane
+
+    rack = ShardedRack(num_shards=4, system="mind", num_compute_blades=2,
+                       threads_per_blade=2)
+    rack.run(_xs_trace(threads=4, n=200))
+    cp = rack.cp
+    d = rack.mmu.engine.directory
+    full = json.loads(cp.snapshot())
+    assert full["shards"] == {"num_shards": 4, "home_log2": 21,
+                              "shard": None}
+    per_shard = [json.loads(cp.snapshot(shard=s)) for s in range(4)]
+    sizes = [len(p["directory"]) for p in per_shard]
+    assert sum(sizes) == len(full["directory"]) == d.num_entries()
+    assert sizes == rack.shard_occupancy()
+    seen = set()
+    for s, p in enumerate(per_shard):
+        for e in p["directory"]:
+            key = (e["base"], e["log2"])
+            assert e["home"] == s == rack.shard_map.home_of_key(key)
+            assert key not in seen  # shards partition, never duplicate
+            seen.add(key)
+    assert seen == set(d.entries)
+
+    # A restored backup for shard 2 carries exactly shard 2's slice, in
+    # preserved relative LRU order, and knows the shard map.
+    cp2 = ControlPlane.restore(cp.snapshot(shard=2),
+                               cache_bytes_per_blade=512 << 20,
+                               num_compute_blades=2)
+    d2 = cp2.mmu.engine.directory
+    shard2 = [k for k in d.lru_keys()
+              if rack.shard_map.home_of_key(k) == 2]
+    assert d2.lru_keys() == shard2
+    assert cp2.shard_map.num_shards == 4
+    for k in shard2:
+        a, b = d.entries[k], d2.entries[k]
+        assert (a.state, a.sharers, a.owner) == (b.state, b.sharers, b.owner)
+
+
+def test_shard_occupancy_sums_to_directory():
+    rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
+                       threads_per_blade=2)
+    rack.run(_xs_trace(threads=4, n=200))
+    occ = rack.shard_occupancy()
+    assert sum(occ) == rack.mmu.engine.directory.num_entries()
+    assert all(c > 0 for c in occ)
+
+
+# --------------------------------------------------------------------- #
+# Property suite: random traces, 1/2/4 shards vs the oracle.
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised via CI extra install
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    _regimes = {
+        # (max_directory_entries, cache_bytes, epoch_us or None)
+        "plain": (30_000, 512 << 20, None),
+        "dir_pressure": (48, 512 << 20, None),
+        "cache_pressure": (30_000, 1 << 14, None),
+        "epochs": (30_000, 512 << 20, 2500.0),
+        "cocktail": (64, 1 << 15, 2500.0),
+    }
+
+    def _random_case(seed, regime, conflict_frac, write_frac, threads):
+        trace = T.sharded_conflict_trace(
+            num_threads=threads, accesses_per_thread=250,
+            conflict_frac=conflict_frac, write_frac=write_frac,
+            hot_pages_per_block=12, private_kb_per_thread=64, seed=seed)
+        maxdir, cache_b, epoch = _regimes[regime]
+        kw = dict(system="mind", num_compute_blades=2,
+                  threads_per_blade=threads // 2,
+                  max_directory_entries=maxdir,
+                  cache_bytes_per_blade=cache_b,
+                  splitting_enabled=epoch is not None,
+                  epoch_us=epoch or 10_000.0,
+                  constants=ZERO_HOP)
+        return trace, kw
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           regime=st.sampled_from(sorted(_regimes)),
+           conflict_frac=st.floats(0.2, 0.8),
+           write_frac=st.floats(0.1, 0.5),
+           threads=st.sampled_from([2, 4]))
+    def test_sharded_scalar_matches_oracle_hypothesis(
+            seed, regime, conflict_frac, write_frac, threads):
+        """Random cross-shard conflict traces — including eviction
+        pressure and multi-epoch regimes — replayed on 1/2/4-shard
+        racks are byte-identical to the single-switch scalar oracle at
+        zero hop."""
+        trace, kw = _random_case(seed, regime, conflict_frac, write_frac,
+                                 threads)
+        oracle = DisaggregatedRack(engine="scalar", **kw).run(trace)
+        for nsh in (1, 2, 4):
+            r = ShardedRack(num_shards=nsh, engine="scalar", **kw).run(trace)
+            _assert_stats_equal(oracle, r, f"{regime}/{nsh}")
+            _assert_timing_equal(oracle, r, f"{regime}/{nsh}")
+            assert r.directory_timeline == oracle.directory_timeline
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           regime=st.sampled_from(["plain", "dir_pressure", "cocktail"]))
+    def test_sharded_batched_matches_oracle_hypothesis(seed, regime):
+        """The batched engine's per-shard kernel invocations hold the
+        same property (narrower sampling — each example compiles and
+        replays the full device pipeline)."""
+        trace, kw = _random_case(seed, regime, 0.5, 0.3, 4)
+        oracle = DisaggregatedRack(engine="scalar", **kw).run(trace)
+        r = ShardedRack(num_shards=2, engine="batched", **kw).run(trace)
+        _assert_stats_equal(oracle, r, regime)
+        _assert_timing_equal(oracle, r, regime)
+        assert r.directory_timeline == oracle.directory_timeline
