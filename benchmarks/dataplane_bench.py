@@ -66,6 +66,7 @@ from repro.core import traces as T
 from repro.core.directory import CacheDirectory
 from repro.core.emulator import DisaggregatedRack
 from repro.core.types import SwitchResources
+from repro.dataplane.engine import PHASES
 
 BLADES = 4
 THREADS_PER_BLADE = 10
@@ -83,9 +84,13 @@ def _rack(engine: str, **kw) -> DisaggregatedRack:
 
 
 def _phases(result) -> dict:
-    """Per-phase wall seconds of a batched run (see
-    docs/BENCHMARKS.md 'phases' field reference)."""
-    return {k: round(v, 5) for k, v in result.phase_times.items()}
+    """Per-phase wall seconds of a batched run, keyed off the engine's
+    frozen ``PHASES`` schema (see docs/BENCHMARKS.md 'phases' field
+    reference) — a renamed or dropped phase fails here, not in a
+    dashboard downstream."""
+    assert set(result.phase_times) == set(PHASES), \
+        f"phase_times drifted from PHASES: {sorted(result.phase_times)}"
+    return {k: round(result.phase_times[k], 5) for k in PHASES}
 
 
 def bench_config(trace, label: str, repeats: int, expect_identical: bool = True,
@@ -400,6 +405,21 @@ def bench_sharded(quick: bool, perf_floor: float = 0.0,
         "switch_to_switch_us": hop,
         "cells": cells,
     }
+    # Export a sample Perfetto trace of the 2-shard batched replay — the
+    # CI artifact for eyeballing track layout in ui.perfetto.dev.
+    from benchmarks.common import RESULTS
+    from repro.telemetry import Telemetry
+    from repro.telemetry.exporters import write_perfetto
+
+    # Bounded ring (flight-recorder semantics): full-size cells emit
+    # hundreds of thousands of events; the artifact keeps the tail.
+    tel = Telemetry(capacity=1 << 15)
+    ShardedRack(num_shards=2, engine="batched", telemetry=tel,
+                **kw).run(trace)
+    trace_path = RESULTS / "trace_sharded.perfetto.json"
+    write_perfetto(trace_path, tel, label="bench_sharded/2shard")
+    out["perfetto_trace"] = trace_path.name
+    print(f"# wrote {trace_path}")
     path = save_json("BENCH_sharded", out)
     print(f"# wrote {path}")
     for c in cells:
@@ -417,6 +437,60 @@ def bench_sharded(quick: bool, perf_floor: float = 0.0,
     return out
 
 
+# --------------------------------------------------------------------- #
+# ISSUE 6: the zero-overhead-when-disabled telemetry guard.
+# --------------------------------------------------------------------- #
+def bench_telemetry_overhead(quick: bool, repeats: int = 3) -> dict:
+    """Replay the headline zipfian cell three ways — no telemetry, a
+    *disabled* Telemetry attached, an enabled one — at best-of-repeats.
+    No-telemetry and disabled-telemetry leave every component hook
+    ``None`` and must stay within 5% of each other (asserted by
+    ``--overhead-check``); a regression here means work crept in front
+    of the ``is None`` gates.  The enabled wall is recorded for trend
+    tracking only."""
+    from repro.telemetry import Telemetry
+
+    per_thread = 400 if quick else 1500
+    trace = T.ma_trace(num_threads=BLADES * THREADS_PER_BLADE,
+                       accesses_per_thread=per_thread)
+    kw = dict(splitting_enabled=False)
+    _rack("batched", **kw).run(trace)  # jit warm-up (per-process cost)
+
+    def one_wall(tel):
+        rack = _rack("batched", telemetry=tel, **kw)
+        t0 = time.perf_counter()
+        rack.run(trace)
+        return time.perf_counter() - t0
+
+    # Interleave the configurations within each round (instead of
+    # timing each config's repeats back-to-back) so clock/cache drift
+    # over the run lands on all three equally; best-of across rounds.
+    factories = (lambda: None, lambda: Telemetry(enabled=False), Telemetry)
+    walls = [float("inf")] * 3
+    for _ in range(repeats):
+        for i, f in enumerate(factories):
+            walls[i] = min(walls[i], one_wall(f()))
+    base, disabled, enabled = walls
+    n = len(trace)
+    out = {
+        "workload": "M_A (zipfian YCSB-A), batched replay",
+        "accesses": n,
+        "repeats": repeats,
+        "baseline_wall_s": base,
+        "disabled_wall_s": disabled,
+        "enabled_wall_s": enabled,
+        "disabled_overhead_frac": disabled / base - 1.0,
+        "enabled_overhead_frac": enabled / base - 1.0,
+    }
+    emit("telemetry/baseline", base / n * 1e6,
+         f"acc_per_s={n / base:.0f}")
+    emit("telemetry/disabled", disabled / n * 1e6,
+         f"overhead={out['disabled_overhead_frac']:+.1%}")
+    emit("telemetry/enabled", enabled / n * 1e6,
+         f"overhead={out['enabled_overhead_frac']:+.1%}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -425,6 +499,9 @@ def main() -> None:
     ap.add_argument("--perf-floor", type=float, default=0.0,
                     help="assert every cell's speedup >= this floor "
                          "(0 = warnings only; CI smoke uses 2)")
+    ap.add_argument("--overhead-check", action="store_true",
+                    help="measure telemetry overhead on the headline cell "
+                         "and assert disabled-telemetry <= 5% over baseline")
     ap.add_argument("--only", choices=["all", "dataplane", "eviction",
                                        "cache", "sharded"], default="all",
                     help="run one section in a fresh process (long "
@@ -468,8 +545,15 @@ def main() -> None:
         "stats_identical": headline["stats_identical"],
         "configs": rows,
     }
+    if args.overhead_check:
+        out["telemetry_overhead"] = bench_telemetry_overhead(
+            args.quick, max(repeats, 3))
     path = save_json("BENCH_dataplane", out)
     print(f"# wrote {path}")
+    if args.overhead_check:
+        frac = out["telemetry_overhead"]["disabled_overhead_frac"]
+        assert frac <= 0.05, \
+            f"disabled-telemetry overhead {frac:+.1%} exceeds the 5% contract"
     assert headline["stats_identical"], "coherence stats diverged!"
     assert epoch_cell["stats_identical"], "epoch-cell stats diverged!"
     if headline["speedup"] < 10.0:

@@ -23,6 +23,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 
 from repro.core.types import PAGE_SHIFT, PAGE_SIZE, align_down
+from repro.telemetry import events as tev
 
 
 @dataclass
@@ -45,6 +46,9 @@ class BladePageCache:
         # Optional aggregate counters (EpochStats) the owning emulator
         # attaches so capacity evictions show up in EmulationResult.stats.
         self.stats = None
+        # Optional telemetry plane; None keeps the eviction loop on the
+        # pre-telemetry path (zero-overhead-when-disabled contract).
+        self.telemetry = None
 
     # ------------------------------------------------------------------ #
     def has(self, vaddr: int) -> bool:
@@ -67,7 +71,7 @@ class BladePageCache:
             self.pages.move_to_end(page)
             return 0
         while len(self.pages) >= self.capacity_pages:
-            _, was_dirty = self.pages.popitem(last=False)
+            victim, was_dirty = self.pages.popitem(last=False)
             if was_dirty:
                 self.evicted_dirty += 1
                 flushed += 1
@@ -77,6 +81,10 @@ class BladePageCache:
                 self.evicted_clean += 1
                 if self.stats is not None:
                     self.stats.evicted_clean += 1
+            if self.telemetry is not None:
+                self.telemetry.event(
+                    tev.CACHE_EVICT_DIRTY if was_dirty else tev.CACHE_EVICT_CLEAN,
+                    blade=self.blade_id, base=victim, pages=1)
         self.pages[page] = dirty
         return flushed
 

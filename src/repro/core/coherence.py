@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 
 from repro.core.cache import BladePageCache
 from repro.core.directory import CacheDirectory
+from repro.telemetry import events as tev
 from repro.core.types import (
     PAGE_SIZE,
     AccessType,
@@ -63,6 +64,10 @@ class TransitionRecord:
 
 
 class CoherenceEngine:
+    #: Optional telemetry plane (repro.telemetry.Telemetry).  Class-level
+    #: None keeps the disabled path byte-identical to pre-telemetry code.
+    telemetry = None
+
     def __init__(
         self,
         directory: CacheDirectory,
@@ -254,22 +259,36 @@ class CoherenceEngine:
         Returns the number of falsely-invalidated pages across targets.
         """
         total_false = 0
+        tot_pages = tot_flushed = targets = 0
         for b in blades:
             c = self.caches.get(b)
             if c is None:
                 continue
+            targets |= 1 << b
             if keep_copy:
                 flushed = c.downgrade_region(entry.base, entry.size)
                 self.stats.flushed_pages += flushed
                 self.stats.invalidations += 1
+                tot_flushed += flushed
                 continue
             res = c.invalidate_region(entry.base, entry.size, requested_vaddr)
             self.stats.invalidations += 1
             self.stats.invalidated_pages += res.invalidated_pages
             self.stats.flushed_pages += res.flushed_pages
+            tot_pages += res.invalidated_pages
+            tot_flushed += res.flushed_pages
             total_false += res.false_invalidated_pages
         self.stats.false_invalidated_pages += total_false
         self._clear_prepopulated(entry)
+        tel = self.telemetry
+        if tel is not None and targets:
+            tel.event(tev.DOWNGRADE if keep_copy else tev.INVALIDATE,
+                      base=entry.base, log2=entry.size_log2, targets=targets,
+                      pages=tot_pages, false_pages=total_false,
+                      flushed=tot_flushed)
+            if tot_flushed:
+                tel.event(tev.WRITEBACK, base=entry.base,
+                          log2=entry.size_log2, pages=tot_flushed)
         return total_false
 
     def _drain_capacity_evictions(self) -> None:

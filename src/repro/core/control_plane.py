@@ -17,6 +17,7 @@ from repro.core.bounded_splitting import BoundedSplitting, EpochReport
 from repro.core.coherence import CoherenceEngine
 from repro.core.switch import InNetworkMMU
 from repro.core.types import VMA, MSIState, Perm
+from repro.telemetry import events as tev
 
 
 @dataclass
@@ -45,6 +46,10 @@ class ControlPlane:
         # shard-aware so a single failed switch can be rebuilt from just
         # its shard's directory slice.
         self.shard_map = None
+        # Optional telemetry plane (set by the rack).  Epoch events come
+        # from here so both engines share one emission site, and
+        # snapshots carry the registry counters for failover.
+        self.telemetry = None
 
     # ------------------------------------------------------------------ #
     # Syscall intercepts (§6.1 'Managing vmas').
@@ -106,6 +111,10 @@ class ControlPlane:
         self._last_epoch_at_us = now_us
         report = self.splitting.run_epoch()
         self.epoch_reports.append(report)
+        if self.telemetry is not None:
+            self.telemetry.event(tev.EPOCH, targets=report.splits,
+                                 false_pages=report.merges,
+                                 pages=report.directory_entries)
         return report
 
     # ------------------------------------------------------------------ #
@@ -161,6 +170,12 @@ class ControlPlane:
             ],
             "splitting": {"c": self.splitting.c, "epoch": self.splitting.epoch},
         }
+        if self.telemetry is not None:
+            # Per-shard snapshots keep only the failed switch's slice of
+            # the registry (counters labeled shard=k); the backup resumes
+            # counting from there instead of zero.
+            state["telemetry"] = self.telemetry.metrics.counters_to_jsonable(
+                shard=shard)
         if smap is not None:
             state["shards"] = {
                 "num_shards": smap.num_shards,
@@ -201,6 +216,11 @@ class ControlPlane:
             _ = ent
         cp.splitting.c = state["splitting"]["c"]
         cp.splitting.epoch = state["splitting"]["epoch"]
+        if "telemetry" in state:
+            from repro.telemetry import Telemetry
+
+            cp.telemetry = Telemetry()
+            cp.telemetry.metrics.load_counters(state["telemetry"])
         if "shards" in state:
             from repro.core.switch import ShardMap
 

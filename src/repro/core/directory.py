@@ -50,6 +50,7 @@ from repro.core.types import (
     SwitchResources,
     align_down,
 )
+from repro.telemetry import events as tev
 
 DEFAULT_MAX_REGION_LOG2 = 21  # M = 2 MB (512 pages), as in the paper's Fig. 10
 DEFAULT_INITIAL_REGION_LOG2 = 14  # 16 KB default initial region (§5, §7)
@@ -68,6 +69,13 @@ class CacheDirectory:
     """Control-plane + data-plane view of the region directory."""
 
     VA_BUCKET_LOG2 = 36  # = the default 64 GB per-blade VA span
+
+    #: Optional telemetry plane.  The batched engine detaches this during
+    #: replay (its install/evict ordering differs from the scalar oracle)
+    #: and reconstructs the events host-side; the shared epoch-control
+    #: path temporarily re-attaches it so split/merge events come from
+    #: this one place in both engines.
+    telemetry = None
 
     def __init__(
         self,
@@ -169,6 +177,8 @@ class CacheDirectory:
         if state == MSIState.I:
             self._ilru[key] = None
         self.peak_entries = max(self.peak_entries, len(self.entries))
+        if self.telemetry is not None:
+            self.telemetry.event(tev.DIR_INSTALL, base=base, log2=log2)
         return e
 
     # ------------------------------------------------------------------ #
@@ -212,6 +222,8 @@ class CacheDirectory:
         self.stats.pop(victim)
         self._unlink(victim)
         self.capacity_evictions += 1
+        if self.telemetry is not None:
+            self.telemetry.event(tev.DIR_EVICT, base=e.base, log2=e.size_log2)
         if queue_pending and e.state != MSIState.I:
             self.pending_evictions.append(e)
         return e
@@ -232,6 +244,9 @@ class CacheDirectory:
         assert entry.size_log2 > PAGE_SHIFT, "cannot split a 4 KB region"
         key = (entry.base, entry.size_log2)
         assert key in self.entries
+        if self.telemetry is not None:
+            self.telemetry.event(tev.REGION_SPLIT, base=entry.base,
+                                 log2=entry.size_log2)
         del self.entries[key]
         self.stats.pop(key)
         self._unlink(key)
@@ -254,6 +269,9 @@ class CacheDirectory:
         assert left.base ^ (1 << left.size_log2) == right.base
         lo = min(left.base, right.base)
         assert lo % (1 << (left.size_log2 + 1)) == 0
+        if self.telemetry is not None:
+            self.telemetry.event(tev.REGION_MERGE, base=lo,
+                                 log2=left.size_log2 + 1)
         merged_state, sharers, owner = self._merged_coherence(left, right)
         for e in (left, right):
             key = (e.base, e.size_log2)

@@ -38,6 +38,7 @@ from repro.core.types import (
     NetworkConstants,
     Perm,
 )
+from repro.telemetry import events as tev
 
 
 @dataclass
@@ -68,6 +69,9 @@ class EmulationResult:
     num_shards: int = 1
     shard_accesses: list[int] = field(default_factory=list)
     cross_shard_accesses: int = 0
+    # The telemetry plane that observed this run (repro.telemetry.Telemetry)
+    # when one was attached to the rack; None otherwise.
+    telemetry: object = None
 
     @property
     def mean_access_us(self) -> float:
@@ -75,6 +79,46 @@ class EmulationResult:
         # the *max* thread clock; multiplying it by the thread count would
         # overstate the mean whenever threads run concurrently.)
         return self.total_thread_us / max(1, self.stats.accesses)
+
+    def summary(self) -> str:
+        """Aligned human-readable table — the interactive-debugging view."""
+        rows = [
+            ("system", self.system), ("engine", self.engine),
+            ("workload", self.workload),
+            ("blades x threads", f"{self.num_blades} x {self.threads_per_blade}"),
+            ("runtime_us", f"{self.runtime_us:.3f}"),
+            ("performance", f"{self.performance:.4f} acc/us"),
+            ("mean_access_us", f"{self.mean_access_us:.4f}"),
+        ]
+        if self.num_shards > 1:
+            rows.append(("shards", str(self.num_shards)))
+            rows.append(("shard_accesses", str(self.shard_accesses)))
+            rows.append(("cross_shard_accesses", str(self.cross_shard_accesses)))
+        lines = [f"EmulationResult ({self.engine})"]
+        width = max(len(k) for k, _ in rows)
+        lines += [f"  {k:<{width}}  {v}" for k, v in rows]
+        lines.append("  -- stats " + "-" * 30)
+        lines += ["  " + ln for ln in self.stats.summary().splitlines()[1:]]
+        if self.phase_times:
+            lines.append("  -- phase_times (wall s) " + "-" * 15)
+            pw = max(len(k) for k in self.phase_times)
+            lines += [f"  {k:<{pw}}  {v:.5f}"
+                      for k, v in self.phase_times.items()]
+        if self.telemetry is not None:
+            counts = self.telemetry.recorder.counts_by_kind()
+            lines.append("  -- flight recorder " + "-" * 20)
+            lines.append(f"  events={self.telemetry.recorder.total_emitted} "
+                         f"(in ring: {len(self.telemetry.recorder)}, "
+                         f"dropped: {self.telemetry.recorder.dropped})")
+            kw = max((len(k) for k in counts), default=0)
+            lines += [f"  {k:<{kw}}  {v}" for k, v in sorted(counts.items())]
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"<EmulationResult {self.system}/{self.engine} "
+                f"{self.workload!r} acc={self.stats.accesses} "
+                f"runtime_us={self.runtime_us:.1f} "
+                f"perf={self.performance:.3f}>")
 
 
 class DisaggregatedRack:
@@ -98,6 +142,7 @@ class DisaggregatedRack:
         engine: str = "scalar",
         engine_options: dict | None = None,
         directory_eviction: str = "lru",
+        telemetry=None,
     ):
         assert system in ("mind", "mind-pso", "mind-pso+", "gam", "fastswap")
         assert engine in ("scalar", "batched")
@@ -137,6 +182,23 @@ class DisaggregatedRack:
         self._alt_stats = EpochStats()  # gam/fastswap counters
         for c in self._fs_caches.values():
             c.stats = self._alt_stats
+        # Telemetry plane (mind systems only).  Hooks are wired ONLY when
+        # an *enabled* Telemetry is passed: a disabled/absent one leaves
+        # every component's `telemetry` attribute None, keeping the hot
+        # paths on the identical pre-telemetry code (the zero-overhead
+        # contract enforced by `dataplane_bench.py --overhead-check`).
+        self.telemetry = (telemetry if telemetry is not None
+                          and telemetry.enabled
+                          and system.startswith("mind") else None)
+        if self.telemetry is not None:
+            tel = self.telemetry
+            tel.num_blades = num_compute_blades
+            eng = self.mmu.engine
+            eng.telemetry = tel
+            eng.directory.telemetry = tel
+            for c in eng.caches.values():
+                c.telemetry = tel
+            self.cp.telemetry = tel
 
     # ------------------------------------------------------------------ #
     def _map_arena(self, trace: Trace) -> list[tuple[int, int, int]]:
@@ -212,8 +274,11 @@ class DisaggregatedRack:
         n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
         next_epoch_at = self.epoch_us
         pso = self.system in ("mind-pso", "mind-pso+", "gam")
+        rec = self.telemetry.recorder if self.telemetry is not None else None
 
         for i in range(n):
+            if rec is not None:
+                rec.cur_index = i
             t = int(trace.threads[i]) % nthreads
             blade = t // self.tpb
             vaddr = self._to_vaddr(segs, int(trace.offsets[i]))
@@ -250,6 +315,7 @@ class DisaggregatedRack:
             transition_latencies=trans_lat,
             total_thread_us=float(clocks.sum()),
             engine="scalar",
+            telemetry=self.telemetry,
         )
 
     # ------------------------------------------------------------------ #
@@ -279,8 +345,19 @@ class DisaggregatedRack:
             # PSO: the store retires into a write buffer; only issue cost
             # is exposed.  Queueing at invalidation targets persists (the
             # paper's simulation cannot elide it either).
-            return self.mmu.network.k.switch_pipeline_ns / 1000.0 + lb.queue_us
-        return lb.total_us
+            us = self.mmu.network.k.switch_pipeline_ns / 1000.0 + lb.queue_us
+        else:
+            us = lb.total_us
+        tel = self.mmu.engine.telemetry
+        if tel is not None and res.acts.fault is None:
+            # (fault accesses are recorded at the ingress pipeline —
+            # InNetworkMMU.handle — where the fault is decided.)
+            tel.event(tev.ACCESS, blade=blade, base=res.acts.region_base,
+                      log2=res.acts.region_size_log2, write=int(is_write),
+                      hit=int(res.acts.hit_local), tkind=res.rec.kind, us=us)
+            tel.observe_latency(lb.fetch_us, lb.invalidation_us, lb.tlb_us,
+                                lb.queue_us, lb.switch_us, us)
+        return us
 
     # ------------------------------------------------------------------ #
     def _gam_access(self, blade, vaddr, is_write, breakdown) -> float:
@@ -407,6 +484,8 @@ class ShardedRack(DisaggregatedRack):
             "shard blocks must be at least max-region-sized so no region "
             "straddles a shard boundary")
         self.cp.shard_map = self.shard_map
+        if self.telemetry is not None:
+            self.telemetry.shard_map = self.shard_map
         # One InNetworkMMU per shard.  The switches share the global
         # address space, the protection table (replicated rules in a
         # real rack), the network model (queueing happens at the target
@@ -447,8 +526,15 @@ class ShardedRack(DisaggregatedRack):
         if res.acts.fault is None:
             pure_local = res.acts.hit_local and not res.acts.needed_invalidation
             if not pure_local and home != self.shard_map.ingress_of(blade):
-                res.latency.switch_us += self.mmu.network.cross_shard_us()
+                hop = self.mmu.network.cross_shard_us()
+                res.latency.switch_us += hop
                 self._cross_count += 1
+                tel = self.mmu.engine.telemetry
+                if tel is not None:
+                    tel.event(tev.XS_HOP, blade=blade,
+                              base=res.acts.region_base,
+                              log2=res.acts.region_size_log2, targets=home)
+                    tel.observe_cross_shard(hop)
         return res
 
 

@@ -27,6 +27,7 @@ from repro.core.coherence import CoherenceEngine, TransitionRecord
 from repro.core.network_model import LatencyBreakdown, NetworkModel
 from repro.core.protection import ProtectionTable
 from repro.core.types import AccessType, CoherenceActions, MemAccess
+from repro.telemetry import events as tev
 
 
 @dataclass(frozen=True)
@@ -109,8 +110,14 @@ class InNetworkMMU:
         if not self.protection.check(req.pdid, req.vaddr, req.access):
             acts = CoherenceActions(fault="protection")
             self.engine.stats.faults += 1
-            return SwitchResult(acts, None, LatencyBreakdown(
-                switch_us=self.network.k.switch_pipeline_ns / 1000.0))
+            sw_us = self.network.k.switch_pipeline_ns / 1000.0
+            tel = self.engine.telemetry
+            if tel is not None:
+                tel.event(tev.ACCESS, blade=req.blade_id,
+                          write=int(req.access == AccessType.WRITE),
+                          hit=0, fault=1, us=sw_us)
+                tel.observe_latency(0.0, 0.0, 0.0, 0.0, sw_us, sw_us)
+            return SwitchResult(acts, None, LatencyBreakdown(switch_us=sw_us))
 
         # Stage B: coherence (directory MAUs).  The directory decides
         # whether a fetch is needed and from where.

@@ -152,6 +152,19 @@ class EpochStats:
         for f in self.__dataclass_fields__:
             setattr(self, f, getattr(self, f) + getattr(o, f))
 
+    def summary(self) -> str:
+        """Aligned counter table for interactive debugging."""
+        fields = list(self.__dataclass_fields__)
+        width = max(len(f) for f in fields)
+        lines = ["EpochStats"]
+        lines += [f"  {f:<{width}}  {getattr(self, f)}" for f in fields]
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        nonzero = [f"{f}={getattr(self, f)}"
+                   for f in self.__dataclass_fields__ if getattr(self, f)]
+        return f"<EpochStats {' '.join(nonzero) or 'all-zero'}>"
+
 
 def align_down(x: int, a: int) -> int:
     return x & ~(a - 1)

@@ -124,8 +124,17 @@ from repro.dataplane.tables import (
     build_dataplane_state,
     build_region_table,
 )
+from repro.telemetry import events as tev
 
 _KINDS = ("I->S", "I->M", "S->S", "S->M", "M->M", "M->S")
+
+#: The frozen ``phase_times`` key schema.  Every run() populates exactly
+#: these keys; benchmarks/dataplane_bench.py and docs/BENCHMARKS.md key
+#: off this tuple, so additions/renames happen here and nowhere else.
+PHASES = (
+    "arena_setup", "state_build", "stage12_tcam", "residency_prepass",
+    "cache_prepass", "schedule", "device", "merge_writeback",
+    "latency_reconstruct", "epoch_control", "speculation_overhead")
 
 
 # --------------------------------------------------------------------- #
@@ -350,20 +359,26 @@ class BatchedDataPlane:
         # while the working set fits every blade cache (the common,
         # zero-overhead case).  Rebuilt per run alongside the planes.
         self._cache_shadows = None
+        # The rack's telemetry plane, bound per run().  The batched
+        # engine never emits through the scalar hooks (it bypasses
+        # CoherenceEngine.access entirely); instead every event is
+        # reconstructed host-side from the packed kernel outputs and the
+        # pre-pass decisions, with explicit trace indices.
+        self._tel = None
 
     # ------------------------------------------------------------------ #
     def run(self, trace, max_accesses: int | None = None):
         from repro.core.emulator import EmulationResult
 
         rack = self.rack
-        self.phase_times = {k: 0.0 for k in (
-            "arena_setup", "state_build", "stage12_tcam",
-            "residency_prepass", "cache_prepass", "schedule", "device",
-            "merge_writeback", "latency_reconstruct", "epoch_control",
-            "speculation_overhead")}
+        self.phase_times = {k: 0.0 for k in PHASES}
         pt = self.phase_times
         t0 = time.perf_counter()
+        # Arena mapping happens with the directory hooks attached (as in
+        # the scalar engine), so mmap-time install/evict events match;
+        # everything after reconstructs events host-side instead.
         segs = rack._map_arena(trace)
+        self._tel = getattr(rack, "telemetry", None)
         t0 = self._tick("arena_setup", t0)
         n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
         nthreads = rack.nb * rack.tpb
@@ -397,10 +412,6 @@ class BatchedDataPlane:
         else:
             home_acc = np.zeros(n, np.int32)
             cross_acc = np.zeros(n, bool)
-        if n:
-            # Mirror the scalar engine's first-access drain of evictions
-            # queued during mmap-time prepopulation (§4.4 overflow).
-            self._drain_pending_host(state)
         t0 = self._tick("state_build", t0)
 
         # Pipeline stages 1+2 over the whole trace: the Pallas TCAM
@@ -439,6 +450,14 @@ class BatchedDataPlane:
             faults = ~np.asarray(allow)
         t0 = self._tick("stage12_tcam", t0)
 
+        keep = ~faults
+        if n and keep.any():
+            # Mirror the scalar engine's first-access drain of evictions
+            # queued during mmap-time prepopulation (§4.4 overflow) —
+            # scalar drains at the first access that reaches
+            # CoherenceEngine.access, i.e. the first non-fault access.
+            self._drain_pending_host(state, int(np.flatnonzero(keep)[0]))
+
         stats = mmu.engine.stats
         clocks = np.zeros(nthreads, np.float64)
         breakdown = {"fetch": 0.0, "invalidation": 0.0, "tlb": 0.0,
@@ -463,8 +482,17 @@ class BatchedDataPlane:
             stats.faults += nfaults
             np.add.at(clocks, threads[faults], switch_us)
             breakdown["switch"] += nfaults * switch_us
-
-        keep = ~faults
+            tel = self._tel
+            if tel is not None:
+                # Faults are decided at the ingress pipeline and never
+                # reach the directory: one switch traversal, no fetch.
+                for fi in np.flatnonzero(faults).tolist():
+                    tel.event(tev.ACCESS, index=fi, blade=int(blades[fi]),
+                              write=int(writes[fi]), hit=0, fault=1,
+                              us=switch_us)
+                z = np.zeros(nfaults)
+                sw = np.full(nfaults, switch_us)
+                tel.observe_latency_many(z, z, z, z, sw, sw)
 
         # Observed per-access charge model from the last committed
         # chunk: rate `chg_a` now plus growth `chg_g` per access
@@ -500,7 +528,8 @@ class BatchedDataPlane:
             charged = self._process_chunk(
                 vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
                 writes[lo:hi][m], threads[lo:hi][m], cross_acc[lo:hi][m],
-                kvec, pso, clocks, breakdown, trans_lat, inflight)
+                kvec, pso, clocks, breakdown, trans_lat, inflight,
+                gidx=lo + np.flatnonzero(m))
             note_avg(charged)
             return np.flatnonzero(m), charged
 
@@ -513,7 +542,7 @@ class BatchedDataPlane:
                 vaddrs[lo:hi][m], dense[lo:hi][m], blades[lo:hi][m],
                 writes[lo:hi][m], threads[lo:hi][m], cross_acc[lo:hi][m],
                 kvec, pso, clocks, breakdown, trans_lat, inflight,
-                defer=True)
+                defer=True, gidx=lo + np.flatnonzero(m))
             if res is None:
                 return None
             charged, commit = res
@@ -578,6 +607,12 @@ class BatchedDataPlane:
                         hi = lo + spec
                     else:
                         discard_phases()
+                        if self._tel is not None:
+                            # Discarded commit closure: no events were
+                            # emitted, only the rollback itself is noted.
+                            self._tel.event(tev.SPEC_ROLLBACK,
+                                            index=lo + cross,
+                                            pages=spec - (cross + 1))
                         hi = lo + cross + 1
                         span(lo, hi)  # the exact pre-boundary prefix
                 else:
@@ -597,6 +632,12 @@ class BatchedDataPlane:
                         self._rollback(snap, clocks, inflight, breakdown,
                                        trans_lat)
                         discard_phases()
+                        if self._tel is not None:
+                            # After the rollback, so the marker survives
+                            # the event-ring truncation it triggered.
+                            self._tel.event(tev.SPEC_ROLLBACK,
+                                            index=lo + cross,
+                                            pages=spec - (cross + 1))
                         hi = lo + cross + 1
                         span(lo, hi)  # the exact pre-boundary prefix
             since_epoch += hi - lo
@@ -607,6 +648,12 @@ class BatchedDataPlane:
                     and clocks.mean() >= next_epoch_at):
                 last_epoch_len, since_epoch = since_epoch, 0
                 ts = time.perf_counter()
+                if self._tel is not None:
+                    # Epoch control runs through the shared scalar code
+                    # (split/merge/install events come from there); pin
+                    # the stream index to the crossing access, exactly
+                    # where the scalar per-access check fires.
+                    self._tel.cur_index = hi - 1
                 rack.cp.maybe_run_epoch(now_us=next_epoch_at)
                 dir_timeline.append(mmu.engine.directory.num_entries())
                 mmu.network.begin_window()
@@ -644,6 +691,7 @@ class BatchedDataPlane:
                 home_acc, minlength=self._nshards).tolist()
                 if self._smap is not None else []),
             cross_shard_accesses=int(self._cross_acc),
+            telemetry=self._tel,
         )
 
     # ------------------------------------------------------------------ #
@@ -685,6 +733,8 @@ class BatchedDataPlane:
             "planes": self.state.planes.copy(),
             "shadows": ([sh.clone() for sh in self._cache_shadows]
                         if self._cache_shadows is not None else None),
+            "tel": (self._tel.state_mark()
+                    if self._tel is not None else None),
         }
 
     def _rollback(self, snap, clocks, inflight, breakdown, trans_lat):
@@ -723,6 +773,8 @@ class BatchedDataPlane:
         eng._prepopulated = snap["prepop"]
         self.state.planes = snap["planes"]
         self._cache_shadows = snap["shadows"]
+        if snap["tel"] is not None:
+            self._tel.restore_mark(snap["tel"])
         self._rt = None
         self._dtab = None
         self._row_of = {}
@@ -823,13 +875,15 @@ class BatchedDataPlane:
             ]
 
     # ------------------------------------------------------------------ #
-    def _drain_pending_host(self, state) -> None:
+    def _drain_pending_host(self, state, index: int) -> None:
         """Mirror ``CoherenceEngine._drain_capacity_evictions`` for
         evictions queued before replay began (prepopulation overflowed
         the directory at mmap time): multicast the invalidation against
         the bitmap planes and clear the pre-population marks.  The
         planes are freshly built (all zero) here, so the per-page work
-        only runs in the general nonzero case."""
+        only runs in the general nonzero case.  ``index`` is the trace
+        position of the first non-fault access — where the scalar
+        engine's first ``access()`` call drains the queue."""
         eng = self.rack.mmu.engine
         d = eng.directory
         stats = eng.stats
@@ -838,10 +892,12 @@ class BatchedDataPlane:
         pend, d.pending_evictions = d.pending_evictions, []
         if not pend:
             return
+        tel = self._tel
         planes_live = bool(state.planes.any())
         for e in pend:
             targets = e.sharer_list() if e.state == MSIState.S else [e.owner]
             targets = [t for t in targets if 0 <= t < nb]
+            pres_tot = dirt_tot = 0
             if planes_live and targets:
                 d0, npg = pm.region_dense_span(
                     np.array([e.base], np.int64), np.array([e.size], np.int64))
@@ -861,8 +917,20 @@ class BatchedDataPlane:
                     stats.invalidated_pages += pres
                     stats.flushed_pages += dirt
                     stats.false_invalidated_pages += pres
+                    pres_tot += pres
+                    dirt_tot += dirt
             stats.invalidations += len(targets)
             eng._prepopulated.discard((e.base, e.size_log2))
+            if tel is not None and targets:
+                bm = 0
+                for t in targets:
+                    bm |= 1 << t
+                tel.event(tev.INVALIDATE, index=index, base=e.base,
+                          log2=e.size_log2, targets=bm, pages=pres_tot,
+                          false_pages=pres_tot, flushed=dirt_tot)
+                if dirt_tot:
+                    tel.event(tev.WRITEBACK, index=index, base=e.base,
+                              log2=e.size_log2, pages=dirt_tot)
 
     # ------------------------------------------------------------------ #
     def _region_table(self) -> RegionTable:
@@ -883,8 +951,14 @@ class BatchedDataPlane:
         lg = d.initial_region_log2
         assert (len(d.entries) + len(window_bases)
                 <= d.resources.max_directory_entries)
-        for base in window_bases.tolist():
-            d._install(base, lg)
+        # Install events are reconstructed by the caller at each
+        # window's first-miss access; suppress the native hook.
+        hold, d.telemetry = d.telemetry, None
+        try:
+            for base in window_bases.tolist():
+                d._install(base, lg)
+        finally:
+            d.telemetry = hold
         self._rt = None
 
     # ------------------------------------------------------------------ #
@@ -900,9 +974,11 @@ class BatchedDataPlane:
         a shadow (state, owner) per touched key tracks the
         cache-independent state evolution the victim policy's
         Invalid-first preference needs.  Returns the per-access region
-        keys, the keys installed during the walk, and the eviction
-        events as (access-position, victim key) pairs for packet
-        injection."""
+        keys, the installs as (access-position, key) pairs, and the
+        eviction events as (access-position, victim key) pairs for
+        packet injection.  Directory telemetry is suppressed for the
+        walk — install/evict events are reconstructed by the caller at
+        their exact access positions."""
         d = self.rack.mmu.engine.directory
         entries = d.entries
         maxe = d.resources.max_directory_entries
@@ -922,42 +998,46 @@ class BatchedDataPlane:
         va_l = vaddr.tolist()
         b_l = blade.tolist()
         w_l = write.tolist()
-        for i in range(len(va_l)):
-            va = va_l[i]
-            key = None
-            for lg, m in levels:
-                k = (va & m, lg)
-                if k in entries:
-                    key = k
-                    break
-            if key is None:
-                if len(entries) >= maxe:
-                    victim = d.evict_for_capacity(
-                        state_of=shadow_state, queue_pending=False)
-                    vk = (victim.base, victim.size_log2)
-                    evict_events.append((i, vk))
-                    shadow.pop(vk, None)
-                key = (va & mask0, lg0)
-                d._install(key[0], lg0)
-                installed.append(key)
-                st, ow = 0, -1
-            else:
-                d.touch_key(key)
-                s = shadow.get(key)
-                if s is None:
-                    e = entries[key]
-                    st, ow = int(e.state), e.owner
+        hold, d.telemetry = d.telemetry, None
+        try:
+            for i in range(len(va_l)):
+                va = va_l[i]
+                key = None
+                for lg, m in levels:
+                    k = (va & m, lg)
+                    if k in entries:
+                        key = k
+                        break
+                if key is None:
+                    if len(entries) >= maxe:
+                        victim = d.evict_for_capacity(
+                            state_of=shadow_state, queue_pending=False)
+                        vk = (victim.base, victim.size_log2)
+                        evict_events.append((i, vk))
+                        shadow.pop(vk, None)
+                    key = (va & mask0, lg0)
+                    d._install(key[0], lg0)
+                    installed.append((i, key))
+                    st, ow = 0, -1
                 else:
-                    st, ow = s
-            b = b_l[i]
-            if w_l[i]:
-                st, ow = 2, b
-            elif st == 0:
-                st = 1
-            elif st == 2 and ow != b:
-                st, ow = 1, -1
-            shadow[key] = (st, ow)
-            keys_acc.append(key)
+                    d.touch_key(key)
+                    s = shadow.get(key)
+                    if s is None:
+                        e = entries[key]
+                        st, ow = int(e.state), e.owner
+                    else:
+                        st, ow = s
+                b = b_l[i]
+                if w_l[i]:
+                    st, ow = 2, b
+                elif st == 0:
+                    st = 1
+                elif st == 2 and ow != b:
+                    st, ow = 1, -1
+                shadow[key] = (st, ow)
+                keys_acc.append(key)
+        finally:
+            d.telemetry = hold
         return keys_acc, installed, evict_events
 
     def _device_table(self) -> RegionTable:
@@ -1338,8 +1418,13 @@ class BatchedDataPlane:
     # ------------------------------------------------------------------ #
     def _process_chunk(self, vaddr, dense, blade, write, thread, cross,
                        kvec, pso, clocks, breakdown, trans_lat, inflight,
-                       defer: bool = False):
+                       defer: bool = False, gidx=None):
         """Replay one chunk.  Returns the per-kept-access charge vector.
+
+        ``gidx`` carries each kept access's global trace index — the
+        coordinate every reconstructed telemetry event is stamped with,
+        so the batched event stream lines up index-for-index with the
+        scalar recorder's.
 
         ``cross`` flags the accesses whose home shard differs from
         their ingress switch: unless they resolve to pure local hits
@@ -1393,6 +1478,16 @@ class BatchedDataPlane:
             if (rows < 0).any():
                 if defer:
                     return None  # installs mutate the directory up front
+                if self._tel is not None:
+                    # Scalar installs each missing window at its first
+                    # missing access; stamp the events accordingly.
+                    mpos = np.flatnonzero(rows < 0)
+                    wins, first = np.unique(vaddr[mpos] >> lg0,
+                                            return_index=True)
+                    for wb, fi in zip((wins << lg0).tolist(),
+                                      gidx[mpos[first]].tolist()):
+                        self._tel.event(tev.DIR_INSTALL, index=fi,
+                                        base=wb, log2=lg0)
                 self._install_missing_regions(
                     np.unique(vaddr[rows < 0] >> lg0) << lg0)
                 rt = self._region_table()
@@ -1412,7 +1507,17 @@ class BatchedDataPlane:
             rt = self._device_table()  # before the walk mutates entries
             keys_acc, installed, evict_events = (
                 self._residency_prepass(vaddr, blade, write))
-            self._extend_device_table(installed)
+            if self._tel is not None:
+                # The pre-pass walk is the scalar install/evict order;
+                # the eviction's invalidation itself is reconstructed
+                # from the kernel outputs further down.
+                for p, k in installed:
+                    self._tel.event(tev.DIR_INSTALL, index=int(gidx[p]),
+                                    base=k[0], log2=k[1])
+                for p, vk in evict_events:
+                    self._tel.event(tev.DIR_EVICT, index=int(gidx[p]),
+                                    base=vk[0], log2=vk[1])
+            self._extend_device_table([k for _, k in installed])
             row_of = self._row_of
             rows = np.fromiter((row_of[k] for k in keys_acc), np.int64, bk)
             self._rt = None
@@ -1468,6 +1573,20 @@ class BatchedDataPlane:
                 cpg = np.array([e[2] for e in cache_events], np.int64)
                 cdirty = np.array([e[3] for e in cache_events], bool)
                 ndirty = int(cdirty.sum())
+                if self._tel is not None:
+                    # Each eviction fires inside the triggering access's
+                    # ``BladePageCache.insert`` in the scalar engine;
+                    # ``pkt_orig`` (pre-insertion) maps the packet
+                    # position back to that access.
+                    co = pkt_orig[cpos]
+                    cva = pm.vaddr_of(cpg)
+                    for gi, b, va, dy in zip(gidx[co].tolist(),
+                                             cbl.tolist(), cva.tolist(),
+                                             cdirty.tolist()):
+                        self._tel.event(
+                            tev.CACHE_EVICT_DIRTY if dy
+                            else tev.CACHE_EVICT_CLEAN,
+                            index=gi, blade=b, base=va, pages=1)
                 # Scalar parity: evictions inside BladePageCache.insert
                 # count dirty write-backs into flushed_pages, charge no
                 # latency, and never count as invalidations.
@@ -1656,6 +1775,26 @@ class BatchedDataPlane:
         is_acc = pkt_orig >= 0
         nhits = int((w1_all[is_acc] & 1).sum())
 
+        if self._tel is not None and evict_events:
+            # Directory-eviction packets: the multicast the kernel
+            # executed for each victim, stamped at the evicting access
+            # (scalar queues then drains within the same ``access()``).
+            evp = np.flatnonzero(pkt_type == 1)
+            for k, (p, vk) in enumerate(evict_events):
+                tgt = int(inval_all[evp[k]])
+                if not tgt:
+                    continue
+                gi = int(gidx[p])
+                fl = int(flushed_all[evp[k]])
+                self._tel.event(tev.INVALIDATE, index=gi, base=vk[0],
+                                log2=vk[1], targets=tgt,
+                                pages=int(dropped_all[evp[k]]),
+                                false_pages=int(nfalse_all[evp[k]]),
+                                flushed=fl)
+                if fl:
+                    self._tel.event(tev.WRITEBACK, index=gi, base=vk[0],
+                                    log2=vk[1], pages=fl)
+
         # ---- write-back: directory entries + per-region epoch stats ---
         # Per-region Bounded-Splitting counters, reduced host-side from
         # the packed words: accesses and false invalidations per slot,
@@ -1786,6 +1925,14 @@ class BatchedDataPlane:
                 m = kind == code
                 if m.any():
                     trans_lat.setdefault(kname, []).append(total[m])
+            if self._tel is not None:
+                self._commit_events(gidx, vaddr, blade, write, rt, rows,
+                                    hit, kind, invals, cross_hop, charged,
+                                    dropped_all[is_acc],
+                                    nfalse_all[is_acc],
+                                    flushed_all[is_acc],
+                                    lb_fetch, lb_inv, lb_tlb, lb_queue,
+                                    lb_switch, kvec)
 
         self._tick("latency_reconstruct", t0)
         if defer:
@@ -1795,3 +1942,54 @@ class BatchedDataPlane:
             return charged, commit
         commit_latency()
         return charged
+
+    # ------------------------------------------------------------------ #
+    def _commit_events(self, gidx, vaddr, blade, write, rt, rows, hit,
+                       kind, invals, cross_hop, charged, drop_acc,
+                       false_acc, flush_acc, lb_fetch, lb_inv, lb_tlb,
+                       lb_queue, lb_switch, kvec):
+        """Emit one committed chunk's per-access telemetry: the ACCESS
+        stream, per-access invalidation/downgrade multicasts (plus their
+        write-backs), cross-shard hops, and the latency histograms —
+        everything the scalar hooks emit from inside
+        ``CoherenceEngine.access`` / ``_mind_access`` / ``_route``,
+        reconstructed from the packed kernel output words.  Called from
+        the commit closure, so a discarded speculative chunk emits
+        nothing."""
+        tel = self._tel
+        tel.observe_latency_many(lb_fetch, lb_inv, lb_tlb, lb_queue,
+                                 lb_switch, charged)
+        ncross = int(cross_hop.sum())
+        if ncross:
+            tel.observe_cross_shard_many(np.full(ncross, kvec[6]))
+        home = (self._smap.home_of_batch(vaddr).tolist()
+                if self._sharded else None)
+        gi = gidx.tolist()
+        rb = rt.bases[rows].tolist()
+        rl = rt.log2s[rows].tolist()
+        bl = blade.tolist()
+        wr = write.tolist()
+        ht = hit.tolist()
+        kd = kind.tolist()
+        iv = invals.tolist()
+        dp = drop_acc.tolist()
+        nf = false_acc.tolist()
+        fl = flush_acc.tolist()
+        xs = cross_hop.tolist()
+        ch = charged.tolist()
+        dkc = self._dkc
+        ev = tel.event
+        for j in range(len(gi)):
+            if iv[j]:
+                ev(tev.DOWNGRADE if dkc and kd[j] == 5 else tev.INVALIDATE,
+                   index=gi[j], base=rb[j], log2=rl[j], targets=iv[j],
+                   pages=dp[j], false_pages=nf[j], flushed=fl[j])
+                if fl[j]:
+                    ev(tev.WRITEBACK, index=gi[j], base=rb[j], log2=rl[j],
+                       pages=fl[j])
+            if xs[j]:
+                ev(tev.XS_HOP, index=gi[j], blade=bl[j], base=rb[j],
+                   log2=rl[j], targets=home[j])
+            ev(tev.ACCESS, index=gi[j], blade=bl[j], base=rb[j],
+               log2=rl[j], write=wr[j], hit=int(ht[j]),
+               tkind=_KINDS[kd[j]], us=ch[j])

@@ -205,6 +205,14 @@ class PageMap:
         dense = self.dense_base[clip] + ((v - self.va_starts[clip]) >> PAGE_SHIFT)
         return np.where(ok, dense, -1)
 
+    def vaddr_of(self, dense: np.ndarray) -> np.ndarray:
+        """Inverse of :meth:`dense_of`: the page-aligned vaddr of each
+        dense page index.  Callers pass indices this map produced, so
+        every input is assumed in range."""
+        d = np.asarray(dense, np.int64)
+        k = np.searchsorted(self.dense_base, d, side="right") - 1
+        return self.va_starts[k] + ((d - self.dense_base[k]) << PAGE_SHIFT)
+
     def region_dense_span(
         self, bases: np.ndarray, sizes: np.ndarray
     ) -> tuple[np.ndarray, np.ndarray]:

@@ -442,6 +442,45 @@ def test_shard_snapshots_partition_the_directory():
         assert (a.state, a.sharers, a.owner) == (b.state, b.sharers, b.owner)
 
 
+def test_shard_snapshots_carry_telemetry_counters():
+    """ISSUE 6 rider on the failover snapshots: a per-shard snapshot
+    carries exactly the failed switch's slice of the metrics registry
+    (series labeled shard=k, plus the unlabeled series on shard 0), the
+    restored backup resumes counting from that slice, and the four
+    slices partition the full registry — per-series sums match."""
+    from repro.core.control_plane import ControlPlane
+    from repro.telemetry import Telemetry
+
+    tel = Telemetry()
+    rack = ShardedRack(num_shards=4, system="mind", num_compute_blades=2,
+                       threads_per_blade=2, telemetry=tel)
+    rack.run(_xs_trace(threads=4, n=200))
+    assert tel.metrics._counters
+    full = json.loads(rack.cp.snapshot())["telemetry"]
+    assert full == tel.metrics.counters_to_jsonable()
+    restored = [ControlPlane.restore(rack.cp.snapshot(shard=s),
+                                     cache_bytes_per_blade=512 << 20,
+                                     num_compute_blades=2)
+                for s in range(4)]
+    for s, cp2 in enumerate(restored):
+        rows = cp2.telemetry.metrics.counters_to_jsonable()
+        assert rows == tel.metrics.counters_to_jsonable(shard=s)
+        if s > 0:  # shard-less series live on the shard-0 slice
+            assert rows and all(r["labels"]["shard"] == s for r in rows)
+    for name in {r["name"] for r in full}:
+        total = sum(r["value"] for r in full if r["name"] == name)
+        split = sum(r["value"]
+                    for cp2 in restored
+                    for r in cp2.telemetry.metrics.counters_to_jsonable()
+                    if r["name"] == name)
+        assert split == total, name
+    # the backup keeps counting: another install lands on top
+    cp3 = restored[2]
+    cp3.telemetry.metrics.inc("dir_installs_total", shard=2)
+    assert cp3.telemetry.metrics.get("dir_installs_total", shard=2) == \
+        tel.metrics.get("dir_installs_total", shard=2) + 1
+
+
 def test_shard_occupancy_sums_to_directory():
     rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
                        threads_per_blade=2)

@@ -1,0 +1,449 @@
+"""Telemetry plane: flight-recorder parity, metrics, exporters, explainer.
+
+The ISSUE 6 contract: with a :class:`~repro.telemetry.Telemetry` attached,
+the scalar oracle emits coherence events natively and the batched engine
+reconstructs the *same* event stream host-side from packed kernel outputs
+and pre-pass decisions — identical canonical event multisets, identical
+labeled counters and identical latency-histogram bins across every
+workload regime (plain, directory pressure, cache pressure, epochs, the
+full cocktail, and sharded cross-shard traffic).  The exporters render
+that stream as a loadable Chrome-trace/Perfetto JSON whose slice counts
+match :class:`~repro.core.types.EpochStats`, and ``explain.py`` names the
+first divergent access index when streams disagree.  Disabled telemetry
+leaves every component hook ``None`` (the zero-overhead contract; the
+wall-clock half is enforced by ``dataplane_bench.py --overhead-check``).
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import traces as T
+from repro.core.emulator import DisaggregatedRack, ShardedRack
+from repro.telemetry import LATENCY_COMPONENTS, Telemetry, canonical
+from repro.telemetry import events as tev
+from repro.telemetry.explain import (
+    assert_event_parity,
+    assert_metric_parity,
+    first_divergence,
+    render,
+)
+from repro.telemetry.exporters import (
+    metrics_to_csv,
+    metrics_to_json,
+    to_perfetto,
+    write_perfetto,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a [dev] extra
+    HAVE_HYPOTHESIS = False
+
+
+def _zipf(threads=4, n=250, seed=11):
+    return T.ycsb_trace("zipf", num_threads=threads, read_ratio=0.5,
+                        accesses_per_thread=n, store_mb=4, seed=seed)
+
+
+def _uniform(n=250):
+    return T.uniform_trace(num_threads=4, read_ratio=0.7, sharing_ratio=0.5,
+                           accesses_per_thread=n, working_set_pages=2000,
+                           seed=5)
+
+
+def _epoch_trace(n=600):
+    return T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                        accesses_per_thread=n, store_mb=4, seed=7)
+
+
+def _pair(trace, system="mind", opts=None, **kw):
+    """Scalar + batched racks, each with a fresh Telemetry."""
+    kw.setdefault("num_compute_blades", 2)
+    kw.setdefault("threads_per_blade", 2)
+    kw.setdefault("splitting_enabled", False)
+    rs = DisaggregatedRack(system=system, engine="scalar",
+                           telemetry=Telemetry(), **kw).run(trace)
+    rb = DisaggregatedRack(system=system, engine="batched",
+                           telemetry=Telemetry(),
+                           engine_options=opts or {}, **kw).run(trace)
+    return rs, rb
+
+
+def _assert_full_parity(rs, rb):
+    assert_event_parity(rs.telemetry, rb.telemetry)
+    assert_metric_parity(rs.telemetry, rb.telemetry)
+
+
+# --------------------------------------------------------------------- #
+# Event-stream + counter + histogram parity across workload regimes.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("system", ["mind", "mind-pso", "mind-pso+"])
+def test_event_parity_plain(system):
+    rs, rb = _pair(_zipf(), system=system)
+    _assert_full_parity(rs, rb)
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts[tev.ACCESS] == rs.stats.accesses
+    assert counts.get(tev.DIR_INSTALL, 0) > 0
+
+
+def test_event_parity_directory_pressure():
+    """Capacity evictions: dir_evict + drain invalidations reconstruct."""
+    rs, rb = _pair(_uniform(n=250), max_directory_entries=8)
+    assert rs.stats.invalidations > 0
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts[tev.DIR_EVICT] > 0
+    _assert_full_parity(rs, rb)
+
+
+def test_event_parity_cache_pressure():
+    """Blade page-cache evictions: clean/dirty victim events match."""
+    rs, rb = _pair(_zipf(), cache_bytes_per_blade=1 << 14)
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts[tev.CACHE_EVICT_DIRTY] == rs.stats.evicted_dirty > 0
+    assert counts[tev.CACHE_EVICT_CLEAN] == rs.stats.evicted_clean > 0
+    _assert_full_parity(rs, rb)
+
+
+def test_event_parity_epochs():
+    """Epoch boundaries land on the same access; split/merge events and
+    the epoch spans themselves agree."""
+    rs, rb = _pair(_epoch_trace(), splitting_enabled=True, epoch_us=4000.0)
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts[tev.EPOCH] == len(rs.epoch_reports) > 1
+    _assert_full_parity(rs, rb)
+
+
+@pytest.mark.parametrize("opts", [{}, {"chunk_size": 97}])
+def test_event_parity_cocktail(opts):
+    """Everything at once — directory pressure + cache pressure + epochs;
+    chunk_size=97 forces epoch boundaries mid-chunk, exercising the
+    speculation rollback path (whose telemetry must unwind exactly)."""
+    rs, rb = _pair(_epoch_trace(), opts=opts, splitting_enabled=True,
+                   epoch_us=4000.0, max_directory_entries=120,
+                   cache_bytes_per_blade=1 << 16)
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts[tev.DIR_EVICT] > 0
+    assert counts[tev.CACHE_EVICT_DIRTY] > 0
+    assert counts[tev.EPOCH] > 1
+    _assert_full_parity(rs, rb)
+
+
+@pytest.mark.parametrize("num_shards,opts", [(4, None), (2, {"chunk_size": 7})])
+def test_event_parity_sharded_cross_shard(num_shards, opts):
+    """Sharded racks: xs_hop events (and the cross_shard histogram
+    component) reconstruct identically, including per-shard labels."""
+    trace = T.sharded_conflict_trace(num_threads=4, accesses_per_thread=300,
+                                     seed=9)
+    kw = dict(num_compute_blades=4, threads_per_blade=2)
+    ta, tb = Telemetry(), Telemetry()
+    rs = ShardedRack(num_shards=num_shards, engine="scalar", telemetry=ta,
+                     **kw).run(trace)
+    rb = ShardedRack(num_shards=num_shards, engine="batched", telemetry=tb,
+                     engine_options=opts or {}, **kw).run(trace)
+    assert_event_parity(ta, tb)
+    assert_metric_parity(ta, tb)
+    hops = ta.recorder.counts_by_kind().get(tev.XS_HOP, 0)
+    assert hops > 0
+    assert ta.metrics.total("cross_shard_hops_total") == hops
+    h = ta.metrics.hist("access_latency_us", component="cross_shard")
+    assert h is not None and h.count == hops
+    assert rs.stats.accesses == rb.stats.accesses
+
+
+def test_event_parity_sharded_epochs():
+    """Sharding + Bounded-Splitting epochs + mid-chunk rollbacks: the
+    batched-only speculation_rollbacks_total counter is excluded from
+    parity; everything else matches exactly."""
+    trace = T.ycsb_trace("zipf", num_threads=4, read_ratio=0.5,
+                         accesses_per_thread=400, store_mb=4, seed=7)
+    kw = dict(num_compute_blades=4, threads_per_blade=2,
+              splitting_enabled=True, epoch_us=4000.0)
+    ta, tb = Telemetry(), Telemetry()
+    ShardedRack(num_shards=4, engine="scalar", telemetry=ta, **kw).run(trace)
+    ShardedRack(num_shards=4, engine="batched", telemetry=tb, **kw).run(trace)
+    assert_event_parity(ta, tb)
+    assert_metric_parity(ta, tb)
+    assert ta.metrics.get("speculation_rollbacks_total") == 0
+    assert tb.metrics.get("speculation_rollbacks_total") > 0
+    assert tb.recorder.counts_by_kind().get(tev.SPEC_ROLLBACK, 0) > 0
+
+
+# --------------------------------------------------------------------- #
+# Counters and histograms are derived consistently with EpochStats.
+# --------------------------------------------------------------------- #
+def test_counters_agree_with_epoch_stats():
+    rs, rb = _pair(_epoch_trace(n=300), splitting_enabled=True,
+                   epoch_us=4000.0, cache_bytes_per_blade=1 << 15)
+    for r in (rs, rb):
+        m, s = r.telemetry.metrics, r.stats
+        assert m.total("accesses_total") == s.accesses + s.faults
+        assert m.total("invalidated_pages_total") == s.invalidated_pages
+        assert (m.total("false_invalidated_pages_total")
+                == s.false_invalidated_pages)
+        assert m.total("flushed_pages_total") == s.flushed_pages
+        assert m.get("cache_evictions_total", blade=0, kind="dirty") + \
+            m.get("cache_evictions_total", blade=1, kind="dirty") == \
+            s.evicted_dirty
+        assert m.total("faults_total") == s.faults
+        assert m.total("epochs_total") == len(r.epoch_reports)
+
+
+def test_latency_histograms_cover_every_component():
+    rs, _ = _pair(_zipf())
+    m = rs.telemetry.metrics
+    n = rs.stats.accesses + rs.stats.faults
+    for comp in LATENCY_COMPONENTS:
+        if comp == "cross_shard":
+            continue  # unsharded rack never pays the hop
+        h = m.hist("access_latency_us", component=comp)
+        assert h is not None and h.count == n, comp
+    total = m.hist("access_latency_us", component="total")
+    # the histogram's mass reproduces the mean the emulator reports
+    np.testing.assert_allclose(total.total / total.count, rs.mean_access_us,
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# Exporters: Perfetto trace JSON + metric dumps.
+# --------------------------------------------------------------------- #
+def test_perfetto_export_from_sharded_replay(tmp_path):
+    """The acceptance-criterion smoke: a sharded batched replay exports a
+    loadable Chrome-trace JSON whose slice counts match EpochStats."""
+    tel = Telemetry()
+    trace = T.sharded_conflict_trace(num_threads=4, accesses_per_thread=200,
+                                     seed=9)
+    r = ShardedRack(num_shards=2, engine="batched", telemetry=tel,
+                    num_compute_blades=4, threads_per_blade=2).run(trace)
+    path = tmp_path / "trace.json"
+    write_perfetto(path, tel, label="smoke")
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["label"] == "smoke"
+    slices = [e for e in evs if e.get("cat") == "access"]
+    assert len(slices) == r.stats.accesses + r.stats.faults
+    hops = [e for e in evs if e.get("name") == tev.XS_HOP]
+    assert len(hops) == tel.recorder.counts_by_kind()[tev.XS_HOP]
+    # one process track per shard plus the control plane
+    pids = {e["pid"] for e in evs}
+    assert pids == {0, 1, 2}
+    # every slice sits on its region's home-shard track
+    for e in slices:
+        assert e["pid"] == tel.shard_map.home_of(e["args"]["base"])
+
+
+def test_perfetto_epoch_spans_and_rollback_flows():
+    tel = Telemetry()
+    DisaggregatedRack(system="mind", engine="batched", telemetry=tel,
+                      num_compute_blades=2, threads_per_blade=2,
+                      epoch_us=4000.0,
+                      engine_options={"chunk_size": 97}).run(_epoch_trace())
+    evs = to_perfetto(tel)["traceEvents"]
+    spans = [e for e in evs if e.get("name") == "epoch" and e["ph"] == "X"]
+    assert len(spans) == tel.recorder.counts_by_kind()[tev.EPOCH]
+    ts = [e["ts"] for e in spans]
+    assert ts == sorted(ts)
+    rb = tel.recorder.counts_by_kind().get(tev.SPEC_ROLLBACK, 0)
+    assert rb > 0
+    flows = [e for e in evs if e.get("cat") == "speculation"
+             and e["ph"] in ("s", "f")]
+    assert len(flows) == 2 * rb  # one start + one finish per rollback
+    json.loads(json.dumps(evs))  # fully serializable
+
+
+def test_metric_dumps_roundtrip():
+    rs, _ = _pair(_zipf(n=100))
+    m = rs.telemetry.metrics
+    doc = json.loads(metrics_to_json(m))
+    assert {c["name"] for c in doc["counters"]} >= {
+        "accesses_total", "dir_installs_total", "invalidations_total"}
+    by_name = {}
+    for c in doc["counters"]:
+        by_name[c["name"]] = by_name.get(c["name"], 0) + c["value"]
+    assert by_name["accesses_total"] == rs.stats.accesses
+    hist_names = {h["name"] for h in doc["histograms"]}
+    assert "access_latency_us" in hist_names
+    for h in doc["histograms"]:
+        assert sum(h["bucket_counts"]) == h["count"]
+    csv = metrics_to_csv(m)
+    lines = csv.strip().splitlines()
+    assert lines[0] == "series,labels,value"
+    assert len(lines) == 1 + len(doc["counters"]) + len(doc["gauges"])
+
+
+# --------------------------------------------------------------------- #
+# The parity-diff explainer pins the first divergent access.
+# --------------------------------------------------------------------- #
+def test_explain_names_first_divergent_access():
+    """Deliberately perturb one event of a batched run: explain.py must
+    name exactly that access index, not just 'streams differ'."""
+    rs, rb = _pair(_zipf(n=150))
+    assert first_divergence(rs.telemetry.recorder.events,
+                            rb.telemetry.recorder.events) is None
+    mutated = [dataclasses.replace(e) for e in rb.telemetry.recorder.events]
+    accesses = [e for e in mutated if e.kind == tev.ACCESS]
+    victim = accesses[len(accesses) // 2]
+    victim.hit ^= 1
+    report = first_divergence(rs.telemetry.recorder.events, mutated)
+    assert report is not None
+    assert report["index"] == victim.index
+    assert report["kind"] == "events"
+    text = render(report)
+    assert f"first divergence at trace access index {victim.index}" in text
+    assert "batched" in text and "scalar" in text
+
+
+def test_explain_latency_mismatch_is_distinguished():
+    rs, rb = _pair(_zipf(n=150))
+    mutated = [dataclasses.replace(e) for e in rb.telemetry.recorder.events]
+    accesses = [e for e in mutated if e.kind == tev.ACCESS and e.us > 0]
+    victim = accesses[-1]
+    victim.us *= 1.5  # same key, different charged microseconds
+    report = first_divergence(rs.telemetry.recorder.events, mutated)
+    assert report is not None
+    assert report["index"] == victim.index
+    assert report["kind"] == "latency"
+    with pytest.raises(AssertionError, match="latency mismatch"):
+        tb = Telemetry()
+        for e in mutated:
+            tb.recorder.emit(e)
+        assert_event_parity(rs.telemetry, tb)
+
+
+def test_canonical_drops_non_parity_kinds():
+    tel = Telemetry()
+    tel.event(tev.ACCESS, index=0, blade=0, write=0, hit=1, tkind="S->S")
+    tel.event(tev.SPEC_ROLLBACK, index=0, pages=31)
+    evs = canonical(tel.recorder.events)
+    assert [e.kind for e in evs] == [tev.ACCESS]
+    evs = canonical(tel.recorder.events, drop_non_parity=False)
+    assert {e.kind for e in evs} == {tev.ACCESS, tev.SPEC_ROLLBACK}
+
+
+# --------------------------------------------------------------------- #
+# Zero-overhead-when-disabled: no hook is installed anywhere.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("telemetry", [None, "disabled"])
+def test_disabled_telemetry_installs_no_hooks(telemetry):
+    tel = Telemetry(enabled=False) if telemetry == "disabled" else None
+    rack = DisaggregatedRack(system="mind", num_compute_blades=2,
+                             threads_per_blade=2, splitting_enabled=False,
+                             telemetry=tel)
+    eng = rack.mmu.engine
+    assert rack.telemetry is None
+    assert eng.telemetry is None
+    assert eng.directory.telemetry is None
+    assert all(c.telemetry is None for c in eng.caches.values())
+    assert rack.cp.telemetry is None
+    r = rack.run(_zipf(n=50))
+    assert r.telemetry is None
+    if tel is not None:
+        assert tel.recorder.total_emitted == 0
+        assert tel.metrics._counters == {}
+
+
+def test_non_mind_systems_never_wire_telemetry():
+    tel = Telemetry()
+    rack = DisaggregatedRack(system="gam", num_compute_blades=2,
+                             threads_per_blade=2, telemetry=tel)
+    assert rack.telemetry is None
+    r = rack.run(_zipf(n=50))
+    assert r.telemetry is None and tel.recorder.total_emitted == 0
+
+
+def test_result_summary_reports_event_counts():
+    rs, _ = _pair(_zipf(n=100))
+    s = rs.summary()
+    assert "events=" in s
+    assert rs.telemetry is not None
+    bare = DisaggregatedRack(system="mind", num_compute_blades=2,
+                             threads_per_blade=2,
+                             splitting_enabled=False).run(_zipf(n=50))
+    assert "events=" not in bare.summary()
+
+
+# --------------------------------------------------------------------- #
+# Flight-recorder ring mechanics.
+# --------------------------------------------------------------------- #
+def test_ring_buffer_bounds_and_drop_accounting():
+    tel = Telemetry(capacity=16)
+    for i in range(40):
+        tel.event(tev.ACCESS, index=i, blade=0, write=0, hit=1, tkind="S->S")
+    assert len(tel.recorder) == 16
+    assert tel.recorder.total_emitted == 40
+    assert tel.recorder.dropped == 24
+    assert [e.index for e in tel.recorder.events] == list(range(24, 40))
+    # counters keep counting past the ring horizon
+    assert tel.metrics.total("accesses_total") == 40
+
+
+def test_state_mark_restores_events_and_counters():
+    tel = Telemetry()
+    tel.event(tev.ACCESS, index=0, blade=0, write=1, hit=0, tkind="I->M")
+    tel.observe_latency(9.0, 0.0, 0.0, 0.0, 0.4, 9.4)
+    mark = tel.state_mark()
+    tel.event(tev.ACCESS, index=1, blade=1, write=0, hit=1, tkind="S->S")
+    tel.event(tev.INVALIDATE, index=1, base=0, log2=14, targets=2, pages=4)
+    tel.observe_latency(0.0, 9.0, 4.0, 1.2, 0.4, 14.6)
+    tel.restore_mark(mark)
+    assert tel.recorder.counts_by_kind() == {tev.ACCESS: 1}
+    assert tel.metrics.total("accesses_total") == 1
+    assert tel.metrics.total("invalidations_total") == 0
+    h = tel.metrics.hist("access_latency_us", component="total")
+    assert h.count == 1 and h.total == pytest.approx(9.4)
+
+
+# --------------------------------------------------------------------- #
+# Failover snapshots carry the registry counters.
+# --------------------------------------------------------------------- #
+def test_snapshot_roundtrips_registry_counters():
+    from repro.core.control_plane import ControlPlane
+
+    tel = Telemetry()
+    rack = DisaggregatedRack(system="mind", telemetry=tel,
+                             num_compute_blades=2, threads_per_blade=2,
+                             splitting_enabled=False)
+    rack.run(_zipf(n=100))
+    assert tel.metrics._counters
+    cp2 = ControlPlane.restore(rack.cp.snapshot(),
+                               cache_bytes_per_blade=512 << 20,
+                               num_compute_blades=2)
+    assert cp2.telemetry is not None
+    assert cp2.telemetry.metrics._counters == tel.metrics._counters
+
+
+# --------------------------------------------------------------------- #
+# Property-based parity (CI runs with the [dev] extra installed).
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16),
+           read_ratio=st.sampled_from([0.2, 0.5, 0.9]),
+           chunk=st.sampled_from([0, 61, 97]))
+    def test_event_parity_hypothesis(seed, read_ratio, chunk):
+        trace = T.ycsb_trace("zipf", num_threads=2, read_ratio=read_ratio,
+                             accesses_per_thread=80, store_mb=2, seed=seed)
+        opts = {"chunk_size": chunk} if chunk else {}
+        rs, rb = _pair(trace, opts=opts, cache_bytes_per_blade=1 << 15)
+        _assert_full_parity(rs, rb)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 2 ** 10),
+           num_shards=st.sampled_from([2, 3, 4]))
+    def test_sharded_event_parity_hypothesis(seed, num_shards):
+        trace = T.sharded_conflict_trace(num_threads=4,
+                                         accesses_per_thread=120, seed=seed)
+        ta, tb = Telemetry(), Telemetry()
+        kw = dict(num_compute_blades=4, threads_per_blade=2)
+        ShardedRack(num_shards=num_shards, engine="scalar", telemetry=ta,
+                    **kw).run(trace)
+        ShardedRack(num_shards=num_shards, engine="batched", telemetry=tb,
+                    **kw).run(trace)
+        assert_event_parity(ta, tb)
+        assert_metric_parity(ta, tb)
