@@ -47,6 +47,13 @@ single-switch oracle in every cell, and the emulated runtime must
 exceed the oracle's by exactly the cross-shard hop total.  Results
 land in ``benchmarks/results/BENCH_sharded.json``.
 
+The ISSUE 7 acceptance benchmark: a skewed 2-shard cell with per-shard
+SRAM budgets where the online rebalancer migrates the hot VA blocks at
+the first epoch boundary — pre/post shard-access split and occupancy,
+migration counts and charged microseconds, and the batched-vs-scalar
+speedup with the rebalancer live land in
+``benchmarks/results/BENCH_rebalance.json``.
+
 Usage: PYTHONPATH=src python -m benchmarks.dataplane_bench
        [--quick] [--perf-floor X]
 
@@ -438,6 +445,116 @@ def bench_sharded(quick: bool, perf_floor: float = 0.0,
 
 
 # --------------------------------------------------------------------- #
+# ISSUE 7: decentralized control plane + online rebalancing
+# (BENCH_rebalance.json).
+# --------------------------------------------------------------------- #
+def bench_rebalance(quick: bool, perf_floor: float = 0.0,
+                    repeats: int = 2) -> dict:
+    """Skewed XS cell on a 2-shard rack with per-shard SRAM budgets: the
+    private working sets concentrate on shard 0, the online rebalancer
+    (threshold 1.5) migrates the hot VA blocks out at the first epoch
+    boundary, and the access split flattens.  Reported: pre/post
+    shard-access split and SRAM occupancy, migration counts, the exact
+    charged migration microseconds, and the batched-vs-scalar replay
+    speedup with the rebalancer live (must match stats and migration
+    reports exactly)."""
+    from repro.core.emulator import ShardedRack
+
+    threads = BLADES * THREADS_PER_BLADE
+    per_thread = 500 if quick else 2000
+    trace = T.sharded_conflict_trace(
+        num_threads=threads, accesses_per_thread=per_thread,
+        num_shards=4, blocks_per_shard=2, conflict_frac=0.5,
+        write_frac=0.3, hot_pages_per_block=24,
+        private_kb_per_thread=256, seed=42)
+    kw = dict(system="mind", num_compute_blades=BLADES,
+              threads_per_blade=THREADS_PER_BLADE, splitting_enabled=False,
+              epoch_us=2500.0, shard_slot_budgets=4096)
+    n = len(trace)
+
+    def make(engine: str, rebalance: bool) -> ShardedRack:
+        return ShardedRack(
+            num_shards=2, engine=engine,
+            rebalance_threshold=1.5 if rebalance else None, **kw)
+
+    # Pre-rebalance (skewed) baseline.
+    base_rack = make("scalar", rebalance=False)
+    base = base_rack.run(trace)
+    pre_acc = base.shard_accesses
+    pre_occ = base_rack.shard_occupancy()
+    pre_frac = max(pre_acc) / sum(pre_acc)
+
+    make("batched", rebalance=True).run(trace)  # jit warm-up (per-process)
+
+    def best_wall(engine: str):
+        best, rack, result = float("inf"), None, None
+        for _ in range(repeats):
+            rack = make(engine, rebalance=True)
+            t0 = time.perf_counter()
+            result = rack.run(trace)
+            best = min(best, time.perf_counter() - t0)
+        return best, rack, result
+
+    wall_b, _, rb = best_wall("batched")
+    wall_s, rack_s, rs = best_wall("scalar")
+    fields = STAT_FIELDS + ("evicted_dirty", "evicted_clean")
+    parity = all(getattr(rs.stats, f) == getattr(rb.stats, f)
+                 for f in fields)
+    post_acc = rs.shard_accesses
+    post_occ = rack_s.shard_occupancy()
+    post_frac = max(post_acc) / sum(post_acc)
+    moves = [m for rp in rs.rebalance_reports for m in rp["moves"]]
+    out = {
+        "workload": "XS (skewed private blocks, 2-shard rack)",
+        "blades": BLADES, "threads_per_blade": THREADS_PER_BLADE,
+        "accesses": n,
+        "num_shards": 2,
+        "shard_slot_budgets": kw["shard_slot_budgets"],
+        "rebalance_threshold": 1.5,
+        "pre_rebalance": {"shard_accesses": pre_acc,
+                          "shard_occupancy": pre_occ,
+                          "max_shard_frac": pre_frac},
+        "post_rebalance": {"shard_accesses": post_acc,
+                           "shard_occupancy": post_occ,
+                           "max_shard_frac": post_frac},
+        "migrations": len(moves),
+        "migrated_entries": sum(m["entries"] for m in moves),
+        "migration_us_total":
+            sum(rp["migration_us"] for rp in rs.rebalance_reports),
+        "rebalance_reports": rs.rebalance_reports,
+        "scalar_wall_s": wall_s,
+        "batched_wall_s": wall_b,
+        "scalar_acc_per_s": n / wall_s,
+        "batched_acc_per_s": n / wall_b,
+        "speedup_batched_vs_scalar": wall_s / wall_b,
+        "stats_identical": parity,
+        "reports_identical": rs.rebalance_reports == rb.rebalance_reports,
+        "runtime_us": {"scalar": rs.runtime_us, "batched": rb.runtime_us},
+        "phases": _phases(rb),
+    }
+    emit("rebalance/scalar", wall_s / n * 1e6,
+         f"acc_per_s={n / wall_s:.0f};moves={len(moves)}")
+    emit("rebalance/batched", wall_b / n * 1e6,
+         f"acc_per_s={n / wall_b:.0f};speedup={wall_s / wall_b:.1f}x;"
+         f"parity={'identical' if parity else 'DIVERGED'};"
+         f"split={pre_frac:.0%}->{post_frac:.0%}")
+    path = save_json("BENCH_rebalance", out)
+    print(f"# wrote {path}")
+    assert parity, "rebalance cell coherence stats diverged!"
+    assert out["reports_identical"], "migration reports diverged!"
+    assert moves, "rebalancer never fired on the skewed cell"
+    assert post_frac < pre_frac, \
+        "rebalancing did not flatten the shard-access split"
+    if out["speedup_batched_vs_scalar"] < 10.0:
+        print(f"# WARNING: rebalance-cell speedup "
+              f"{out['speedup_batched_vs_scalar']:.1f}x below 10x target")
+    if perf_floor:
+        assert out["speedup_batched_vs_scalar"] >= perf_floor, \
+            f"rebalance cell below {perf_floor}x floor"
+    return out
+
+
+# --------------------------------------------------------------------- #
 # ISSUE 6: the zero-overhead-when-disabled telemetry guard.
 # --------------------------------------------------------------------- #
 def bench_telemetry_overhead(quick: bool, repeats: int = 3) -> dict:
@@ -503,7 +620,8 @@ def main() -> None:
                     help="measure telemetry overhead on the headline cell "
                          "and assert disabled-telemetry <= 5% over baseline")
     ap.add_argument("--only", choices=["all", "dataplane", "eviction",
-                                       "cache", "sharded"], default="all",
+                                       "cache", "sharded", "rebalance"],
+                    default="all",
                     help="run one section in a fresh process (long "
                          "single-process runs can throttle and skew "
                          "late cells)")
@@ -519,6 +637,9 @@ def main() -> None:
         return
     if args.only == "sharded":
         bench_sharded(args.quick, args.perf_floor, repeats)
+        return
+    if args.only == "rebalance":
+        bench_rebalance(args.quick, args.perf_floor, repeats)
         return
 
     trace = T.ma_trace(num_threads=BLADES * THREADS_PER_BLADE,
@@ -570,6 +691,7 @@ def main() -> None:
         bench_eviction(args.quick, args.perf_floor)
         bench_cache_eviction(args.quick, args.perf_floor, repeats)
         bench_sharded(args.quick, args.perf_floor, repeats)
+        bench_rebalance(args.quick, args.perf_floor, repeats)
 
 
 if __name__ == "__main__":

@@ -175,7 +175,15 @@ class BoundedSplitting:
             e = d.entries.get(keys[j])
             if e is None:
                 continue
-            if d.num_entries() >= d.resources.max_directory_entries:
+            if d.shard_budgets is not None:
+                # Decentralized mode: a split costs one extra slot in the
+                # region's *home shard*; skip (don't evict mid-split) when
+                # that shard's budget is full.  Other shards may still
+                # have headroom, so keep scanning instead of breaking.
+                s = d._shard_of_key(keys[j])
+                if len(d._shard_lru[s]) >= d.shard_budgets[s]:
+                    continue
+            elif d.num_entries() >= d.resources.max_directory_entries:
                 break  # no free SRAM slots: cannot split further
             d.split(e)
             splits += 1

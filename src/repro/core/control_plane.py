@@ -50,6 +50,21 @@ class ControlPlane:
         # from here so both engines share one emission site, and
         # snapshots carry the registry counters for failover.
         self.telemetry = None
+        # Online shard rebalancer (decentralized racks).  When
+        # ``rebalance_threshold`` is set, per-VA-block access counters
+        # accumulate in ``block_accesses`` over each epoch; at the epoch
+        # boundary the control plane migrates hot blocks from the
+        # hottest shard to the coldest one (bounded by
+        # ``rebalance_max_moves`` per epoch).  Migrated region state is
+        # serialized through the per-shard snapshot row format and the
+        # traffic is charged at ``switch_to_switch_us`` per entry —
+        # picked up stop-the-world by the engines via
+        # ``take_migration_charge``.
+        self.rebalance_threshold: float | None = None
+        self.rebalance_max_moves = 4
+        self.block_accesses: dict[int, int] | None = None
+        self.rebalance_reports: list[dict] = []
+        self._migration_us_pending = 0.0
 
     # ------------------------------------------------------------------ #
     # Syscall intercepts (§6.1 'Managing vmas').
@@ -105,17 +120,123 @@ class ControlPlane:
     # ------------------------------------------------------------------ #
     # Epoch driver (Bounded Splitting, §5).
     # ------------------------------------------------------------------ #
-    def maybe_run_epoch(self, now_us: float) -> EpochReport | None:
+    def maybe_run_epoch(self, now_us: float, split: bool = True) -> EpochReport | None:
+        """Fire the epoch machinery if the epoch elapsed: Bounded
+        Splitting (when ``split``) followed by the shard rebalancer
+        (when enabled).  Both engines call this at the same boundaries
+        on the same objects, so everything below is parity-safe by
+        construction."""
         if now_us - self._last_epoch_at_us < self.epoch_us:
             return None
         self._last_epoch_at_us = now_us
-        report = self.splitting.run_epoch()
-        self.epoch_reports.append(report)
-        if self.telemetry is not None:
-            self.telemetry.event(tev.EPOCH, targets=report.splits,
-                                 false_pages=report.merges,
-                                 pages=report.directory_entries)
+        report = None
+        if split:
+            report = self.splitting.run_epoch()
+            self.epoch_reports.append(report)
+            if self.telemetry is not None:
+                self.telemetry.event(tev.EPOCH, targets=report.splits,
+                                     false_pages=report.merges,
+                                     pages=report.directory_entries)
+        if self.rebalance_threshold is not None:
+            self._run_rebalance()
         return report
+
+    # ------------------------------------------------------------------ #
+    # Online shard rebalancing (decentralized racks).
+    # ------------------------------------------------------------------ #
+    def enable_rebalancer(self, threshold: float, max_moves: int = 4) -> None:
+        """Migrate hot VA blocks at epoch boundaries whenever the
+        hottest shard saw more than ``threshold``x the accesses of the
+        coldest one (``threshold`` > 1)."""
+        assert threshold > 1.0
+        assert max_moves >= 1
+        self.rebalance_threshold = threshold
+        self.rebalance_max_moves = max_moves
+        self.block_accesses = {}
+
+    def take_migration_charge(self) -> float:
+        """Drain the pending migration latency (us).  The engines charge
+        it stop-the-world: every thread stalls while region state moves
+        between switches over the switch-to-switch links."""
+        us, self._migration_us_pending = self._migration_us_pending, 0.0
+        return us
+
+    def _run_rebalance(self) -> None:
+        smap = self.shard_map
+        acc = self.block_accesses
+        if smap is None or smap.num_shards < 2 or not acc:
+            if acc:
+                acc.clear()
+            return
+        d = self.mmu.engine.directory
+        ns = smap.num_shards
+        lg = smap.home_log2
+        shard_acc = [0] * ns
+        for blk, c in acc.items():
+            shard_acc[smap.home_of(blk << lg)] += c
+        hop = self.mmu.network.cross_shard_us()
+        moves: list[dict] = []
+        entries_total = 0
+        for _ in range(self.rebalance_max_moves):
+            hot = max(range(ns), key=lambda s: (shard_acc[s], -s))
+            cold = min(range(ns), key=lambda s: (shard_acc[s], s))
+            diff = shard_acc[hot] - shard_acc[cold]
+            if hot == cold or shard_acc[hot] <= self.rebalance_threshold * max(1, shard_acc[cold]):
+                break
+            # Hottest block currently homed at the hot shard whose move
+            # strictly reduces the imbalance and fits the destination's
+            # SRAM budget.  Deterministic: ties break on block id.
+            best = None
+            for blk, c in sorted(acc.items(), key=lambda kv: (-kv[1], kv[0])):
+                if smap.home_of(blk << lg) != hot or not 0 < c < diff:
+                    continue
+                if d.shard_budgets is not None:
+                    k = sum(1 for key in d.entries if key[0] >> lg == blk)
+                    if len(d._shard_lru[cold]) + k > d.shard_budgets[cold]:
+                        continue  # would overflow the destination ASIC
+                self._migrate_block(blk, cold, moves)
+                entries_total += moves[-1]["entries"]
+                shard_acc[hot] -= c
+                shard_acc[cold] += c
+                best = blk
+                break
+            if best is None:
+                break
+        if moves:
+            migration_us = entries_total * hop
+            self._migration_us_pending += migration_us
+            self.rebalance_reports.append({
+                "epoch": self.splitting.epoch,
+                "moves": moves,
+                "entries_moved": entries_total,
+                "migration_us": migration_us,
+            })
+        acc.clear()
+
+    def _migrate_block(self, blk: int, dst: int, moves: list[dict]) -> None:
+        """Re-home one VA block: ship its directory slice to ``dst``
+        through the per-shard snapshot row format (the §3.2 failover
+        path doubles as the migration transport), flip the shard map,
+        and rebuild the shard-local recency lists."""
+        smap = self.shard_map
+        d = self.mmu.engine.directory
+        lg = smap.home_log2
+        src = smap.home_of(blk << lg)
+        keys = [k for k in d.lru_keys() if k[0] >> lg == blk]
+        # Serialize exactly what snapshot(shard=...) would for these rows
+        # and round-trip it — the state that crosses the s2s link.
+        rows = json.loads(json.dumps([
+            {"base": e.base, "log2": e.size_log2, "state": int(e.state),
+             "sharers": e.sharers, "owner": e.owner}
+            for e in (d.entries[k] for k in keys)
+        ]))
+        smap.set_home(blk, dst)
+        d._rebuild_shard_lists()
+        moves.append({"block": blk, "from": src, "to": dst, "entries": len(rows)})
+        if self.telemetry is not None:
+            self.telemetry.event(tev.REBALANCE, base=blk << lg, log2=lg,
+                                 targets=dst, pages=len(rows),
+                                 us=len(rows) * self.mmu.network.cross_shard_us())
 
     # ------------------------------------------------------------------ #
     # Failover (§3.2): serialize enough control-plane state to rebuild the
@@ -135,10 +256,19 @@ class ControlPlane:
         d = self.mmu.engine.directory
         smap = self.shard_map
         if shard is not None:
-            assert smap is not None, "shard snapshots need a shard map"
-            assert 0 <= shard < smap.num_shards
+            if smap is None:
+                raise ValueError(
+                    "snapshot(shard=...) requires a shard map: this control "
+                    "plane manages a single switch — build a ShardedRack (or "
+                    "set control_plane.shard_map) before taking per-shard "
+                    "snapshots")
+            if not 0 <= shard < smap.num_shards:
+                raise ValueError(
+                    f"shard {shard} out of range for a "
+                    f"{smap.num_shards}-shard map")
         keys = [k for k in d.lru_keys()
                 if shard is None or smap.home_of_key(k) == shard]
+        prepop = self.mmu.engine._prepopulated
         state = {
             "blades": {
                 str(b): {"va_base": s.va_base, "capacity": s.capacity}
@@ -161,6 +291,13 @@ class ControlPlane:
                     "state": int(e.state),
                     "sharers": e.sharers,
                     "owner": e.owner,
+                    # Pre-population flag and current-epoch counters: the
+                    # backup switch must serve §4.4 local hits for
+                    # never-fetched pages and make the same
+                    # Bounded-Splitting decisions at the next epoch.
+                    "prepop": int((e.base, e.size_log2) in prepop),
+                    "fic": d.stats[(e.base, e.size_log2)].false_invalidations,
+                    "acc": d.stats[(e.base, e.size_log2)].accesses,
                     **({"home": smap.home_of_key((e.base, e.size_log2))}
                        if smap is not None else {}),
                 }
@@ -181,6 +318,9 @@ class ControlPlane:
                 "num_shards": smap.num_shards,
                 "home_log2": smap.home_log2,
                 "shard": shard,  # None == full-rack snapshot
+                # Rebalancer re-homing decisions are control-plane state
+                # every switch replicates (a backup must route the same).
+                "overrides": {str(b): s for b, s in smap.overrides.items()},
             }
         return json.dumps(state)
 
@@ -189,7 +329,7 @@ class ControlPlane:
                 num_compute_blades: int) -> "ControlPlane":
         """Rebuild a full switch (data plane included) from a snapshot."""
         from repro.core.switch import make_mmu
-        from repro.core.types import VMA as _VMA, MSIState as _MSI, Perm as _Perm
+        from repro.core.types import VMA as _VMA, Perm as _Perm
 
         state = json.loads(snapshot_json)
         mmu, alloc = make_mmu(
@@ -210,10 +350,7 @@ class ControlPlane:
                 _carve_exact(blade_alloc, vma.base, vma.length)
             alloc.vmas[vma.base] = vma
             mmu.protection.grant_vma(vma)
-        d = mmu.engine.directory
-        for e in state["directory"]:
-            ent = d._install(e["base"], e["log2"], _MSI(e["state"]), e["sharers"], e["owner"])
-            _ = ent
+        _install_snapshot_rows(mmu.engine, state["directory"])
         cp.splitting.c = state["splitting"]["c"]
         cp.splitting.epoch = state["splitting"]["epoch"]
         if "telemetry" in state:
@@ -226,8 +363,53 @@ class ControlPlane:
 
             cp.shard_map = ShardMap(
                 num_shards=state["shards"]["num_shards"],
-                home_log2=state["shards"]["home_log2"])
+                home_log2=state["shards"]["home_log2"],
+                overrides={int(b): s for b, s in
+                           state["shards"].get("overrides", {}).items()})
         return cp
+
+    # ------------------------------------------------------------------ #
+    def restore_shard(self, snapshot_json: str) -> int:
+        """In-place failover: re-install one shard's directory slice
+        (taken with ``snapshot(shard=k)``) into the *live* rack after
+        the shard's switch died and its slice was lost.  Rows go back
+        coldest-first, so the shard-local recency order — the only
+        recency state eviction depends on under per-shard budgets — is
+        reproduced exactly.  Returns the number of entries restored.
+
+        No latency is charged: the paper's backup switch already holds
+        the control-plane state (§3.2), so recovery is off the critical
+        path of the replayed trace.
+        """
+        state = json.loads(snapshot_json)
+        shard = state.get("shards", {}).get("shard")
+        if shard is None:
+            raise ValueError("restore_shard needs a snapshot(shard=k) "
+                             "snapshot, not a full-rack one")
+        d = self.mmu.engine.directory
+        hold, d.telemetry = d.telemetry, None
+        try:
+            _install_snapshot_rows(self.mmu.engine, state["directory"])
+        finally:
+            d.telemetry = hold
+        if d.shard_budgets is not None:
+            d._rebuild_shard_lists()
+        return len(state["directory"])
+
+
+def _install_snapshot_rows(engine: CoherenceEngine, rows: list[dict]) -> None:
+    """Re-install serialized directory rows (coldest-first order) with
+    their pre-population flags and current-epoch counters."""
+    d = engine.directory
+    for e in rows:
+        ent = d._install(e["base"], e["log2"], MSIState(e["state"]),
+                         e["sharers"], e["owner"])
+        key = (ent.base, ent.size_log2)
+        if e.get("prepop"):
+            engine._prepopulated.add(key)
+        st = d.stats[key]
+        st.false_invalidations = e.get("fic", 0)
+        st.accesses = e.get("acc", 0)
 
 
 def _carve_exact(blade_alloc, base: int, length: int) -> None:

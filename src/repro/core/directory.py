@@ -116,6 +116,50 @@ class CacheDirectory:
         # sharers; the coherence engine drains this and multicasts
         # invalidations.
         self.pending_evictions: list[DirectoryEntry] = []
+        # Decentralized mode: per-shard SRAM slot budgets (per-ASIC
+        # limits) with shard-local recency lists.  When enabled via
+        # ``enable_shard_budgets`` the per-shard budgets *replace* the
+        # global ``max_directory_entries`` capacity check, and eviction
+        # is scoped to the shard whose budget overflowed — cross-shard
+        # global-LRU interleaving becomes behaviour-irrelevant, which is
+        # what makes per-shard snapshot restore converge (§3.2 failover).
+        self.shard_budgets: list[int] | None = None
+        self._shard_of_key = None  # callable: (base, log2) -> shard
+        self._shard_lru: list["OrderedDict[tuple[int, int], None]"] | None = None
+        self._shard_ilru: list["OrderedDict[tuple[int, int], None]"] | None = None
+
+    # ------------------------------------------------------------------ #
+    # Decentralized per-shard budgets.
+    # ------------------------------------------------------------------ #
+    def enable_shard_budgets(self, shard_of_key, budgets) -> None:
+        """Partition the SRAM slot pool: shard ``s`` owns ``budgets[s]``
+        slots and evicts locally when they run out.  ``shard_of_key``
+        maps an entry key to its home shard (normally
+        ``ShardMap.home_of_key``, so it tracks rebalancing overrides)."""
+        budgets = list(budgets)
+        assert budgets and all(b >= 1 for b in budgets)
+        self._shard_of_key = shard_of_key
+        self.shard_budgets = budgets
+        self._rebuild_shard_lists()
+
+    def _rebuild_shard_lists(self) -> None:
+        """Re-derive the shard-local recency lists from the global ones
+        (they are a pure partition of the global order).  Called on
+        enable, after a shard-map change (migration), after a restore,
+        and on speculative rollback."""
+        if self.shard_budgets is None:
+            return
+        ns = len(self.shard_budgets)
+        self._shard_lru = [OrderedDict() for _ in range(ns)]
+        self._shard_ilru = [OrderedDict() for _ in range(ns)]
+        for k in self._lru:
+            self._shard_lru[self._shard_of_key(k)][k] = None
+        for k in self._ilru:
+            self._shard_ilru[self._shard_of_key(k)][k] = None
+
+    def shard_slots_used(self, shard: int) -> int:
+        """Occupied SRAM slots at ``shard`` (budgeted mode only)."""
+        return len(self._shard_lru[shard])
 
     # ------------------------------------------------------------------ #
     # Recency maintenance.
@@ -127,10 +171,19 @@ class CacheDirectory:
         self._lru.move_to_end(key)
         if key in self._ilru:
             self._ilru.move_to_end(key)
+        if self.shard_budgets is not None:
+            s = self._shard_of_key(key)
+            self._shard_lru[s].move_to_end(key)
+            if key in self._shard_ilru[s]:
+                self._shard_ilru[s].move_to_end(key)
 
     def _unlink(self, key: tuple[int, int]) -> None:
         self._lru.pop(key, None)
         self._ilru.pop(key, None)
+        if self.shard_budgets is not None:
+            s = self._shard_of_key(key)
+            self._shard_lru[s].pop(key, None)
+            self._shard_ilru[s].pop(key, None)
 
     def lru_keys(self) -> list[tuple[int, int]]:
         """Entry keys coldest-first (the capacity-eviction scan order)."""
@@ -161,11 +214,15 @@ class CacheDirectory:
 
     def _install(self, base: int, log2: int, state: MSIState = MSIState.I,
                  sharers: int = 0, owner: int = -1) -> DirectoryEntry:
-        if len(self.entries) >= self.resources.max_directory_entries:
+        key = (base, log2)
+        if self.shard_budgets is not None:
+            s = self._shard_of_key(key)
+            if len(self._shard_lru[s]) >= self.shard_budgets[s]:
+                self.evict_for_capacity(shard=s)
+        elif len(self.entries) >= self.resources.max_directory_entries:
             self.evict_for_capacity()
         e = DirectoryEntry(base=base, size_log2=log2, state=state,
                            sharers=sharers, owner=owner)
-        key = (base, log2)
         self.entries[key] = e
         end = base + (1 << log2)
         bucket = base >> self.VA_BUCKET_LOG2
@@ -176,6 +233,11 @@ class CacheDirectory:
         self._lru[key] = None
         if state == MSIState.I:
             self._ilru[key] = None
+        if self.shard_budgets is not None:
+            s = self._shard_of_key(key)
+            self._shard_lru[s][key] = None
+            if state == MSIState.I:
+                self._shard_ilru[s][key] = None
         self.peak_entries = max(self.peak_entries, len(self.entries))
         if self.telemetry is not None:
             self.telemetry.event(tev.DIR_INSTALL, base=base, log2=log2)
@@ -184,9 +246,10 @@ class CacheDirectory:
     # ------------------------------------------------------------------ #
     # Capacity eviction (amortized O(1)).
     # ------------------------------------------------------------------ #
-    def pick_victim(self, state_of=None) -> tuple[int, int]:
+    def pick_victim(self, state_of=None, shard: int | None = None) -> tuple[int, int]:
         """Choose the eviction victim: coldest Invalid entry, else the
-        coldest entry overall.
+        coldest entry overall.  With ``shard`` (budgeted mode) the pool
+        is that shard's entries only — the shard-local LRU.
 
         ``state_of`` optionally overrides how a key's current MSI state
         is read — the batched data plane passes a shadow view because
@@ -196,28 +259,36 @@ class CacheDirectory:
         makes the amortized cost O(1).
         """
         if self.eviction == "scan":
-            inval = [k for k, e in self.entries.items()
-                     if (state_of(k) if state_of else e.state) == MSIState.I]
-            pool = inval if inval else list(self.entries.keys())
+            keys = [k for k in self.entries
+                    if shard is None or self._shard_of_key(k) == shard]
+            get_state = state_of or (lambda k: self.entries[k].state)
+            inval = [k for k in keys if get_state(k) == MSIState.I]
+            pool = inval if inval else keys
             return min(pool, key=lambda k: self.stats[k].last_touch)
+        if shard is None:
+            ilru, lru = self._ilru, self._lru
+        else:
+            ilru, lru = self._shard_ilru[shard], self._shard_lru[shard]
         get_state = state_of or (lambda k: self.entries[k].state)
-        while self._ilru:
-            k = next(iter(self._ilru))
+        while ilru:
+            k = next(iter(ilru))
             if get_state(k) == MSIState.I:
                 return k
-            del self._ilru[k]  # left I; it can never return under this key
-        return next(iter(self._lru))
+            del ilru[k]  # left I; it can never return under this key
+        return next(iter(lru))
 
-    def evict_for_capacity(self, state_of=None,
-                           queue_pending: bool = True) -> DirectoryEntry:
+    def evict_for_capacity(self, state_of=None, queue_pending: bool = True,
+                           shard: int | None = None) -> DirectoryEntry:
         """SRAM slots exhausted: drop the coldest Invalid entry, else the
-        coldest entry overall.  When ``queue_pending`` the victim (if it
-        still had sharers) is surfaced via ``pending_evictions`` so the
-        coherence engine multicasts invalidations — the §7.2 'directory
-        storage becomes the bottleneck' behaviour; the batched engine
-        passes ``queue_pending=False`` and drains the invalidation as an
+        coldest entry overall — shard-locally when ``shard`` is given
+        (a per-ASIC budget overflowed).  When ``queue_pending`` the
+        victim (if it still had sharers) is surfaced via
+        ``pending_evictions`` so the coherence engine multicasts
+        invalidations — the §7.2 'directory storage becomes the
+        bottleneck' behaviour; the batched engine passes
+        ``queue_pending=False`` and drains the invalidation as an
         in-stream eviction packet instead."""
-        victim = self.pick_victim(state_of)
+        victim = self.pick_victim(state_of, shard=shard)
         e = self.entries.pop(victim)
         self.stats.pop(victim)
         self._unlink(victim)

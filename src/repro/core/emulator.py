@@ -69,6 +69,10 @@ class EmulationResult:
     num_shards: int = 1
     shard_accesses: list[int] = field(default_factory=list)
     cross_shard_accesses: int = 0
+    # Online shard rebalancing (decentralized control plane): one report
+    # per epoch that migrated blocks, with the migrated entry count and
+    # the stop-the-world switch-to-switch latency charged.
+    rebalance_reports: list = field(default_factory=list)
     # The telemetry plane that observed this run (repro.telemetry.Telemetry)
     # when one was attached to the rack; None otherwise.
     telemetry: object = None
@@ -158,6 +162,10 @@ class DisaggregatedRack:
         self.tpb = threads_per_blade
         self.epoch_us = epoch_us
         self.splitting_enabled = splitting_enabled
+        # Fault injection (ShardedRack.schedule_switch_kill): kill switch
+        # `shard` right before access `index` is issued, then restore it
+        # from its per-shard snapshot.
+        self._kill_at: tuple[int, int] | None = None
         self.gam_sw_cores = gam_sw_cores
         if system == "mind-pso+":
             max_directory_entries = 10**9  # infinite switch capacity
@@ -199,6 +207,13 @@ class DisaggregatedRack:
             for c in eng.caches.values():
                 c.telemetry = tel
             self.cp.telemetry = tel
+
+    @property
+    def epoch_driver_enabled(self) -> bool:
+        """Whether the emulated-time epoch machinery runs: Bounded
+        Splitting, and/or the shard rebalancer (which fires at the same
+        epoch boundaries even with splitting off)."""
+        return self.splitting_enabled or self.cp.rebalance_threshold is not None
 
     # ------------------------------------------------------------------ #
     def _map_arena(self, trace: Trace) -> list[tuple[int, int, int]]:
@@ -279,6 +294,9 @@ class DisaggregatedRack:
         for i in range(n):
             if rec is not None:
                 rec.cur_index = i
+            if self._kill_at is not None and i == self._kill_at[0]:
+                self.kill_and_restore_switch(self._kill_at[1])
+                self._kill_at = None
             t = int(trace.threads[i]) % nthreads
             blade = t // self.tpb
             vaddr = self._to_vaddr(segs, int(trace.offsets[i]))
@@ -292,11 +310,18 @@ class DisaggregatedRack:
             clocks[t] += us
 
             # Epoch boundary: driven by emulated time (mean thread clock).
-            if self.splitting_enabled and clocks.mean() >= next_epoch_at:
+            if self.epoch_driver_enabled and clocks.mean() >= next_epoch_at:
                 if self.system.startswith("mind"):
-                    self.cp.maybe_run_epoch(now_us=next_epoch_at)
+                    self.cp.maybe_run_epoch(now_us=next_epoch_at,
+                                            split=self.splitting_enabled)
                     dir_timeline.append(self.mmu.engine.directory.num_entries())
                     self.mmu.network.begin_window()
+                    mig = self.cp.take_migration_charge()
+                    if mig:
+                        # Migration is stop-the-world: every thread stalls
+                        # while region state crosses the s2s links.
+                        clocks += mig
+                        breakdown["switch"] += mig * nthreads
                 next_epoch_at += self.epoch_us
 
         stats = self.mmu.engine.stats if self.system.startswith("mind") else self._alt_stats
@@ -315,6 +340,7 @@ class DisaggregatedRack:
             transition_latencies=trans_lat,
             total_thread_us=float(clocks.sum()),
             engine="scalar",
+            rebalance_reports=list(self.cp.rebalance_reports),
             telemetry=self.telemetry,
         )
 
@@ -469,7 +495,8 @@ class ShardedRack(DisaggregatedRack):
     """
 
     def __init__(self, num_shards: int = 2, shard_map: ShardMap | None = None,
-                 **rack_kw):
+                 shard_slot_budgets=None, rebalance_threshold: float | None = None,
+                 rebalance_max_moves: int = 4, **rack_kw):
         system = rack_kw.get("system", "mind")
         if not system.startswith("mind"):
             raise ValueError(
@@ -486,6 +513,18 @@ class ShardedRack(DisaggregatedRack):
         self.cp.shard_map = self.shard_map
         if self.telemetry is not None:
             self.telemetry.shard_map = self.shard_map
+        # Decentralized mode: per-shard SRAM slot budgets (per-ASIC
+        # limits) replace the global capacity check, and eviction goes
+        # shard-local.  An int budget applies to every shard.
+        if shard_slot_budgets is not None:
+            if isinstance(shard_slot_budgets, int):
+                budgets = [shard_slot_budgets] * self.num_shards
+            else:
+                budgets = list(shard_slot_budgets)
+                assert len(budgets) == self.num_shards
+            d.enable_shard_budgets(self.shard_map.home_of_key, budgets)
+        if rebalance_threshold is not None:
+            self.cp.enable_rebalancer(rebalance_threshold, rebalance_max_moves)
         # One InNetworkMMU per shard.  The switches share the global
         # address space, the protection table (replicated rules in a
         # real rack), the network model (queueing happens at the target
@@ -519,9 +558,49 @@ class ShardedRack(DisaggregatedRack):
             res.cross_shard_accesses = int(self._cross_count)
         return res
 
+    # ------------------------------------------------------------------ #
+    # Fault injection (§3.2 failover): kill a switch mid-trace, rebuild
+    # it from its per-shard control-plane snapshot.
+    # ------------------------------------------------------------------ #
+    def schedule_switch_kill(self, index: int, shard: int) -> None:
+        """Kill switch ``shard`` right before trace access ``index`` is
+        issued, restoring it from ``ControlPlane.snapshot(shard=...)``.
+        Both engines honour the exact index (the batched engine clamps
+        its chunks so none straddles the kill point)."""
+        assert 0 <= shard < self.num_shards
+        assert index >= 0
+        self._kill_at = (index, shard)
+
+    def kill_and_restore_switch(self, shard: int) -> int:
+        """The failure scenario itself: take the backup snapshot, lose
+        the ASIC's directory slice, rebuild from the snapshot.  Under
+        per-shard budgets the shard-local recency order — the only
+        recency state eviction depends on — survives the round trip, so
+        the replay converges to the uninterrupted run.  Returns the
+        number of entries restored."""
+        cp = self.cp
+        snap = cp.snapshot(shard=shard)
+        eng = self.mmu.engine
+        d = eng.directory
+        hold, d.telemetry = d.telemetry, None
+        try:
+            for key in [k for k in d.lru_keys()
+                        if self.shard_map.home_of_key(k) == shard]:
+                d.remove(d.entries[key])
+                eng._prepopulated.discard(key)
+            if d.shard_budgets is not None:
+                d._rebuild_shard_lists()
+        finally:
+            d.telemetry = hold
+        return cp.restore_shard(snap)
+
     def _route(self, blade: int, vaddr: int, req: MemAccess):
         home = self.shard_map.home_of(vaddr)
         self._shard_counts[home] += 1
+        acc = self.cp.block_accesses
+        if acc is not None:
+            blk = vaddr >> self.shard_map.home_log2
+            acc[blk] = acc.get(blk, 0) + 1
         res = self.switches[home].handle(req)
         if res.acts.fault is None:
             pure_local = res.acts.hit_local and not res.acts.needed_invalidation

@@ -18,7 +18,7 @@ bridge that materializes match-action tables for those kernels.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -30,7 +30,7 @@ from repro.core.types import AccessType, CoherenceActions, MemAccess
 from repro.telemetry import events as tev
 
 
-@dataclass(frozen=True)
+@dataclass
 class ShardMap:
     """VA-range shard map of a multi-switch (sharded-directory) rack.
 
@@ -48,22 +48,50 @@ class ShardMap:
     at switch ``b % num_shards``.  An access whose home shard differs
     from its ingress switch pays one extra switch-to-switch hop
     (:meth:`~repro.core.network_model.NetworkModel.cross_shard_us`).
+
+    ``overrides`` re-homes individual VA blocks away from their
+    block-cyclic default — the mechanism the online rebalancer
+    (``ControlPlane``) uses to migrate hot blocks between shards.
+    ``version`` bumps on every override change so cached routing
+    (e.g. the batched engine's precomputed home vectors) can detect
+    staleness.  An empty ``overrides`` map is byte-identical to the
+    static block-cyclic map of PR 5.
     """
 
     num_shards: int
     home_log2: int = 21  # >= CacheDirectory.max_region_log2 (checked by users)
+    overrides: dict = field(default_factory=dict)  # block index -> home shard
+    version: int = 0
 
     def __post_init__(self):
         assert self.num_shards >= 1
         assert self.home_log2 >= 12
+        for blk, s in self.overrides.items():
+            assert 0 <= s < self.num_shards, (blk, s)
 
     # ---- home-switch routing ----------------------------------------- #
     def home_of(self, vaddr: int) -> int:
-        return (vaddr >> self.home_log2) % self.num_shards
+        blk = vaddr >> self.home_log2
+        if self.overrides:
+            s = self.overrides.get(blk)
+            if s is not None:
+                return s
+        return blk % self.num_shards
 
     def home_of_batch(self, vaddrs: np.ndarray) -> np.ndarray:
         v = np.asarray(vaddrs, np.int64)
-        return ((v >> self.home_log2) % self.num_shards).astype(np.int32)
+        blocks = v >> self.home_log2
+        out = (blocks % self.num_shards).astype(np.int32)
+        if self.overrides:
+            ob = np.fromiter(self.overrides.keys(), np.int64, len(self.overrides))
+            oh = np.fromiter(self.overrides.values(), np.int64, len(self.overrides))
+            order = np.argsort(ob)
+            ob, oh = ob[order], oh[order]
+            j = np.searchsorted(ob, blocks)
+            jc = np.minimum(j, len(ob) - 1)
+            hit = (j < len(ob)) & (ob[jc] == blocks)
+            out[hit] = oh[jc[hit]].astype(np.int32)
+        return out
 
     def home_of_key(self, key: tuple[int, int]) -> int:
         """Home shard of a directory entry ``(base, log2)`` — well
@@ -71,6 +99,17 @@ class ShardMap:
         base, log2 = key
         assert log2 <= self.home_log2, "region larger than a shard block"
         return self.home_of(base)
+
+    def set_home(self, block: int, shard: int) -> None:
+        """Re-home VA block ``block`` (i.e. ``vaddr >> home_log2``) at
+        ``shard``.  Reverting to the block-cyclic default drops the
+        override.  Bumps ``version`` either way."""
+        assert 0 <= shard < self.num_shards
+        if shard == block % self.num_shards:
+            self.overrides.pop(block, None)
+        else:
+            self.overrides[block] = shard
+        self.version += 1
 
     # ---- blade ingress ------------------------------------------------ #
     def ingress_of(self, blade: int) -> int:

@@ -553,11 +553,30 @@ class BatchedDataPlane:
         # model right after a queue-resetting boundary.
         last_epoch_len = 0
         since_epoch = 0
+        # Shard rebalancer: accesses [0, rb_counted) already accumulated
+        # into the control plane's per-block counters; the shard map
+        # version detects re-homing so the routing suffix is recomputed.
+        rb_on = self._sharded and rack.cp.block_accesses is not None
+        rb_counted = 0
+        smap_ver = self._smap.version if self._smap is not None else 0
         lo = 0
         while lo < n:
             full = min(self.chunk_size, n - lo)
+            # Fault injection: never let a chunk straddle the scheduled
+            # switch-kill index; at the index itself, fire the kill and
+            # drop every cached view of the directory.
+            ka = rack._kill_at
+            if ka is not None:
+                if lo == ka[0]:
+                    rack.kill_and_restore_switch(ka[1])
+                    rack._kill_at = None
+                    self._rt = None
+                    self._dtab = None
+                    self._row_of = {}
+                elif lo < ka[0]:
+                    full = min(full, ka[0] - lo)
             safe = (self._next_chunk_size(clocks, next_epoch_at, inflight)
-                    if rack.splitting_enabled else full)
+                    if rack.epoch_driver_enabled else full)
             if safe >= full:
                 span(lo, lo + full)
                 hi = lo + full
@@ -644,7 +663,7 @@ class BatchedDataPlane:
             # One boundary per check, like the scalar per-access `if` —
             # the exact chunk sizing guarantees the crossing access ended
             # this chunk, so this fires exactly where scalar fires.
-            if (rack.splitting_enabled and nthreads
+            if (rack.epoch_driver_enabled and nthreads
                     and clocks.mean() >= next_epoch_at):
                 last_epoch_len, since_epoch = since_epoch, 0
                 ts = time.perf_counter()
@@ -654,13 +673,44 @@ class BatchedDataPlane:
                     # the stream index to the crossing access, exactly
                     # where the scalar per-access check fires.
                     self._tel.cur_index = hi - 1
-                rack.cp.maybe_run_epoch(now_us=next_epoch_at)
+                if rb_on:
+                    # Catch the per-block access counters up to the
+                    # boundary (scalar increments per routed access,
+                    # faults included).
+                    b, c = np.unique(vaddrs[rb_counted:hi]
+                                     >> self._smap.home_log2,
+                                     return_counts=True)
+                    acc = rack.cp.block_accesses
+                    for blk, cnt in zip(b.tolist(), c.tolist()):
+                        acc[blk] = acc.get(blk, 0) + cnt
+                    rb_counted = hi
+                rack.cp.maybe_run_epoch(now_us=next_epoch_at,
+                                        split=rack.splitting_enabled)
                 dir_timeline.append(mmu.engine.directory.num_entries())
                 mmu.network.begin_window()
                 inflight[:] = 0
+                mig = rack.cp.take_migration_charge()
+                if mig:
+                    # Stop-the-world migration charge, as in the scalar
+                    # loop: every thread stalls for the s2s transfer.
+                    clocks += mig
+                    breakdown["switch"] += mig * nthreads
+                if self._sharded and self._smap.version != smap_ver:
+                    # The rebalancer re-homed blocks: recompute the
+                    # routing suffix so accesses from here on use the
+                    # new homes (committed chunks keep at-access homes).
+                    smap_ver = self._smap.version
+                    home_acc[hi:] = self._smap.home_of_batch(vaddrs[hi:])
+                    cross_acc[hi:] = home_acc[hi:] != ingress_acc[hi:]
                 next_epoch_at += rack.epoch_us
                 self._rt = None  # splits/merges re-shape the table
                 self._dtab = None
+                if mmu.engine.directory.pending_evictions:
+                    # Epoch-time installs at capacity queued invalidations
+                    # the scalar engine drains at its next access.
+                    nk = np.flatnonzero(keep[hi:])
+                    if len(nk):
+                        self._drain_pending_host(state, hi + int(nk[0]))
                 pt["epoch_control"] += time.perf_counter() - ts
             lo = hi
 
@@ -691,6 +741,7 @@ class BatchedDataPlane:
                 home_acc, minlength=self._nshards).tolist()
                 if self._smap is not None else []),
             cross_shard_accesses=int(self._cross_acc),
+            rebalance_reports=list(rack.cp.rebalance_reports),
             telemetry=self._tel,
         )
 
@@ -765,6 +816,7 @@ class BatchedDataPlane:
         from collections import OrderedDict
         d._lru = OrderedDict.fromkeys(snap["lru"])
         d._ilru = OrderedDict.fromkeys(snap["ilru"])
+        d._rebuild_shard_lists()  # shard-local lists derive from the above
         d._clock = snap["clock"]
         d.peak_entries = snap["peak"]
         d.capacity_evictions = snap["cap_ev"]
@@ -823,7 +875,7 @@ class BatchedDataPlane:
         ``k`` guarantees the crossing access cannot precede the batch's
         last one.  Chunks beyond this floor speculate and truncate to
         the exact crossing instead (see ``run``)."""
-        if not self.rack.splitting_enabled:
+        if not self.rack.epoch_driver_enabled:
             return self.chunk_size
         nthreads = len(clocks)
         if nthreads == 0:
@@ -949,8 +1001,14 @@ class BatchedDataPlane:
         with evictions instead."""
         d = self.rack.mmu.engine.directory
         lg = d.initial_region_log2
-        assert (len(d.entries) + len(window_bases)
-                <= d.resources.max_directory_entries)
+        if d.shard_budgets is not None:
+            occ = np.array([len(l) for l in d._shard_lru], np.int64)
+            per = np.bincount(self._smap.home_of_batch(window_bases),
+                              minlength=len(d.shard_budgets))
+            assert (occ + per <= np.asarray(d.shard_budgets)).all()
+        else:
+            assert (len(d.entries) + len(window_bases)
+                    <= d.resources.max_directory_entries)
         # Install events are reconstructed by the caller at each
         # window's first-miss access; suppress the native hook.
         hold, d.telemetry = d.telemetry, None
@@ -982,6 +1040,8 @@ class BatchedDataPlane:
         d = self.rack.mmu.engine.directory
         entries = d.entries
         maxe = d.resources.max_directory_entries
+        budgets = d.shard_budgets
+        smap = self._smap
         lg0 = d.initial_region_log2
         levels = [(lg, ~((1 << lg) - 1))
                   for lg in range(PAGE_SHIFT, d.max_region_log2 + 1)]
@@ -1009,7 +1069,18 @@ class BatchedDataPlane:
                         key = k
                         break
                 if key is None:
-                    if len(entries) >= maxe:
+                    if budgets is not None:
+                        # Per-ASIC budget: evict shard-locally when the
+                        # missing window's home shard is full.
+                        s = smap.home_of(va)
+                        if len(d._shard_lru[s]) >= budgets[s]:
+                            victim = d.evict_for_capacity(
+                                state_of=shadow_state, queue_pending=False,
+                                shard=s)
+                            vk = (victim.base, victim.size_log2)
+                            evict_events.append((i, vk))
+                            shadow.pop(vk, None)
+                    elif len(entries) >= maxe:
                         victim = d.evict_for_capacity(
                             state_of=shadow_state, queue_pending=False)
                         vk = (victim.base, victim.size_log2)
@@ -1462,14 +1533,34 @@ class BatchedDataPlane:
         # *missing* windows consume SRAM slots, so a chunk whose misses
         # still fit takes the vectorized path even at high occupancy.
         rows0 = None
-        pressure = (len(d.entries) + len(np.unique(vaddr >> lg0)) > maxe)
-        if pressure:
-            rt = self._region_table()
-            rows0 = rt.lookup(vaddr)
-            miss = rows0 < 0
-            nmiss = (len(np.unique(vaddr[miss] >> lg0))
-                     if miss.any() else 0)
-            pressure = len(d.entries) + nmiss > maxe
+        if d.shard_budgets is not None:
+            # Per-ASIC budgets: pressure is any *shard* overflowing its
+            # own slot budget, refined the same way per shard.
+            bud = np.asarray(d.shard_budgets, np.int64)
+            occ = np.array([len(l) for l in d._shard_lru], np.int64)
+
+            def _shard_load(wins):
+                return np.bincount(self._smap.home_of_batch(wins << lg0),
+                                   minlength=len(bud))
+
+            pressure = bool(
+                (occ + _shard_load(np.unique(vaddr >> lg0)) > bud).any())
+            if pressure:
+                rt = self._region_table()
+                rows0 = rt.lookup(vaddr)
+                miss = rows0 < 0
+                load = (_shard_load(np.unique(vaddr[miss] >> lg0))
+                        if miss.any() else 0)
+                pressure = bool((occ + load > bud).any())
+        else:
+            pressure = (len(d.entries) + len(np.unique(vaddr >> lg0)) > maxe)
+            if pressure:
+                rt = self._region_table()
+                rows0 = rt.lookup(vaddr)
+                miss = rows0 < 0
+                nmiss = (len(np.unique(vaddr[miss] >> lg0))
+                         if miss.any() else 0)
+                pressure = len(d.entries) + nmiss > maxe
         if pressure and defer:
             return None  # mutates mid-walk; nothing touched yet
         if not pressure:

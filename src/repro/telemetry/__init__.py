@@ -107,6 +107,11 @@ class Telemetry:
         elif k == ev.EPOCH:
             m.inc("epochs_total")
             m.gauge_set("directory_entries", e.pages)
+        elif k == ev.REBALANCE:
+            # shard_of(base) is the *destination* — the event is emitted
+            # after the shard-map override flips.
+            m.inc("rebalance_moves_total", shard=e.targets)
+            m.inc("rebalance_migrated_entries_total", e.pages, shard=e.targets)
         elif k == ev.SPEC_ROLLBACK:
             m.inc("speculation_rollbacks_total")
 

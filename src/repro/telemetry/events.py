@@ -24,6 +24,9 @@ kind                      fields used (beyond ``kind``/``index``)
 ``xs_hop``                blade (ingress), base, targets (home shard)
 ``epoch``                 targets (splits), false_pages (merges),
                           pages (directory entries after the epoch)
+``rebalance``             base (migrated VA block base), log2 (block size),
+                          targets (destination shard), pages (directory
+                          entries migrated), us (charged migration latency)
 ``spec_rollback``         index (chunk start), pages (accesses discarded);
                           batched engine only — excluded from parity
 ========================  =====================================================
@@ -49,12 +52,13 @@ REGION_SPLIT = "region_split"
 REGION_MERGE = "region_merge"
 XS_HOP = "xs_hop"
 EPOCH = "epoch"
+REBALANCE = "rebalance"
 SPEC_ROLLBACK = "spec_rollback"
 
 EVENT_KINDS = (
     ACCESS, INVALIDATE, DOWNGRADE, WRITEBACK, DIR_INSTALL, DIR_EVICT,
     CACHE_EVICT_CLEAN, CACHE_EVICT_DIRTY, REGION_SPLIT, REGION_MERGE,
-    XS_HOP, EPOCH, SPEC_ROLLBACK,
+    XS_HOP, EPOCH, REBALANCE, SPEC_ROLLBACK,
 )
 
 #: Kinds that only one engine can produce; dropped before parity diffs.

@@ -90,6 +90,14 @@ def to_perfetto(telemetry, label: str = "repro") -> dict:
                 "pid": ctrl, "tid": 0, "ts": ts,
                 "args": {"base": e.base, "log2": e.log2},
             })
+        elif e.kind == ev.REBALANCE:
+            out.append({
+                "ph": "i", "s": "p", "name": "rebalance", "cat": "control",
+                "pid": ctrl, "tid": 0, "ts": ts,
+                "args": {"block_base": e.base, "log2": e.log2,
+                         "to_shard": e.targets, "entries": e.pages,
+                         "migration_us": e.us},
+            })
         elif e.kind == ev.SPEC_ROLLBACK:
             flow += 1
             common = {"cat": "speculation", "name": "rollback", "pid": ctrl,

@@ -1,0 +1,649 @@
+"""Decentralized per-shard control plane: SRAM budgets, online shard
+rebalancing, and fault-injection convergence.
+
+The ISSUE 7 contract, layered on the PR 5 sharded rack:
+
+* **Per-shard SRAM budgets** — ``ShardedRack(shard_slot_budgets=...)``
+  gives every switch ASIC its own slot budget; capacity eviction goes
+  *shard-local* (the victim pool is the overflowing shard's LRU only).
+  Scalar and batched replays stay stat-, timing- and telemetry-event
+  identical at 1/2/4 shards across every pressure regime, and a
+  1-shard budget ``B`` is byte-identical to a plain rack with a global
+  ``max_directory_entries=B`` cap.
+* **Online rebalancing** — per-VA-block access counters accumulated at
+  the home switch drive a deterministic greedy rebalancer at epoch
+  boundaries: while the hottest shard exceeds ``threshold x`` the
+  coldest, migrate the hottest blocks that strictly reduce the
+  imbalance and fit the destination budget.  Migrated directory state
+  moves via the per-shard snapshot row format and is charged
+  ``entries_moved * switch_to_switch_us`` of stop-the-world time.  The
+  known 75/25 XS skew at 2 shards flattens below 60/40.
+* **Fault injection** — ``schedule_switch_kill(index, shard)`` drops
+  shard *k*'s directory slice mid-trace and restores it from
+  ``ControlPlane.snapshot(shard=k)``.  Because eviction only ever
+  consults *within-shard* relative recency under budgets, the restored
+  replay converges to the uninterrupted run's final stats and runtime
+  exactly — on both engines, at any kill index.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import traces as T
+from repro.core.control_plane import ControlPlane
+from repro.core.emulator import DisaggregatedRack, ShardedRack
+from repro.core.switch import ShardMap
+from repro.core.types import NetworkConstants
+from repro.telemetry import Telemetry, canonical
+
+STAT_FIELDS = (
+    "accesses", "local_hits", "remote_fetches", "invalidations",
+    "invalidated_pages", "false_invalidated_pages", "flushed_pages",
+    "evicted_dirty", "evicted_clean", "faults",
+)
+
+ZERO_HOP = NetworkConstants(switch_to_switch_us=0.0)
+HOP = NetworkConstants().switch_to_switch_us
+
+
+def _assert_stats_equal(a, b, ctx=""):
+    for f in STAT_FIELDS:
+        assert getattr(a.stats, f) == getattr(b.stats, f), (ctx, f)
+
+
+def _assert_timing_equal(a, b, ctx=""):
+    np.testing.assert_allclose(b.runtime_us, a.runtime_us, rtol=1e-9,
+                               err_msg=ctx)
+    np.testing.assert_allclose(b.total_thread_us, a.total_thread_us,
+                               rtol=1e-9, err_msg=ctx)
+    for k, v in a.latency_breakdown_us.items():
+        np.testing.assert_allclose(b.latency_breakdown_us[k], v, rtol=1e-6,
+                                   err_msg=f"{ctx}:{k}")
+
+
+# (max_directory_entries, cache_bytes, epoch_us or None, per-shard budget)
+_REGIMES = {
+    "plain": (30_000, 512 << 20, None, 4096),
+    "dir_pressure": (30_000, 512 << 20, None, 24),
+    "cache_pressure": (30_000, 1 << 14, None, 4096),
+    "epochs": (30_000, 512 << 20, 2500.0, 4096),
+    "cocktail": (30_000, 1 << 15, 2500.0, 32),
+    "xs": (30_000, 512 << 20, 2500.0, 64),
+}
+
+
+def _trace(regime, seed=9, n=250):
+    if regime == "xs":
+        return T.sharded_conflict_trace(
+            num_threads=4, accesses_per_thread=400, num_shards=4,
+            blocks_per_shard=2, conflict_frac=0.5, write_frac=0.30,
+            hot_pages_per_block=24, private_kb_per_thread=128, seed=seed)
+    return T.sharded_conflict_trace(
+        num_threads=4, accesses_per_thread=n, conflict_frac=0.5,
+        write_frac=0.3, hot_pages_per_block=12, private_kb_per_thread=64,
+        seed=seed)
+
+
+def _rack_kw(regime, constants=ZERO_HOP):
+    maxdir, cache_b, epoch, _budget = _REGIMES[regime]
+    return dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+                max_directory_entries=maxdir,
+                cache_bytes_per_blade=cache_b,
+                splitting_enabled=epoch is not None,
+                epoch_us=epoch or 10_000.0, constants=constants)
+
+
+def _budgeted(regime, num_shards, engine, rebalance=False,
+              constants=ZERO_HOP, telemetry=None):
+    return ShardedRack(
+        num_shards=num_shards, engine=engine,
+        shard_slot_budgets=_REGIMES[regime][3],
+        rebalance_threshold=1.5 if rebalance else None,
+        telemetry=telemetry, **_rack_kw(regime, constants))
+
+
+_runs = {}
+
+
+def _run(regime, num_shards, engine, rebalance=False):
+    """Cache one (trace, result, telemetry) per config: parity tests
+    compare cached runs instead of re-running both engines per test."""
+    key = (regime, num_shards, engine, rebalance)
+    if key not in _runs:
+        tel = Telemetry()
+        rack = _budgeted(regime, num_shards, engine, rebalance,
+                         telemetry=tel)
+        _runs[key] = (rack.run(_trace(regime)), tel)
+    return _runs[key]
+
+
+# --------------------------------------------------------------------- #
+# Per-shard budgets: scalar oracle == batched engine, all regimes.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+@pytest.mark.parametrize("regime", sorted(_REGIMES))
+def test_budget_parity_scalar_vs_batched(regime, num_shards):
+    """Shard-local eviction under per-ASIC budgets: the batched engine
+    replays stat- and timing-identical to the shard-local scalar
+    oracle at 1/2/4 shards in every pressure regime."""
+    a, _ = _run(regime, num_shards, "scalar")
+    b, _ = _run(regime, num_shards, "batched")
+    _assert_stats_equal(a, b, f"{regime}/{num_shards}")
+    _assert_timing_equal(a, b, f"{regime}/{num_shards}")
+    assert b.directory_timeline == a.directory_timeline
+    assert b.shard_accesses == a.shard_accesses
+    assert b.cross_shard_accesses == a.cross_shard_accesses
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+@pytest.mark.parametrize("regime", sorted(_REGIMES))
+def test_budget_parity_telemetry_events(regime, num_shards):
+    """The full telemetry event streams (minus batched-only
+    ``spec_rollback``) and counter registries agree too."""
+    _, ta = _run(regime, num_shards, "scalar")
+    _, tb = _run(regime, num_shards, "batched")
+    ca = canonical(ta.recorder.events)
+    cb = canonical(tb.recorder.events)
+    assert [e.key() for e in ca] == [e.key() for e in cb]
+    np.testing.assert_allclose([e.us for e in ca], [e.us for e in cb],
+                               rtol=1e-6, atol=1e-9)
+    skip = {"speculation_rollbacks_total"}
+    counters = lambda t: {  # noqa: E731
+        (r["name"], tuple(sorted(r["labels"].items()))): r["value"]
+        for r in t.metrics.counters_to_jsonable() if r["name"] not in skip}
+    assert counters(ta) == counters(tb)
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+@pytest.mark.parametrize("regime", ["xs", "epochs", "cocktail"])
+def test_rebalancer_parity_scalar_vs_batched(regime, num_shards):
+    """With the online rebalancer enabled the two engines still agree
+    exactly — on stats, timing, *and* the per-epoch migration reports
+    (same blocks, same destinations, same charged microseconds)."""
+    a, ta = _run(regime, num_shards, "scalar", rebalance=True)
+    b, tb = _run(regime, num_shards, "batched", rebalance=True)
+    _assert_stats_equal(a, b, f"{regime}/{num_shards}/rb")
+    _assert_timing_equal(a, b, f"{regime}/{num_shards}/rb")
+    assert b.rebalance_reports == a.rebalance_reports
+    assert b.shard_accesses == a.shard_accesses
+    ca, cb = canonical(ta.recorder.events), canonical(tb.recorder.events)
+    assert [e.key() for e in ca] == [e.key() for e in cb]
+
+
+@pytest.mark.parametrize("budget", [24, 64])
+def test_one_shard_budget_equals_global_cap(budget):
+    """A 1-shard rack under budget ``B`` is byte-identical to a plain
+    single-switch rack with ``max_directory_entries=B``: the per-shard
+    budget *replaces* the global capacity check."""
+    kw = _rack_kw("plain")
+    trace = _trace("plain")
+    oracle = DisaggregatedRack(
+        engine="scalar", **{**kw, "max_directory_entries": budget}).run(trace)
+    r = ShardedRack(num_shards=1, engine="scalar", shard_slot_budgets=budget,
+                    **kw).run(trace)
+    _assert_stats_equal(oracle, r, f"budget={budget}")
+    _assert_timing_equal(oracle, r, f"budget={budget}")
+    assert r.directory_timeline == oracle.directory_timeline
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_shard_local_lru_matches_scan_oracle(num_shards):
+    """Shard-local O(1) LRU eviction picks the exact victims the O(n)
+    scan (coldest Invalid in the shard, else coldest overall) picks —
+    the ISSUE 2 equivalence, extended to budgeted shard pools."""
+    kw = _rack_kw("dir_pressure")
+    trace = _trace("dir_pressure")
+    runs = {}
+    for ev in ("lru", "scan"):
+        rack = ShardedRack(num_shards=num_shards, engine="scalar",
+                           shard_slot_budgets=24, directory_eviction=ev, **kw)
+        res = rack.run(trace)
+        d = rack.mmu.engine.directory
+        runs[ev] = (res, sorted(d.entries), d.capacity_evictions)
+    _assert_stats_equal(runs["lru"][0], runs["scan"][0])
+    assert runs["lru"][1] == runs["scan"][1]
+    assert runs["lru"][2] == runs["scan"][2]
+
+
+def test_budget_occupancy_never_exceeds_budget():
+    """Invariant: no shard's slot count ever exceeds its budget (checked
+    at the end of a pressured multi-epoch run, both engines)."""
+    for engine in ("scalar", "batched"):
+        rack = _budgeted("cocktail", 4, engine)
+        rack.run(_trace("cocktail"))
+        d = rack.mmu.engine.directory
+        for s in range(4):
+            assert d.shard_slots_used(s) <= d.shard_budgets[s], (engine, s)
+        assert sorted(k for lru in d._shard_lru for k in lru) == \
+            sorted(d.entries)
+
+
+# --------------------------------------------------------------------- #
+# Online rebalancer: the 75/25 XS split flattens, hops are exact.
+# --------------------------------------------------------------------- #
+def _issue_xs_trace():
+    return T.sharded_conflict_trace(
+        num_threads=4, accesses_per_thread=2000, num_shards=4,
+        blocks_per_shard=2, block_log2=21, conflict_frac=0.5,
+        write_frac=0.30, hot_pages_per_block=24,
+        private_kb_per_thread=256, seed=9)
+
+
+def test_rebalancer_flattens_xs_split():
+    """The ISSUE's XS workload homes ~75% of its traffic at shard 0 of
+    2.  With the rebalancer at threshold 1.5 the hot private blocks
+    migrate out at the first epoch and the split flattens below 60/40,
+    with every migration charged exactly ``entries * hop``."""
+    trace = _issue_xs_trace()
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              max_directory_entries=30_000, epoch_us=2500.0,
+              cache_bytes_per_blade=512 << 20, splitting_enabled=False)
+
+    base = ShardedRack(num_shards=2, engine="scalar",
+                       shard_slot_budgets=4096, **kw).run(trace)
+    frac0 = base.shard_accesses[0] / sum(base.shard_accesses)
+    assert frac0 > 0.70, base.shard_accesses  # the pinned skew
+    assert base.rebalance_reports == []
+
+    reb = ShardedRack(num_shards=2, engine="scalar", shard_slot_budgets=4096,
+                      rebalance_threshold=1.5, **kw)
+    res = reb.run(trace)
+    frac = max(res.shard_accesses) / sum(res.shard_accesses)
+    assert frac < 0.60, res.shard_accesses  # flattened
+    assert res.rebalance_reports, "rebalancer never fired"
+    for rp in res.rebalance_reports:
+        assert rp["entries_moved"] == sum(m["entries"] for m in rp["moves"])
+        np.testing.assert_allclose(rp["migration_us"],
+                                   rp["entries_moved"] * HOP, rtol=1e-12)
+        for m in rp["moves"]:
+            assert m["from"] != m["to"]
+    # Migrated homes are live: the overrides moved blocks off shard 0.
+    assert reb.shard_map.overrides
+    assert all(s == 1 for s in reb.shard_map.overrides.values())
+
+    batched = ShardedRack(num_shards=2, engine="batched",
+                          shard_slot_budgets=4096, rebalance_threshold=1.5,
+                          **kw).run(trace)
+    _assert_stats_equal(res, batched, "xs/rb")
+    _assert_timing_equal(res, batched, "xs/rb")
+    assert batched.rebalance_reports == res.rebalance_reports
+    assert batched.shard_accesses == res.shard_accesses
+
+
+def test_rebalance_telemetry_matches_reports():
+    """Every migration emits one ``rebalance`` event whose fields and
+    derived counters reproduce the report rows exactly."""
+    tel = Telemetry()
+    rack = ShardedRack(num_shards=2, engine="scalar", shard_slot_budgets=4096,
+                       rebalance_threshold=1.5, telemetry=tel,
+                       system="mind", num_compute_blades=2,
+                       threads_per_blade=2, epoch_us=2500.0,
+                       splitting_enabled=False)
+    res = rack.run(_issue_xs_trace())
+    moves = [m for rp in res.rebalance_reports for m in rp["moves"]]
+    evs = [e for e in tel.recorder.events if e.kind == "rebalance"]
+    assert len(evs) == len(moves) > 0
+    lg = rack.shard_map.home_log2
+    for e, m in zip(evs, moves):
+        assert e.base == m["block"] << lg
+        assert e.log2 == lg
+        assert e.targets == m["to"]
+        assert e.pages == m["entries"]
+        np.testing.assert_allclose(e.us, m["entries"] * HOP, rtol=1e-12)
+    counters = {(r["name"], tuple(sorted(r["labels"].items()))): r["value"]
+                for r in tel.metrics.counters_to_jsonable()}
+    for s in set(m["to"] for m in moves):
+        assert counters[("rebalance_moves_total", (("shard", s),))] == \
+            sum(1 for m in moves if m["to"] == s)
+        assert counters[("rebalance_migrated_entries_total",
+                         (("shard", s),))] == \
+            sum(m["entries"] for m in moves if m["to"] == s)
+
+
+def test_rebalance_charge_lands_in_runtime():
+    """The stop-the-world migration charge is exact and isolated: with a
+    zero hop, turning the rebalancer on under an already-running epoch
+    driver changes *nothing* — migration is free and re-homing never
+    changes a coherence transition or a charged microsecond; with the
+    default hop every report charges exactly ``entries * hop``."""
+    trace = _issue_xs_trace()
+    kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+              epoch_us=2500.0, splitting_enabled=True,
+              shard_slot_budgets=4096)
+    off = ShardedRack(num_shards=2, engine="scalar", constants=ZERO_HOP,
+                      **kw).run(trace)
+    on = ShardedRack(num_shards=2, engine="scalar", constants=ZERO_HOP,
+                     rebalance_threshold=1.5, **kw).run(trace)
+    _assert_stats_equal(off, on, "zero-hop")
+    _assert_timing_equal(off, on, "zero-hop")
+    assert on.rebalance_reports
+    assert all(rp["migration_us"] == 0.0 for rp in on.rebalance_reports)
+
+    on_hop = ShardedRack(num_shards=2, engine="scalar",
+                         rebalance_threshold=1.5, **kw).run(trace)
+    charged = sum(rp["migration_us"] for rp in on_hop.rebalance_reports)
+    assert charged > 0
+    for rp in on_hop.rebalance_reports:
+        np.testing.assert_allclose(rp["migration_us"],
+                                   rp["entries_moved"] * HOP, rtol=1e-12)
+    # The charge lands on every thread clock at the epoch barrier: the
+    # switch component of the breakdown grows by at least it.
+    assert (on_hop.latency_breakdown_us["switch"]
+            >= on_hop.cross_shard_accesses * HOP)
+
+
+def test_rebalance_selection_deterministic_and_budget_aware():
+    """Unit-level pin of the greedy move selection: hottest shard pays
+    first, blocks move by descending access count (block id breaks
+    ties), a move must strictly reduce the imbalance, and a destination
+    without budget headroom is skipped."""
+    rack = ShardedRack(num_shards=2, engine="scalar", shard_slot_budgets=64,
+                       system="mind", num_compute_blades=2,
+                       threads_per_blade=2, epoch_us=2500.0,
+                       rebalance_threshold=1.5)
+    rack.run(_trace("plain", n=50))  # populate some shard-0 state
+    cp = rack.cp
+    d = rack.mmu.engine.directory
+    lg = rack.shard_map.home_log2
+    blocks0 = sorted({k[0] >> lg for k in d.entries
+                      if rack.shard_map.home_of_key(k) == 0})
+    blocks1 = sorted({k[0] >> lg for k in d.entries
+                      if rack.shard_map.home_of_key(k) == 1})
+    assert len(blocks0) >= 2 and blocks1
+    hot_a, hot_b = blocks0[0], blocks0[1]
+    cold_blk = blocks1[0]
+    # 80 vs 30: imbalanced past 1.5x; a single 40-count block is the
+    # only candidate that *strictly reduces* the imbalance (0 < c <
+    # diff), and hot_a wins the count tie on block id.
+    counters = {hot_a: 40, hot_b: 40, cold_blk: 30}
+    cp.rebalance_reports.clear()
+
+    # No headroom at the destination: every entry-bearing hot block is
+    # skipped — no report, no shard-map change.
+    d.shard_budgets[1] = d.shard_slots_used(1)
+    cp.block_accesses = dict(counters)
+    cp._run_rebalance()
+    assert cp.rebalance_reports == []
+    assert rack.shard_map.overrides == {}
+    assert cp.block_accesses == {}  # counters reset every epoch
+
+    # With headroom, exactly one move: hot_a to the cold shard, after
+    # which 40/70 is within threshold and the loop stops.
+    d.shard_budgets[1] = 4096
+    cp.block_accesses = dict(counters)
+    cp._run_rebalance()
+    rp = cp.rebalance_reports[-1]
+    assert [m["block"] for m in rp["moves"]] == [hot_a]
+    assert rp["moves"][0]["from"] == 0 and rp["moves"][0]["to"] == 1
+    assert rp["moves"][0]["entries"] == sum(
+        1 for k in d.entries if k[0] >> lg == hot_a)
+    assert rack.shard_map.home_of(hot_a << lg) == 1
+    assert rack.shard_map.overrides == {hot_a: 1}
+    # Migrated entries are now in shard 1's local LRU.
+    for k in d.entries:
+        if k[0] >> lg == hot_a:
+            assert k in d._shard_lru[1] and k not in d._shard_lru[0]
+
+    # Already balanced (under threshold): no further moves.
+    nrep = len(cp.rebalance_reports)
+    cp.block_accesses = {hot_b: 11, cold_blk: 10}
+    cp._run_rebalance()
+    assert len(cp.rebalance_reports) == nrep
+
+
+def test_shard_map_overrides_route_and_version():
+    sm = ShardMap(num_shards=4, home_log2=21)
+    v0 = sm.version
+    sm.set_home(5, 2)
+    assert sm.version == v0 + 1
+    assert sm.home_of(5 << 21) == 2
+    assert sm.home_of_key(((5 << 21) + (1 << 14), 14)) == 2
+    vals = np.array([(5 << 21) + 7, (6 << 21) + 7, (9 << 21) + 7])
+    np.testing.assert_array_equal(sm.home_of_batch(vals), [2, 2, 1])
+    assert [sm.home_of(int(v)) for v in vals] == [2, 2, 1]
+    # Reverting to the block-cyclic default drops the override.
+    sm.set_home(5, 5 % 4)
+    assert sm.overrides == {}
+    assert sm.home_of(5 << 21) == 1
+
+
+# --------------------------------------------------------------------- #
+# Fault injection: kill switch k mid-trace, restore, converge.
+# --------------------------------------------------------------------- #
+_kill_kw = dict(system="mind", num_compute_blades=2, threads_per_blade=2,
+                max_directory_entries=30_000, epoch_us=2500.0,
+                cache_bytes_per_blade=512 << 20, splitting_enabled=True)
+
+
+def _kill_run(engine, kill=None, **extra):
+    rack = ShardedRack(num_shards=2, engine=engine, shard_slot_budgets=60,
+                       rebalance_threshold=1.5, **_kill_kw, **extra)
+    if kill is not None:
+        rack.schedule_switch_kill(*kill)
+    trace = T.sharded_conflict_trace(num_threads=4, accesses_per_thread=500,
+                                     num_shards=4, blocks_per_shard=2, seed=9)
+    return rack.run(trace)
+
+
+@pytest.mark.parametrize("engine,kill_index,shard", [
+    ("scalar", 1, 0), ("scalar", 137, 1), ("scalar", 500, 0),
+    ("scalar", 999, 1), ("scalar", 1500, 0), ("scalar", 1999, 1),
+    ("batched", 137, 0), ("batched", 500, 1), ("batched", 1500, 0),
+])
+def test_switch_kill_restore_converges(engine, kill_index, shard):
+    """Kill switch *k* right before access ``kill_index`` (drop its
+    whole directory slice), restore from the per-shard snapshot, and
+    replay the rest of the trace: final stats, runtime and latency
+    breakdown equal the uninterrupted run's — §3.2 failover with no
+    replayed work."""
+    base = _kill_run(engine)
+    killed = _kill_run(engine, kill=(kill_index, shard))
+    _assert_stats_equal(base, killed, f"{engine}@{kill_index}/s{shard}")
+    _assert_timing_equal(base, killed, f"{engine}@{kill_index}/s{shard}")
+    assert killed.shard_accesses == base.shard_accesses
+    assert killed.rebalance_reports == base.rebalance_reports
+
+
+def test_switch_kill_scalar_batched_agree_after_restore():
+    killed_s = _kill_run("scalar", kill=(777, 1))
+    killed_b = _kill_run("batched", kill=(777, 1))
+    _assert_stats_equal(killed_s, killed_b, "post-restore parity")
+    _assert_timing_equal(killed_s, killed_b, "post-restore parity")
+
+
+def test_schedule_switch_kill_validates_arguments():
+    rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
+                       threads_per_blade=2)
+    with pytest.raises(AssertionError):
+        rack.schedule_switch_kill(-1, 0)
+    with pytest.raises(AssertionError):
+        rack.schedule_switch_kill(0, 2)
+
+
+# --------------------------------------------------------------------- #
+# snapshot(shard=k) / restore round trip.
+# --------------------------------------------------------------------- #
+def test_snapshot_shard_without_map_raises_value_error():
+    """The pinned ISSUE 7 bug fix: asking a single-switch control plane
+    for a per-shard snapshot is a usage error with a clear message, not
+    an assert."""
+    rack = DisaggregatedRack(system="mind", num_compute_blades=2,
+                             threads_per_blade=2)
+    with pytest.raises(ValueError, match="requires a shard map"):
+        rack.cp.snapshot(shard=0)
+
+
+def test_snapshot_shard_out_of_range_raises_value_error():
+    rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
+                       threads_per_blade=2)
+    with pytest.raises(ValueError, match="out of range"):
+        rack.cp.snapshot(shard=2)
+    with pytest.raises(ValueError, match="out of range"):
+        rack.cp.snapshot(shard=-1)
+
+
+def test_restore_shard_requires_shard_scoped_snapshot():
+    rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
+                       threads_per_blade=2)
+    rack.run(_trace("plain", n=40))
+    with pytest.raises(ValueError):
+        rack.cp.restore_shard(rack.cp.snapshot())  # full, not per-shard
+
+
+@pytest.mark.parametrize("shard", [0, 1])
+def test_snapshot_shard_roundtrip_preserves_lru_and_stats(shard):
+    """Kill-and-restore round trip through the per-shard snapshot: the
+    shard's entry set, within-shard LRU order, §4.4 prepopulation marks
+    and per-region counters all survive."""
+    rack = _budgeted("dir_pressure", 2, "scalar")
+    rack.run(_trace("dir_pressure"))
+    d = rack.mmu.engine.directory
+    sm = rack.shard_map
+    before = [k for k in d.lru_keys() if sm.home_of_key(k) == shard]
+    ent_before = {k: (d.entries[k].state, d.entries[k].sharers,
+                      d.entries[k].owner) for k in before}
+    stats_before = {k: (d.stats[k].false_invalidations, d.stats[k].accesses)
+                    for k in before}
+    prepop_before = {k for k in rack.mmu.engine._prepopulated
+                     if sm.home_of_key(k) == shard}
+    other = [k for k in d.lru_keys() if sm.home_of_key(k) != shard]
+
+    n = rack.kill_and_restore_switch(shard)
+    assert n == len(before)
+    after = [k for k in d.lru_keys() if sm.home_of_key(k) == shard]
+    assert after == before  # within-shard relative LRU order survives
+    assert [k for k in d.lru_keys() if sm.home_of_key(k) != shard] == other
+    for k in before:
+        e = d.entries[k]
+        assert (e.state, e.sharers, e.owner) == ent_before[k]
+        assert (d.stats[k].false_invalidations,
+                d.stats[k].accesses) == stats_before[k]
+    assert {k for k in rack.mmu.engine._prepopulated
+            if sm.home_of_key(k) == shard} == prepop_before
+    # Shard lists were rebuilt consistently.
+    assert list(d._shard_lru[shard]) == after
+
+
+def test_snapshot_shard_telemetry_slice_roundtrip():
+    """A per-shard snapshot carries exactly that shard's counter slice
+    (`counters_to_jsonable(shard=k)`), and a fresh-restored rack evicts
+    the same victims as the original — eviction state is fully
+    captured."""
+    tel = Telemetry()
+    rack = _budgeted("dir_pressure", 2, "scalar", telemetry=tel)
+    trace = _trace("dir_pressure")
+    rack.run(trace)
+    snap = json.loads(rack.cp.snapshot(shard=1))
+    assert snap["shards"]["shard"] == 1
+    assert snap["telemetry"] == tel.metrics.counters_to_jsonable(shard=1)
+
+    # Post-restore eviction behavior: a twin rack that was killed and
+    # restored mid-run picks the same capacity victims afterwards.
+    twin = _budgeted("dir_pressure", 2, "scalar")
+    twin.schedule_switch_kill(400, 1)
+    twin.run(trace)
+    d0, d1 = rack.mmu.engine.directory, twin.mmu.engine.directory
+    v0 = [d0.evict_for_capacity(queue_pending=False, shard=1)
+          for _ in range(min(5, d0.shard_slots_used(1)))]
+    v1 = [d1.evict_for_capacity(queue_pending=False, shard=1)
+          for _ in range(min(5, d1.shard_slots_used(1)))]
+    assert [(e.base, e.size_log2) for e in v0] == \
+        [(e.base, e.size_log2) for e in v1]
+
+
+# --------------------------------------------------------------------- #
+# Property suites (hypothesis).
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised via CI extra install
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           regime=st.sampled_from(sorted(_REGIMES)),
+           num_shards=st.sampled_from([1, 2, 4]),
+           rebalance=st.booleans())
+    def test_budget_scalar_replay_deterministic_hypothesis(
+            seed, regime, num_shards, rebalance):
+        """Random traces under per-shard budgets: two identical scalar
+        replays agree exactly (determinism), occupancy respects every
+        budget, and migration accounting stays exact."""
+        trace = _trace(regime, seed=seed, n=150)
+        results = []
+        for _ in range(2):
+            rack = _budgeted(regime, num_shards, "scalar",
+                             rebalance=rebalance)
+            res = rack.run(trace)
+            d = rack.mmu.engine.directory
+            for s in range(num_shards):
+                assert d.shard_slots_used(s) <= d.shard_budgets[s]
+            for rp in res.rebalance_reports:
+                assert rp["migration_us"] == 0.0  # ZERO_HOP configs
+            results.append(res)
+        _assert_stats_equal(results[0], results[1], regime)
+        _assert_timing_equal(results[0], results[1], regime)
+        assert results[0].rebalance_reports == results[1].rebalance_reports
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           regime=st.sampled_from(["dir_pressure", "cocktail", "xs"]))
+    def test_budget_batched_matches_scalar_hypothesis(seed, regime):
+        trace = _trace(regime, seed=seed, n=150)
+        a = _budgeted(regime, 2, "scalar", rebalance=True).run(trace)
+        b = _budgeted(regime, 2, "batched", rebalance=True).run(trace)
+        _assert_stats_equal(a, b, regime)
+        _assert_timing_equal(a, b, regime)
+        assert b.rebalance_reports == a.rebalance_reports
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           kill_frac=st.floats(0.0, 1.0),
+           shard=st.integers(0, 1),
+           regime=st.sampled_from(["dir_pressure", "epochs", "cocktail"]))
+    def test_switch_kill_converges_hypothesis(seed, kill_frac, shard,
+                                              regime):
+        """Mid-trace switch kill at a randomized index converges to the
+        uninterrupted replay under budgets, splitting and rebalancing."""
+        trace = _trace(regime, seed=seed, n=150)
+        n = len(trace.accesses)
+        idx = min(n - 1, int(kill_frac * n))
+        base_rack = _budgeted(regime, 2, "scalar", rebalance=True)
+        base = base_rack.run(trace)
+        killed_rack = _budgeted(regime, 2, "scalar", rebalance=True)
+        killed_rack.schedule_switch_kill(idx, shard)
+        killed = killed_rack.run(trace)
+        _assert_stats_equal(base, killed, f"{regime}@{idx}")
+        _assert_timing_equal(base, killed, f"{regime}@{idx}")
+        assert killed.rebalance_reports == base.rebalance_reports
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31), shard=st.integers(0, 1))
+    def test_snapshot_shard_roundtrip_hypothesis(seed, shard):
+        """snapshot(shard=k) -> restore_shard round trip on random
+        budgeted runs: entry set, shard LRU order, prepop marks and the
+        subsequent eviction sequence are all preserved."""
+        trace = _trace("dir_pressure", seed=seed, n=150)
+        rack = _budgeted("dir_pressure", 2, "scalar")
+        rack.run(trace)
+        d = rack.mmu.engine.directory
+        sm = rack.shard_map
+        before = [k for k in d.lru_keys() if sm.home_of_key(k) == shard]
+        n = rack.kill_and_restore_switch(shard)
+        assert n == len(before)
+        after = [k for k in d.lru_keys() if sm.home_of_key(k) == shard]
+        assert after == before
+        twin = _budgeted("dir_pressure", 2, "scalar")
+        twin.run(trace)
+        d2 = twin.mmu.engine.directory
+        while d.shard_slots_used(shard):
+            a = d.evict_for_capacity(queue_pending=False, shard=shard)
+            b = d2.evict_for_capacity(queue_pending=False, shard=shard)
+            assert (a.base, a.size_log2) == (b.base, b.size_log2)

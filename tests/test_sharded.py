@@ -304,8 +304,8 @@ def test_epoch_boundaries_straddle_shard_homes():
     rack = Instrumented(num_shards=4, engine="scalar", constants=ZERO_HOP,
                         **kw)
     orig_epoch = rack.cp.maybe_run_epoch
-    rack.cp.maybe_run_epoch = lambda now_us: (
-        boundary_homes.append(rack._last_home), orig_epoch(now_us))[1]
+    rack.cp.maybe_run_epoch = lambda now_us, **kw: (
+        boundary_homes.append(rack._last_home), orig_epoch(now_us, **kw))[1]
     rs = rack.run(trace)
     assert len(boundary_homes) >= 2
     assert len(set(boundary_homes)) >= 2, (
@@ -413,7 +413,7 @@ def test_shard_snapshots_partition_the_directory():
     d = rack.mmu.engine.directory
     full = json.loads(cp.snapshot())
     assert full["shards"] == {"num_shards": 4, "home_log2": 21,
-                              "shard": None}
+                              "shard": None, "overrides": {}}
     per_shard = [json.loads(cp.snapshot(shard=s)) for s in range(4)]
     sizes = [len(p["directory"]) for p in per_shard]
     assert sum(sizes) == len(full["directory"]) == d.num_entries()
