@@ -5,6 +5,7 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
+from typing import NamedTuple
 
 RESULTS = Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(exist_ok=True)
@@ -29,27 +30,55 @@ def save_json(name: str, obj) -> Path:
     return p
 
 
-def engine_from_argv(default: str = "scalar") -> str:
-    """Shared ``--engine scalar|batched`` flag for the fig benchmarks."""
+class EngineChoice(NamedTuple):
+    """Parsed engine flags: which engine the run asked for and whether a
+    batched-engine refusal may silently degrade to scalar."""
+
+    engine: str
+    allow_scalar_fallback: bool
+
+
+def engine_from_argv(default: str = "scalar") -> EngineChoice:
+    """Shared ``--engine scalar|batched`` / ``--allow-scalar-fallback``
+    flags for the fig benchmarks."""
     import argparse
 
     p = argparse.ArgumentParser(add_help=False)
     p.add_argument("--engine", choices=("scalar", "batched"), default=default)
+    p.add_argument("--allow-scalar-fallback", action="store_true")
     args, _ = p.parse_known_args()
-    return args.engine
+    return EngineChoice(args.engine, args.allow_scalar_fallback)
 
 
-def run_workload_with_engine(engine: str, system: str, workload: str, **kw):
-    """run_workload that degrades to the scalar engine when the batched
-    data plane refuses a (system, workload) combination (the no-switch
-    baselines: GAM and FastSwap have no in-network data plane)."""
+def run_workload_with_engine(engine, system: str, workload: str, *,
+                             allow_scalar_fallback: bool = False, **kw):
+    """run_workload under an explicit engine contract.
+
+    ``--engine batched`` means batched: every system replays through a
+    vectorized engine (the mind systems via the switch data plane, GAM /
+    FastSwap via :mod:`repro.dataplane.baselines`), and the only refusals
+    left are the packed-kernel-output bounds of the mind engine.  A
+    refusal is **loud** — the process exits nonzero naming it — unless
+    the caller opted into degradation with ``--allow-scalar-fallback``.
+    Either way the returned result says which engine actually ran in its
+    ``engine`` attribute; the fig benchmarks record it per cell as
+    ``engine_used`` so degraded numbers can't masquerade as batched.
+    """
     from repro.core.emulator import run_workload
     from repro.dataplane import UnsupportedByBatchedEngine
 
+    if isinstance(engine, EngineChoice):
+        allow_scalar_fallback = allow_scalar_fallback or engine.allow_scalar_fallback
+        engine = engine.engine
     if engine == "batched":
         try:
             return run_workload(system, workload, engine="batched", **kw)
         except UnsupportedByBatchedEngine as e:
+            if not allow_scalar_fallback:
+                raise SystemExit(
+                    f"fatal: batched engine refused {system}/{workload}: {e}"
+                    f"\n(re-run with --allow-scalar-fallback to degrade "
+                    f"this cell to the scalar engine)") from e
             print(f"# batched engine unavailable for {system}/{workload} "
-                  f"({e}); falling back to scalar")
+                  f"({e}); falling back to scalar (--allow-scalar-fallback)")
     return run_workload(system, workload, **kw)

@@ -54,6 +54,13 @@ migration counts and charged microseconds, and the batched-vs-scalar
 speedup with the rebalancer live land in
 ``benchmarks/results/BENCH_rebalance.json``.
 
+The ISSUE 8 acceptance benchmark: the GAM and FastSwap baseline cells —
+fig6 sweeps used to single-step these through the scalar emulator —
+replayed through the vectorized baseline engines
+(:mod:`repro.dataplane.baselines`), asserting identical stats / modeled
+runtime / latency breakdown and a >= 5x speedup per cell; results land
+in ``benchmarks/results/BENCH_baselines.json``.
+
 Usage: PYTHONPATH=src python -m benchmarks.dataplane_bench
        [--quick] [--perf-floor X]
 
@@ -555,6 +562,98 @@ def bench_rebalance(quick: bool, perf_floor: float = 0.0,
 
 
 # --------------------------------------------------------------------- #
+# ISSUE 8: baseline batched replays (BENCH_baselines.json).
+# --------------------------------------------------------------------- #
+def bench_baselines(quick: bool, perf_floor: float = 0.0,
+                    repeats: int = 2) -> dict:
+    """GAM / FastSwap batched replay vs their scalar oracles — the two
+    fig6 baseline cells the sweeps were stuck single-stepping before
+    ISSUE 8.  GAM runs the invalidation-heavy GC trace (the software-DSM
+    worst case: every sharing miss walks the page directory and
+    invalidates per blade in the scalar loop) and FastSwap the TF trace.
+    Stats, modeled runtime and latency breakdown must be *identical*
+    (bytewise float parity is the engine contract) and each cell's
+    speedup must clear the 5x target."""
+    from repro.dataplane.baselines import BASELINE_PHASES
+
+    per_thread = 400 if quick else 2000
+    fields = STAT_FIELDS + ("evicted_dirty", "evicted_clean")
+    cells = []
+    for system, wl in (("gam", "GC"), ("fastswap", "TF")):
+        trace = T.WORKLOADS[wl](
+            num_threads=BLADES * THREADS_PER_BLADE,
+            accesses_per_thread=per_thread)
+        kw = dict(system=system, num_compute_blades=BLADES,
+                  threads_per_blade=THREADS_PER_BLADE)
+        n = len(trace)
+
+        def best_batched():
+            best, result, eng = float("inf"), None, None
+            for _ in range(repeats):
+                rack = DisaggregatedRack(engine="batched", **kw)
+                eng = rack.model.make_batched_engine()
+                t0 = time.perf_counter()
+                result = eng.run(trace)
+                best = min(best, time.perf_counter() - t0)
+            return best, result, eng
+
+        def best_scalar():
+            best, result = float("inf"), None
+            for _ in range(repeats):
+                rack = DisaggregatedRack(engine="scalar", **kw)
+                t0 = time.perf_counter()
+                result = rack.run(trace)
+                best = min(best, time.perf_counter() - t0)
+            return best, result
+
+        wall_b, rb, eng = best_batched()
+        wall_s, rs = best_scalar()
+        identical = (
+            all(getattr(rs.stats, f) == getattr(rb.stats, f)
+                for f in fields)
+            and rs.runtime_us == rb.runtime_us
+            and rs.latency_breakdown_us == rb.latency_breakdown_us)
+        assert set(rb.phase_times) == set(BASELINE_PHASES), \
+            f"phase_times drifted: {sorted(rb.phase_times)}"
+        cells.append({
+            "system": system,
+            "workload": wl,
+            "blades": BLADES, "threads_per_blade": THREADS_PER_BLADE,
+            "accesses": n,
+            "scalar_wall_s": wall_s,
+            "batched_wall_s": wall_b,
+            "scalar_acc_per_s": n / wall_s,
+            "batched_acc_per_s": n / wall_b,
+            "speedup": wall_s / wall_b,
+            "stats_identical": identical,
+            "vectorized_accesses": eng.vectorized_accesses,
+            "walked_accesses": eng.walked_accesses,
+            "runtime_us": {"scalar": rs.runtime_us,
+                           "batched": rb.runtime_us},
+            "phases": {k: round(rb.phase_times[k], 5)
+                       for k in BASELINE_PHASES},
+        })
+        emit(f"baselines/{system}_{wl}/scalar", wall_s / n * 1e6,
+             f"acc_per_s={n / wall_s:.0f}")
+        emit(f"baselines/{system}_{wl}/batched", wall_b / n * 1e6,
+             f"acc_per_s={n / wall_b:.0f};speedup={wall_s / wall_b:.1f}x;"
+             f"parity={'identical' if identical else 'DIVERGED'}")
+    out = {"cells": cells}
+    path = save_json("BENCH_baselines", out)
+    print(f"# wrote {path}")
+    for c in cells:
+        assert c["stats_identical"], \
+            f"{c['system']} baseline cell diverged from the scalar oracle!"
+        if c["speedup"] < 5.0:
+            print(f"# WARNING: {c['system']} baseline speedup "
+                  f"{c['speedup']:.1f}x below 5x target")
+        if perf_floor:
+            assert c["speedup"] >= perf_floor, \
+                f"{c['system']} baseline cell below {perf_floor}x floor"
+    return out
+
+
+# --------------------------------------------------------------------- #
 # ISSUE 6: the zero-overhead-when-disabled telemetry guard.
 # --------------------------------------------------------------------- #
 def bench_telemetry_overhead(quick: bool, repeats: int = 3) -> dict:
@@ -620,7 +719,8 @@ def main() -> None:
                     help="measure telemetry overhead on the headline cell "
                          "and assert disabled-telemetry <= 5% over baseline")
     ap.add_argument("--only", choices=["all", "dataplane", "eviction",
-                                       "cache", "sharded", "rebalance"],
+                                       "cache", "sharded", "rebalance",
+                                       "baselines"],
                     default="all",
                     help="run one section in a fresh process (long "
                          "single-process runs can throttle and skew "
@@ -640,6 +740,9 @@ def main() -> None:
         return
     if args.only == "rebalance":
         bench_rebalance(args.quick, args.perf_floor, repeats)
+        return
+    if args.only == "baselines":
+        bench_baselines(args.quick, args.perf_floor, repeats)
         return
 
     trace = T.ma_trace(num_threads=BLADES * THREADS_PER_BLADE,
@@ -692,6 +795,7 @@ def main() -> None:
         bench_cache_eviction(args.quick, args.perf_floor, repeats)
         bench_sharded(args.quick, args.perf_floor, repeats)
         bench_rebalance(args.quick, args.perf_floor, repeats)
+        bench_baselines(args.quick, args.perf_floor, repeats)
 
 
 if __name__ == "__main__":

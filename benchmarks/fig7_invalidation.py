@@ -10,13 +10,13 @@ from benchmarks.common import (emit, engine_from_argv, save_json,
 
 
 def main() -> None:
-    engine = engine_from_argv()
+    choice = engine_from_argv()
     rows = []
     for wl in ("TF", "GC", "M_A", "M_C"):
         for nb in (2, 4, 8):
             t0 = time.perf_counter()
             r = run_workload_with_engine(
-                engine, "mind", wl, num_compute_blades=nb,
+                choice, "mind", wl, num_compute_blades=nb,
                              threads_per_blade=4, accesses_per_thread=600)
             wall = (time.perf_counter() - t0) * 1e6
             n = max(1, r.stats.accesses)
@@ -26,6 +26,7 @@ def main() -> None:
                 "inval_frac": r.stats.invalidations / n,
                 "flushed_frac": r.stats.flushed_pages / n,
                 "false_inv_frac": r.stats.false_invalidated_pages / n,
+                "engine_used": r.engine,
             }
             rows.append(row)
             emit(f"fig7/{wl}/b{nb}", wall,

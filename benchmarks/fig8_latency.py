@@ -70,7 +70,7 @@ def throughput_grid(engine="scalar"):
             wall = (time.perf_counter() - t0) * 1e6
             iops = r.performance * 1e6  # accesses/us -> IOPS
             rows.append({"read_ratio": read_ratio, "sharing": sharing,
-                         "iops": iops})
+                         "iops": iops, "engine_used": r.engine})
             emit(f"fig8_center/R{read_ratio}/S{sharing}", wall,
                  f"iops={iops:.2e}")
     return rows
@@ -90,7 +90,7 @@ def latency_breakdown(engine="scalar"):
             bd = {k: v / n for k, v in r.latency_breakdown_us.items()}
             mean_us = r.mean_access_us  # busy thread-time per access
             rows.append({"read_ratio": read_ratio, "blades": nb,
-                         "mean_us": mean_us, **bd})
+                         "mean_us": mean_us, "engine_used": r.engine, **bd})
             emit(f"fig8_right/R{read_ratio}/b{nb}", mean_us,
                  f"fetch={bd['fetch']:.1f};tlb={bd['tlb']:.2f};"
                  f"queue={bd['queue']:.2f}")
@@ -98,12 +98,12 @@ def latency_breakdown(engine="scalar"):
 
 
 def main() -> None:
-    engine = engine_from_argv()
+    choice = engine_from_argv()
     out = {
-        "engine": engine,
+        "engine": choice.engine,
         "left": transition_latencies(),
-        "center": throughput_grid(engine=engine),
-        "right": latency_breakdown(engine=engine),
+        "center": throughput_grid(engine=choice.engine),
+        "right": latency_breakdown(engine=choice.engine),
     }
     save_json("fig8_latency", out)
 

@@ -40,6 +40,11 @@ class ControlPlane:
         self.splitting = BoundedSplitting(mmu.engine.directory, c=splitting_c)
         self._last_epoch_at_us = 0.0
         self.epoch_reports: list[EpochReport] = []
+        # Switchless baseline racks (gam / fastswap) clear this: their
+        # models never read the in-network directory, so §4.4 mmap-time
+        # pre-population would only burn setup time building entries no
+        # lookup will ever touch.
+        self.prepopulate_on_mmap = True
         # Multi-switch racks: the VA-range shard map (set by ShardedRack).
         # The control plane stays centralized across switch shards — it
         # owns every shard's SRAM free list — but snapshots become
@@ -73,7 +78,7 @@ class ControlPlane:
                  requesting_blade: int | None = None) -> SyscallResult:
         vma = self.allocator.mmap(pdid, length, perm)
         self.mmu.protection.grant_vma(vma)
-        if requesting_blade is not None:
+        if requesting_blade is not None and self.prepopulate_on_mmap:
             # §4.4 pre-population: allocating blade gets exclusive access.
             self.mmu.engine.prepopulate(vma.base, vma.length, requesting_blade)
         return SyscallResult(retval=vma.base, vma=vma)

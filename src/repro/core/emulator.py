@@ -17,6 +17,11 @@ systems plus the paper's two simulated variants:
 Each emulated thread owns a logical clock; per-access latency from the
 :class:`NetworkModel` advances it.  Reported performance is
 ``total_accesses / max_thread_clock`` (inverse runtime, as in Fig. 6).
+
+System-specific behaviour — the per-access step, private state, the
+PSO flag, epoch side effects and which batched engine replays it —
+lives in the per-system model layer (:mod:`repro.core.systems`); the
+rack itself never branches on the system name.
 """
 
 from __future__ import annotations
@@ -25,19 +30,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.cache import BladePageCache
 from repro.core.control_plane import ControlPlane
 from repro.core.network_model import NetworkModel
 from repro.core.switch import InNetworkMMU, ShardMap, make_mmu
+from repro.core.systems import SYSTEMS, make_model
 from repro.core.traces import Trace
-from repro.core.types import (
-    PAGE_SIZE,
-    AccessType,
-    EpochStats,
-    MemAccess,
-    NetworkConstants,
-    Perm,
-)
+from repro.core.types import EpochStats, MemAccess, NetworkConstants, Perm
 from repro.telemetry import events as tev
 
 
@@ -148,7 +146,7 @@ class DisaggregatedRack:
         directory_eviction: str = "lru",
         telemetry=None,
     ):
-        assert system in ("mind", "mind-pso", "mind-pso+", "gam", "fastswap")
+        assert system in SYSTEMS
         assert engine in ("scalar", "batched")
         self.system = system
         self.engine = engine
@@ -167,6 +165,7 @@ class DisaggregatedRack:
         # from its per-shard snapshot.
         self._kill_at: tuple[int, int] | None = None
         self.gam_sw_cores = gam_sw_cores
+        self.cache_bytes_per_blade = cache_bytes_per_blade
         if system == "mind-pso+":
             max_directory_entries = 10**9  # infinite switch capacity
         self.mmu, self.allocator = make_mmu(
@@ -182,31 +181,22 @@ class DisaggregatedRack:
         if constants is not None:
             self.mmu.network = NetworkModel(constants)
         self.cp = ControlPlane(self.mmu, self.allocator, epoch_us=epoch_us)
-        # fastswap/gam state
-        self._fs_caches = {
-            b: BladePageCache(b, cache_bytes_per_blade) for b in range(num_compute_blades)
-        }
-        self._gam_dir: dict[int, tuple[int, int, int]] = {}  # page->(state,sharers,owner)
-        self._alt_stats = EpochStats()  # gam/fastswap counters
-        for c in self._fs_caches.values():
-            c.stats = self._alt_stats
-        # Telemetry plane (mind systems only).  Hooks are wired ONLY when
-        # an *enabled* Telemetry is passed: a disabled/absent one leaves
-        # every component's `telemetry` attribute None, keeping the hot
-        # paths on the identical pre-telemetry code (the zero-overhead
+        # The per-system model: owns the system's private state (the
+        # in-network MMU path for mind*, the software-DSM directory and
+        # blade caches for gam, the per-blade swap caches for fastswap),
+        # the PSO flag and the batched-engine choice.
+        self.model = make_model(system, self)
+        self.cp.prepopulate_on_mmap = self.model.has_switch
+        # Telemetry plane.  Hooks are wired ONLY when an *enabled*
+        # Telemetry is passed: a disabled/absent one leaves every
+        # component's `telemetry` attribute None, keeping the hot paths
+        # on the identical pre-telemetry code (the zero-overhead
         # contract enforced by `dataplane_bench.py --overhead-check`).
         self.telemetry = (telemetry if telemetry is not None
-                          and telemetry.enabled
-                          and system.startswith("mind") else None)
+                          and telemetry.enabled else None)
         if self.telemetry is not None:
-            tel = self.telemetry
-            tel.num_blades = num_compute_blades
-            eng = self.mmu.engine
-            eng.telemetry = tel
-            eng.directory.telemetry = tel
-            for c in eng.caches.values():
-                c.telemetry = tel
-            self.cp.telemetry = tel
+            self.telemetry.num_blades = num_compute_blades
+            self.model.wire_telemetry(self.telemetry)
 
     @property
     def epoch_driver_enabled(self) -> bool:
@@ -271,9 +261,7 @@ class DisaggregatedRack:
     # ------------------------------------------------------------------ #
     def run(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
         if self.engine == "batched":
-            from repro.dataplane.engine import BatchedDataPlane
-
-            return BatchedDataPlane(self, **self.engine_options).run(
+            return self.model.make_batched_engine(**self.engine_options).run(
                 trace, max_accesses
             )
         return self._run_scalar(trace, max_accesses)
@@ -288,7 +276,6 @@ class DisaggregatedRack:
         dir_timeline: list[int] = []
         n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
         next_epoch_at = self.epoch_us
-        pso = self.system in ("mind-pso", "mind-pso+", "gam")
         rec = self.telemetry.recorder if self.telemetry is not None else None
 
         for i in range(n):
@@ -301,30 +288,17 @@ class DisaggregatedRack:
             blade = t // self.tpb
             vaddr = self._to_vaddr(segs, int(trace.offsets[i]))
             is_write = bool(trace.ops[i])
-            if self.system in ("mind", "mind-pso", "mind-pso+"):
-                us = self._mind_access(blade, vaddr, is_write, pso, breakdown, trans_lat)
-            elif self.system == "gam":
-                us = self._gam_access(blade, vaddr, is_write, breakdown)
-            else:
-                us = self._fastswap_access(blade, vaddr, is_write, breakdown)
+            us = self.model.scalar_access(blade, vaddr, is_write, breakdown,
+                                          trans_lat)
             clocks[t] += us
 
             # Epoch boundary: driven by emulated time (mean thread clock).
             if self.epoch_driver_enabled and clocks.mean() >= next_epoch_at:
-                if self.system.startswith("mind"):
-                    self.cp.maybe_run_epoch(now_us=next_epoch_at,
-                                            split=self.splitting_enabled)
-                    dir_timeline.append(self.mmu.engine.directory.num_entries())
-                    self.mmu.network.begin_window()
-                    mig = self.cp.take_migration_charge()
-                    if mig:
-                        # Migration is stop-the-world: every thread stalls
-                        # while region state crosses the s2s links.
-                        clocks += mig
-                        breakdown["switch"] += mig * nthreads
+                self.model.on_epoch(next_epoch_at, clocks, breakdown,
+                                    dir_timeline)
                 next_epoch_at += self.epoch_us
 
-        stats = self.mmu.engine.stats if self.system.startswith("mind") else self._alt_stats
+        stats = self.model.stats
         runtime = float(clocks.max()) if n else 0.0
         return EmulationResult(
             system=self.system,
@@ -350,114 +324,6 @@ class DisaggregatedRack:
         exactly one pipeline; :class:`ShardedRack` overrides this with
         home-switch routing plus the cross-shard hop."""
         return self.mmu.handle(req)
-
-    def _mind_access(self, blade, vaddr, is_write, pso, breakdown, trans_lat) -> float:
-        req = MemAccess(
-            blade_id=blade,
-            pdid=1,
-            vaddr=vaddr,
-            access=AccessType.WRITE if is_write else AccessType.READ,
-        )
-        res = self._route(blade, vaddr, req)
-        lb = res.latency
-        breakdown["fetch"] += lb.fetch_us
-        breakdown["invalidation"] += lb.invalidation_us
-        breakdown["tlb"] += lb.tlb_us
-        breakdown["queue"] += lb.queue_us
-        breakdown["switch"] += lb.switch_us
-        if res.rec is not None:
-            trans_lat.setdefault(res.rec.kind, []).append(lb.total_us)
-        if pso and is_write and not res.acts.hit_local:
-            # PSO: the store retires into a write buffer; only issue cost
-            # is exposed.  Queueing at invalidation targets persists (the
-            # paper's simulation cannot elide it either).
-            us = self.mmu.network.k.switch_pipeline_ns / 1000.0 + lb.queue_us
-        else:
-            us = lb.total_us
-        tel = self.mmu.engine.telemetry
-        if tel is not None and res.acts.fault is None:
-            # (fault accesses are recorded at the ingress pipeline —
-            # InNetworkMMU.handle — where the fault is decided.)
-            tel.event(tev.ACCESS, blade=blade, base=res.acts.region_base,
-                      log2=res.acts.region_size_log2, write=int(is_write),
-                      hit=int(res.acts.hit_local), tkind=res.rec.kind, us=us)
-            tel.observe_latency(lb.fetch_us, lb.invalidation_us, lb.tlb_us,
-                                lb.queue_us, lb.switch_us, us)
-        return us
-
-    # ------------------------------------------------------------------ #
-    def _gam_access(self, blade, vaddr, is_write, breakdown) -> float:
-        """Compute-centric DSM (§2.2): home-node directory at compute
-        blades, software overhead per access, PSO writes."""
-        st = self._alt_stats
-        st.accesses += 1
-        net = self.mmu.network
-        page = vaddr & ~(PAGE_SIZE - 1)
-        cache = self._fs_caches[blade]
-        sw = net.gam_local_us()
-        # Software contention: beyond ~gam_sw_cores threads/blade the
-        # user-level library serializes (lock per access), Fig. 6 left.
-        contention = max(1.0, self.tpb / self.gam_sw_cores)
-        sw *= contention
-        breakdown["software"] += sw
-        state, sharers, owner = self._gam_dir.get(page, (0, 0, -1))
-        me = 1 << blade
-        if cache.has(vaddr) and (not is_write or (state == 2 and owner == blade)):
-            cache.touch(vaddr)
-            if is_write:
-                cache.mark_dirty(vaddr)
-            st.local_hits += 1
-            breakdown["local"] += sw
-            return sw
-        st.remote_fetches += 1
-        invs = 0
-        if is_write:
-            if state == 1:
-                invs = bin(sharers & ~me).count("1")
-                for b in _bits(sharers & ~me):
-                    self._fs_caches[b].invalidate_region(page, PAGE_SIZE, vaddr)
-                    st.invalidations += 1
-            elif state == 2 and owner != blade:
-                invs = 1
-                self._fs_caches[owner].invalidate_region(page, PAGE_SIZE, vaddr)
-                st.invalidations += 1
-            self._gam_dir[page] = (2, me, blade)
-        else:
-            if state == 2 and owner != blade:
-                invs = 1
-                self._fs_caches[owner].invalidate_region(page, PAGE_SIZE, vaddr)
-                st.invalidations += 1
-                self._gam_dir[page] = (1, me | (1 << owner), -1)
-            else:
-                self._gam_dir[page] = (1, sharers | me, -1)
-        cache.insert(vaddr, dirty=is_write)
-        remote = net.gam_remote_us(invs)
-        breakdown["fetch"] += remote
-        if is_write:
-            # PSO write: asynchronous completion, only issue cost exposed.
-            return sw
-        return sw + remote
-
-    def _fastswap_access(self, blade, vaddr, is_write, breakdown) -> float:
-        """Swap-based far memory: per-blade private working set, no
-        coherence.  (FastSwap does not scale past one blade, §7.1.)"""
-        st = self._alt_stats
-        st.accesses += 1
-        net = self.mmu.network
-        cache = self._fs_caches[blade]
-        if cache.has(vaddr):
-            cache.touch(vaddr)
-            if is_write:
-                cache.mark_dirty(vaddr)
-            st.local_hits += 1
-            breakdown["local"] += net.k.local_dram_ns / 1000.0
-            return net.k.local_dram_ns / 1000.0
-        st.remote_fetches += 1
-        flushed = cache.insert(vaddr, dirty=is_write)
-        st.flushed_pages += flushed
-        us = net.fastswap_remote_us() + net.page_transfer_us(flushed)
-        breakdown["fetch"] += us
-        return us
 
 
 class ShardedRack(DisaggregatedRack):
@@ -497,12 +363,11 @@ class ShardedRack(DisaggregatedRack):
     def __init__(self, num_shards: int = 2, shard_map: ShardMap | None = None,
                  shard_slot_budgets=None, rebalance_threshold: float | None = None,
                  rebalance_max_moves: int = 4, **rack_kw):
-        system = rack_kw.get("system", "mind")
-        if not system.startswith("mind"):
-            raise ValueError(
-                f"sharded directories need an in-network MMU; {system!r} "
-                "has no switch to shard — use DisaggregatedRack")
         super().__init__(**rack_kw)
+        if not self.model.has_switch:
+            raise ValueError(
+                f"sharded directories need an in-network MMU; {self.system!r} "
+                "has no switch to shard — use DisaggregatedRack")
         d = self.mmu.engine.directory
         self.shard_map = shard_map or ShardMap(
             num_shards=num_shards, home_log2=d.max_region_log2)
@@ -615,16 +480,6 @@ class ShardedRack(DisaggregatedRack):
                               log2=res.acts.region_size_log2, targets=home)
                     tel.observe_cross_shard(hop)
         return res
-
-
-def _bits(bm: int) -> list[int]:
-    out, i = [], 0
-    while bm:
-        if bm & 1:
-            out.append(i)
-        bm >>= 1
-        i += 1
-    return out
 
 
 def run_workload(

@@ -44,12 +44,25 @@ access the scalar oracle fires them at (see
 racks (:class:`~repro.core.emulator.ShardedRack`) replay with the
 same exactness: each shard's packets run through their own TCAM/MSI
 kernel invocation (:func:`partition_by_shard`) and cross-shard
-accesses charge the switch-to-switch hop.  The engine still refuses
-(raises :class:`UnsupportedByBatchedEngine`) the behaviours that stay
-scalar-engine-only — the systems without a switch data plane (gam,
-fastswap) — instead of silently diverging from the oracle.
+accesses charge the switch-to-switch hop.
+
+The no-switch baseline systems (gam, fastswap) replay batched too,
+through their own vectorized engines in
+:mod:`repro.dataplane.baselines` — a segmented prefix-maxima decode
+for GAM's software-DSM directory, a per-blade LRU replay for
+FastSwap's swap caches — held to their scalar oracles *bytewise*
+(stats, runtimes, latency breakdowns, telemetry;
+tests/test_baselines.py).  The only refusals left
+(:class:`UnsupportedByBatchedEngine`) are the mind engine's
+packed-kernel-output bounds: more than 24 compute blades, or
+``blades * max_region_pages >= 2**15``.
 """
 
+from repro.dataplane.baselines import (
+    BASELINE_PHASES,
+    FastswapBatchedReplay,
+    GamBatchedReplay,
+)
 from repro.dataplane.engine import BatchedDataPlane, UnsupportedByBatchedEngine
 from repro.dataplane.scheduler import (
     WaveSchedule,
@@ -59,8 +72,11 @@ from repro.dataplane.scheduler import (
 from repro.dataplane.tables import DataPlaneState, PageMap, RegionTable
 
 __all__ = [
+    "BASELINE_PHASES",
     "BatchedDataPlane",
     "DataPlaneState",
+    "FastswapBatchedReplay",
+    "GamBatchedReplay",
     "PageMap",
     "RegionTable",
     "UnsupportedByBatchedEngine",

@@ -88,8 +88,12 @@ sequential walk survives as the property-tested oracle
 The beyond-paper ``downgrade_keeps_copy`` variant replays batched as
 well (the kernel keeps the downgraded owner's presence bits, flushes
 its dirty bits, and leaves it a sharer).  The engine still *refuses*
-(raises :class:`UnsupportedByBatchedEngine`) only when the modelled
-system has no switch data plane (gam/fastswap).
+(raises :class:`UnsupportedByBatchedEngine`) only when the packed
+kernel outputs cannot represent the rack (more than 24 compute blades,
+or blades x max-region-pages at or above 2^15).  The no-switch
+baselines (gam/fastswap) never reach this engine at all — their racks
+dispatch to the vectorized replays in
+:mod:`repro.dataplane.baselines`.
 
 **Multi-switch (sharded-directory) racks** replay with the same exact
 parity: when the bound rack is a
@@ -313,10 +317,6 @@ class BatchedDataPlane:
 
     def __init__(self, rack, chunk_size: int = 65536,
                  lanes: int | None = None):
-        if rack.system not in ("mind", "mind-pso", "mind-pso+"):
-            raise UnsupportedByBatchedEngine(
-                f"batched engine models the in-network MMU; {rack.system!r} "
-                "has no switch data plane — use engine='scalar'")
         # The packed int32 kernel output words bound the configuration:
         # w1 carries the invalidation mask at bits 7..30 (<= 24 blades)
         # and w2 packs two 15-bit page counts, each bounded by one
@@ -384,7 +384,7 @@ class BatchedDataPlane:
         nthreads = rack.nb * rack.tpb
         mmu = rack.mmu
         knet = mmu.network.k
-        pso = rack.system in ("mind-pso", "mind-pso+")
+        pso = rack.model.pso
 
         threads = (trace.threads[:n].astype(np.int64) % nthreads).astype(np.int32)
         blades = (threads // rack.tpb).astype(np.int32)

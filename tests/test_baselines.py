@@ -1,0 +1,290 @@
+"""Baseline batched replays (GAM / FastSwap) vs the scalar oracle.
+
+The ISSUE 8 contract: the directory-free baselines replay batched with
+*bytewise* parity against :meth:`SystemModel.scalar_access` — identical
+:class:`EpochStats`, bit-equal runtime / per-thread totals / latency
+breakdown — across every regime (no-eviction vectorized decode, cache
+pressure walking the oracle, the mixed case, and the degenerate
+carried-in-M corner), for any chunk size, and with model state left
+exactly as the scalar run leaves it (back-to-back runs stay in sync).
+A golden-pinned regression locks every system's scalar semantics to the
+pre-refactor emulator (``tests/data/system_goldens.json``; regenerate
+with the snippet in that file's sibling ``make_goldens`` docstring
+below), so the model extraction provably changed nothing.
+
+Golden regeneration (only when semantics intentionally change)::
+
+    PYTHONPATH=src python - <<'EOF'
+    # see tests/test_baselines.py::GOLDENS for the cell grid
+    EOF
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import traces as T
+from repro.core.emulator import DisaggregatedRack, run_workload
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a [dev] extra
+    HAVE_HYPOTHESIS = False
+
+GOLDENS = json.loads(
+    (Path(__file__).parent / "data" / "system_goldens.json").read_text())
+
+STAT_FIELDS = (
+    "accesses", "local_hits", "remote_fetches", "invalidations",
+    "invalidated_pages", "false_invalidated_pages", "flushed_pages",
+    "evicted_dirty", "evicted_clean", "faults", "splits", "merges",
+)
+
+BASELINES = ("gam", "fastswap")
+
+
+def _trace(workload, threads, n, seed=11):
+    if workload == "YCSB":
+        return T.ycsb_trace("zipf", num_threads=threads, read_ratio=0.5,
+                            accesses_per_thread=n, store_mb=4, seed=seed)
+    return T.WORKLOADS[workload](num_threads=threads,
+                                 accesses_per_thread=n)
+
+
+def _pair(system, trace, opts=None, **kw):
+    kw.setdefault("num_compute_blades", 2)
+    kw.setdefault("threads_per_blade", 2)
+    rs = DisaggregatedRack(system=system, engine="scalar", **kw).run(trace)
+    rb = DisaggregatedRack(system=system, engine="batched",
+                           engine_options=opts or {}, **kw).run(trace)
+    return rs, rb
+
+
+def _assert_exact(rs, rb):
+    """The full bytewise-parity contract."""
+    assert rs.stats == rb.stats
+    assert rs.runtime_us == rb.runtime_us
+    assert rs.total_thread_us == rb.total_thread_us
+    assert rs.latency_breakdown_us == rb.latency_breakdown_us
+    assert rb.engine == "batched" and rs.engine == "scalar"
+
+
+# --------------------------------------------------------------------- #
+# Deterministic scalar-vs-batched parity across workloads.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("system", BASELINES)
+@pytest.mark.parametrize("workload", ["TF", "GC", "YCSB"])
+def test_parity_across_workloads(system, workload):
+    rs, rb = _pair(system, _trace(workload, 8, 300),
+                   num_compute_blades=4, threads_per_blade=2)
+    _assert_exact(rs, rb)
+    assert rb.stats.accesses == 2400
+
+
+@pytest.mark.parametrize("system", BASELINES)
+@pytest.mark.parametrize("chunk", [7, 64, 1000])
+def test_parity_is_chunk_size_invariant(system, chunk):
+    tr = _trace("YCSB", 6, 200)
+    rs, rb = _pair(system, tr, opts={"chunk_size": chunk},
+                   num_compute_blades=3, threads_per_blade=2)
+    _assert_exact(rs, rb)
+
+
+# --------------------------------------------------------------------- #
+# Regimes: vectorized fast path, oracle walks under pressure, the mix.
+# --------------------------------------------------------------------- #
+def _engine_run(system, trace, opts=None, **kw):
+    kw.setdefault("num_compute_blades", 2)
+    kw.setdefault("threads_per_blade", 2)
+    rack = DisaggregatedRack(system=system, engine="batched", **kw)
+    eng = rack.model.make_batched_engine(**(opts or {}))
+    return eng, eng.run(trace)
+
+
+@pytest.mark.parametrize("system", BASELINES)
+def test_safe_regime_runs_fully_vectorized(system):
+    tr = _trace("YCSB", 4, 250)
+    eng, rb = _engine_run(system, tr)
+    assert eng.vectorized_accesses == rb.stats.accesses == 1000
+    assert eng.walked_accesses == 0
+    rs = DisaggregatedRack(system=system, engine="scalar",
+                           num_compute_blades=2,
+                           threads_per_blade=2).run(tr)
+    _assert_exact(rs, rb)
+
+
+@pytest.mark.parametrize("system", BASELINES)
+def test_pressure_regime_walks_the_oracle_exactly(system):
+    tr = T.uniform_trace(num_threads=4, read_ratio=0.6, sharing_ratio=0.5,
+                         accesses_per_thread=250, working_set_pages=2000,
+                         seed=5)
+    kw = dict(cache_bytes_per_blade=1 << 14)  # 4 pages/blade
+    eng, rb = _engine_run(system, tr, **kw)
+    assert eng.walked_accesses > 0
+    rs = DisaggregatedRack(system=system, engine="scalar",
+                           num_compute_blades=2, threads_per_blade=2,
+                           **kw).run(tr)
+    _assert_exact(rs, rb)
+    assert rb.stats.evicted_dirty + rb.stats.evicted_clean > 0
+
+
+@pytest.mark.parametrize("system", BASELINES)
+def test_mixed_regime_exercises_both_paths(system):
+    tr = _trace("YCSB", 4, 400, seed=3)
+    kw = dict(cache_bytes_per_blade=1 << 20)  # 256 pages/blade
+    eng, rb = _engine_run(system, tr, opts={"chunk_size": 200}, **kw)
+    assert eng.vectorized_accesses > 0 and eng.walked_accesses > 0
+    rs = DisaggregatedRack(system=system, engine="scalar",
+                           num_compute_blades=2, threads_per_blade=2,
+                           **kw).run(tr)
+    _assert_exact(rs, rb)
+
+
+@pytest.mark.parametrize("system", BASELINES)
+def test_back_to_back_runs_keep_state_in_sync(system):
+    """Directory / cache / LRU state written back by a batched run must
+    be exactly what the scalar oracle leaves — a second run over fresh
+    traffic diverges otherwise."""
+    t1 = _trace("YCSB", 4, 200, seed=21)
+    t2 = _trace("YCSB", 4, 200, seed=22)
+    kw = dict(num_compute_blades=2, threads_per_blade=2,
+              cache_bytes_per_blade=1 << 19)
+    racks = {e: DisaggregatedRack(system=system, engine=e, **kw)
+             for e in ("scalar", "batched")}
+    racks["scalar"].run(t1)
+    racks["batched"].run(t1)
+    rs = racks["scalar"].run(t2)
+    rb = racks["batched"].run(t2)
+    assert rs.stats == rb.stats
+    assert rs.runtime_us == rb.runtime_us
+    assert rs.latency_breakdown_us == rb.latency_breakdown_us
+
+
+def test_gam_batched_counts_invalidations():
+    """Sharing-heavy traffic drives the software-DSM invalidation path
+    (write on S, read on foreign M) through the vectorized decode."""
+    tr = T.uniform_trace(num_threads=8, read_ratio=0.5, sharing_ratio=1.0,
+                         accesses_per_thread=200, working_set_pages=64,
+                         seed=9)
+    rs, rb = _pair("gam", tr, num_compute_blades=4, threads_per_blade=2)
+    _assert_exact(rs, rb)
+    assert rb.stats.invalidations > 0
+
+
+def test_fastswap_blades_stay_independent():
+    """FastSwap has no coherence: per-blade stats add up regardless of
+    sharing, and no invalidations are ever counted."""
+    tr = T.uniform_trace(num_threads=8, read_ratio=0.5, sharing_ratio=1.0,
+                         accesses_per_thread=200, working_set_pages=64,
+                         seed=9)
+    rs, rb = _pair("fastswap", tr, num_compute_blades=4,
+                   threads_per_blade=2)
+    _assert_exact(rs, rb)
+    assert rb.stats.invalidations == 0
+
+
+# --------------------------------------------------------------------- #
+# Model extraction is semantics-preserving: pre-refactor goldens.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize(
+    "cell", GOLDENS,
+    ids=[f"{c['system']}-{c['workload']}" for c in GOLDENS])
+def test_scalar_semantics_match_pre_refactor_goldens(cell):
+    r = run_workload(cell["system"], cell["workload"],
+                     num_compute_blades=cell["num_compute_blades"],
+                     threads_per_blade=cell["threads_per_blade"],
+                     accesses_per_thread=cell["accesses_per_thread"])
+    for f in STAT_FIELDS:
+        assert getattr(r.stats, f) == cell["stats"][f], f
+    np.testing.assert_allclose(r.runtime_us, cell["runtime_us"],
+                               rtol=1e-12)
+    np.testing.assert_allclose(r.total_thread_us, cell["total_thread_us"],
+                               rtol=1e-12)
+    np.testing.assert_allclose(r.performance, cell["performance"],
+                               rtol=1e-12)
+    for k, v in cell["latency_breakdown_us"].items():
+        np.testing.assert_allclose(r.latency_breakdown_us[k], v,
+                                   rtol=1e-12, err_msg=k)
+
+
+# --------------------------------------------------------------------- #
+# The loud-fallback benchmark contract (benchmarks/common.py).
+# --------------------------------------------------------------------- #
+def test_run_workload_with_engine_refusal_is_loud():
+    from benchmarks.common import run_workload_with_engine
+
+    with pytest.raises(SystemExit, match="refused"):
+        run_workload_with_engine("batched", "mind", "TF",
+                                 num_compute_blades=25,
+                                 threads_per_blade=1,
+                                 accesses_per_thread=20,
+                                 splitting_enabled=False)
+
+
+def test_run_workload_with_engine_explicit_fallback():
+    from benchmarks.common import run_workload_with_engine
+
+    r = run_workload_with_engine("batched", "mind", "TF",
+                                 allow_scalar_fallback=True,
+                                 num_compute_blades=25,
+                                 threads_per_blade=1,
+                                 accesses_per_thread=20,
+                                 splitting_enabled=False)
+    assert r.engine == "scalar"
+
+
+def test_run_workload_with_engine_baselines_run_batched():
+    from benchmarks.common import run_workload_with_engine
+
+    for system in BASELINES:
+        r = run_workload_with_engine("batched", system, "TF",
+                                     num_compute_blades=2,
+                                     threads_per_blade=2,
+                                     accesses_per_thread=50)
+        assert r.engine == "batched"
+
+
+# --------------------------------------------------------------------- #
+# Property-based parity sweep.
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        system=st.sampled_from(BASELINES),
+        nb=st.integers(1, 4),
+        tpb=st.integers(1, 3),
+        n=st.integers(20, 200),
+        seed=st.integers(0, 2 ** 16),
+        chunk=st.integers(8, 512),
+        cache_pow=st.sampled_from([14, 19, 29]),
+    )
+    def test_parity_property(system, nb, tpb, n, seed, chunk, cache_pow):
+        tr = T.ycsb_trace("zipf", num_threads=nb * tpb, read_ratio=0.5,
+                          accesses_per_thread=n, store_mb=4, seed=seed)
+        rs, rb = _pair(system, tr, opts={"chunk_size": chunk},
+                       num_compute_blades=nb, threads_per_blade=tpb,
+                       cache_bytes_per_blade=1 << cache_pow)
+        _assert_exact(rs, rb)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        system=st.sampled_from(BASELINES),
+        read_ratio=st.sampled_from([0.0, 0.5, 1.0]),
+        sharing=st.sampled_from([0.0, 0.5, 1.0]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_parity_property_uniform(system, read_ratio, sharing, seed):
+        tr = T.uniform_trace(num_threads=6, read_ratio=read_ratio,
+                             sharing_ratio=sharing,
+                             accesses_per_thread=150,
+                             working_set_pages=500, seed=seed)
+        rs, rb = _pair(system, tr, num_compute_blades=3,
+                       threads_per_blade=2,
+                       cache_bytes_per_blade=1 << 21)
+        _assert_exact(rs, rb)

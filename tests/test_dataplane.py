@@ -6,9 +6,11 @@ mind* system — including traces with directory capacity evictions
 (regions > ``max_directory_entries``), blade page-cache capacity
 evictions (working set > a blade's cache) and Bounded-Splitting epochs,
 whose boundaries the engine lands on exactly; the conflict scheduler
-must serialize same-region packets and keep waves conflict-free; the
-behaviours that remain unsupported (systems without a switch data
-plane) must be refused loudly rather than silently diverging.
+must serialize same-region packets and keep waves conflict-free.  The
+no-switch baselines replay through their own batched engines
+(:mod:`repro.dataplane.baselines`, covered by ``test_baselines.py``);
+the only refusals left are the packed-kernel-output bounds, still loud
+rather than silently diverging.
 """
 
 import numpy as np
@@ -197,12 +199,24 @@ def test_directory_prepop_export():
 # --------------------------------------------------------------------- #
 # Gating: loud refusal instead of silent divergence.
 # --------------------------------------------------------------------- #
-def test_batched_rejects_systems_without_switch():
+def test_baseline_systems_run_batched():
+    """The no-switch baselines no longer refuse ``engine="batched"`` —
+    they dispatch to their own replay engines and report so."""
     for system in ("gam", "fastswap"):
         rack = DisaggregatedRack(system=system, num_compute_blades=1,
                                  threads_per_blade=2, engine="batched")
-        with pytest.raises(UnsupportedByBatchedEngine):
-            rack.run(_uniform_trace(2))
+        r = rack.run(_uniform_trace(2))
+        assert r.engine == "batched" and r.stats.accesses == 500
+
+
+def test_batched_rejects_packed_output_overflow():
+    """The one refusal left: racks whose packed kernel outputs can't
+    represent the blade set (nb > 24 bit-packing bound)."""
+    rack = DisaggregatedRack(system="mind", num_compute_blades=25,
+                             threads_per_blade=1, engine="batched",
+                             splitting_enabled=False)
+    with pytest.raises(UnsupportedByBatchedEngine):
+        rack.run(_uniform_trace(25))
 
 
 def test_batched_capacity_eviction_parity():

@@ -347,13 +347,19 @@ def test_disabled_telemetry_installs_no_hooks(telemetry):
         assert tel.metrics._counters == {}
 
 
-def test_non_mind_systems_never_wire_telemetry():
-    tel = Telemetry()
-    rack = DisaggregatedRack(system="gam", num_compute_blades=2,
-                             threads_per_blade=2, telemetry=tel)
-    assert rack.telemetry is None
-    r = rack.run(_zipf(n=50))
-    assert r.telemetry is None and tel.recorder.total_emitted == 0
+@pytest.mark.parametrize("system", ["gam", "fastswap"])
+def test_baseline_systems_wire_and_emit_telemetry(system):
+    """The directory-free baselines carry the flight recorder too: the
+    model emits ACCESS (and WRITEBACK on dirty drops) events, the batched
+    replay reconstructs the same canonical stream, and the switch-side
+    latency histograms stay empty — there is no switch latency to split."""
+    rs, rb = _pair(_zipf(n=120), system=system)
+    assert rs.telemetry is not None and rb.telemetry is not None
+    counts = rs.telemetry.recorder.counts_by_kind()
+    assert counts.get(tev.ACCESS, 0) == rs.stats.accesses > 0
+    assert_event_parity(rs.telemetry, rb.telemetry)
+    for t in (rs.telemetry, rb.telemetry):
+        assert not t.metrics._hists
 
 
 def test_result_summary_reports_event_counts():
