@@ -77,6 +77,9 @@ class MemoryAllocator:
         self.pow2_align = pow2_align
         self.blades: dict[int, BladeAllocator] = {}
         self.vmas: dict[int, VMA] = {}  # keyed by base address
+        # Quarantined (failed) blades: excluded from placement until a
+        # blade_restore fault revives them (repro.core.faults).
+        self.dead: set[int] = set()
         for b, spec in gas.blades.items():
             self.blades[b] = BladeAllocator(spec.va_base, spec.capacity)
 
@@ -103,7 +106,9 @@ class MemoryAllocator:
         """Allocate a vma; places on least-allocated blade (§4.1)."""
         rlen, align = self._rounded(length)
         # Least-allocated first; fall back across blades if fragmented.
-        order = sorted(self.blades, key=lambda b: (self.blades[b].allocated, b))
+        # Quarantined blades never receive placements.
+        order = sorted((b for b in self.blades if b not in self.dead),
+                       key=lambda b: (self.blades[b].allocated, b))
         for blade_id in order:
             base = self.blades[blade_id].alloc(rlen, align)
             if base is not None:

@@ -30,12 +30,19 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core.control_plane import ControlPlane
 from repro.core.network_model import NetworkModel
 from repro.core.switch import InNetworkMMU, ShardMap, make_mmu
 from repro.core.systems import SYSTEMS, make_model
 from repro.core.traces import Trace
-from repro.core.types import EpochStats, MemAccess, NetworkConstants, Perm
+from repro.core.types import (
+    PAGE_SIZE,
+    EpochStats,
+    MemAccess,
+    NetworkConstants,
+    Perm,
+)
 from repro.telemetry import events as tev
 
 
@@ -74,6 +81,11 @@ class EmulationResult:
     # The telemetry plane that observed this run (repro.telemetry.Telemetry)
     # when one was attached to the rack; None otherwise.
     telemetry: object = None
+    # Fault plane (repro.core.faults): one FaultReport per fired fault
+    # (switch kills, blade kills/restores) in firing order.  Accounting
+    # lives here, outside EpochStats, so faulted replays converge to
+    # the fault-free run's coherence statistics.
+    fault_reports: list = field(default_factory=list)
 
     @property
     def mean_access_us(self) -> float:
@@ -145,6 +157,7 @@ class DisaggregatedRack:
         engine_options: dict | None = None,
         directory_eviction: str = "lru",
         telemetry=None,
+        durable_writebacks: bool = False,
     ):
         assert system in SYSTEMS
         assert engine in ("scalar", "batched")
@@ -160,10 +173,16 @@ class DisaggregatedRack:
         self.tpb = threads_per_blade
         self.epoch_us = epoch_us
         self.splitting_enabled = splitting_enabled
-        # Fault injection (ShardedRack.schedule_switch_kill): kill switch
-        # `shard` right before access `index` is issued, then restore it
-        # from its per-shard snapshot.
-        self._kill_at: tuple[int, int] | None = None
+        # Fault plane (repro.core.faults): an ordered schedule of
+        # FaultEvents, each fired right before its access index is
+        # issued (both engines honour exact indexes; the batched engine
+        # clamps chunks so none straddles a fault point).  Consumed
+        # destructively by the replay.
+        self._fault_schedule: list[flt.FaultEvent] = []
+        self.fault_reports: list[flt.FaultReport] = []
+        # Whether a killed blade's exposed dirty pages can be recovered
+        # from a durable backing store (blade-kill accounting only).
+        self.durable_writebacks = durable_writebacks
         self.gam_sw_cores = gam_sw_cores
         self.cache_bytes_per_blade = cache_bytes_per_blade
         if system == "mind-pso+":
@@ -197,6 +216,24 @@ class DisaggregatedRack:
         if self.telemetry is not None:
             self.telemetry.num_blades = num_compute_blades
             self.model.wire_telemetry(self.telemetry)
+        # Lossy fabric (repro.core.faults.FabricModel): armed by
+        # fabric_loss_prob > 0 in the NetworkConstants.  The retry draw
+        # is a pure function of (fabric_seed, access index), shared by
+        # both engines.  Scoped to the in-network systems — the no-
+        # switch baselines have no fabric control plane to retry
+        # through, and a silently-ignored knob would be a lying config.
+        kf = self.mmu.network.k
+        self.fabric = None
+        if kf.fabric_loss_prob > 0.0:
+            if not self.model.has_switch:
+                raise ValueError(
+                    f"fabric_loss_prob={kf.fabric_loss_prob} needs the "
+                    f"in-network MMU; {system!r} has no switch to run "
+                    "the retry protocol — use a mind* system")
+            self.fabric = flt.FabricModel(kf)
+        # Scalar-loop cursor: the global access index the oracle is
+        # replaying (the fabric draw and fault firing key off it).
+        self._cur_access = -1
 
     @property
     def epoch_driver_enabled(self) -> bool:
@@ -259,7 +296,53 @@ class DisaggregatedRack:
         return base + min(arena_off - s, e - s - 1) if arena_off >= e else segs[0][2]
 
     # ------------------------------------------------------------------ #
+    # Fault plane: schedule faults against exact access indexes.
+    # ------------------------------------------------------------------ #
+    def schedule_fault_plan(self, events) -> None:
+        """Append fault events to the replay schedule.  Validation is
+        loud (``ValueError`` naming the offending entry): unknown kinds
+        and targets, overlapping indexes and impossible kill/restore
+        sequences are rejected here; index-vs-trace-length bounds are
+        checked at ``run()`` once the trace is known."""
+        merged = sorted(self._fault_schedule + list(events),
+                        key=lambda e: e.index)
+        flt.validate_fault_plan(self, merged)
+        self._fault_schedule = merged
+
+    def schedule_blade_kill(self, index: int, blade: int) -> None:
+        """Kill memory blade ``blade`` right before access ``index``:
+        quarantine it, re-home its vmas to surviving blades and account
+        dirty-page loss vs clean refetch (repro.core.faults)."""
+        self.schedule_fault_plan([flt.FaultEvent(index, flt.BLADE_KILL,
+                                                 blade)])
+
+    def schedule_blade_restore(self, index: int, blade: int) -> None:
+        """Revive a killed memory blade right before access ``index``."""
+        self.schedule_fault_plan([flt.FaultEvent(index, flt.BLADE_RESTORE,
+                                                 blade)])
+
+    def _fire_fault(self, ev, written_pages=None):
+        """Dispatch one scheduled fault (shared by both engines at the
+        exact access index) and record its report."""
+        if ev.kind == flt.SWITCH_KILL:
+            restored = self.kill_and_restore_switch(ev.target)
+            rep = flt.FaultReport(kind=flt.SWITCH_KILL, index=ev.index,
+                                  target=ev.target,
+                                  entries_restored=restored)
+        elif ev.kind == flt.BLADE_KILL:
+            rep = flt.kill_memory_blade(self, ev.index, ev.target,
+                                        written_pages or set())
+        else:
+            rep = flt.restore_memory_blade(self, ev.index, ev.target)
+        self.fault_reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------ #
     def run(self, trace: Trace, max_accesses: int | None = None) -> EmulationResult:
+        if self._fault_schedule:
+            n = (len(trace) if max_accesses is None
+                 else min(len(trace), max_accesses))
+            flt.validate_fault_plan(self, self._fault_schedule, n)
         if self.engine == "batched":
             return self.model.make_batched_engine(**self.engine_options).run(
                 trace, max_accesses
@@ -271,26 +354,34 @@ class DisaggregatedRack:
         nthreads = self.nb * self.tpb
         clocks = np.zeros(nthreads)
         breakdown = {"fetch": 0.0, "invalidation": 0.0, "tlb": 0.0, "queue": 0.0,
-                     "switch": 0.0, "local": 0.0, "software": 0.0}
+                     "switch": 0.0, "local": 0.0, "software": 0.0,
+                     "retry": 0.0}
         trans_lat: dict[str, list[float]] = {}
         dir_timeline: list[int] = []
         n = len(trace) if max_accesses is None else min(len(trace), max_accesses)
         next_epoch_at = self.epoch_us
         rec = self.telemetry.recorder if self.telemetry is not None else None
+        sched = self._fault_schedule
+        # Blade-kill accounting needs the written-page prefix at the
+        # fire index; track it only when the schedule can consume it.
+        track_writes = any(ev.kind == flt.BLADE_KILL for ev in sched)
+        written: set[int] = set()
 
         for i in range(n):
             if rec is not None:
                 rec.cur_index = i
-            if self._kill_at is not None and i == self._kill_at[0]:
-                self.kill_and_restore_switch(self._kill_at[1])
-                self._kill_at = None
+            while sched and sched[0].index == i:
+                self._fire_fault(sched.pop(0), written_pages=written)
             t = int(trace.threads[i]) % nthreads
             blade = t // self.tpb
             vaddr = self._to_vaddr(segs, int(trace.offsets[i]))
             is_write = bool(trace.ops[i])
+            self._cur_access = i
             us = self.model.scalar_access(blade, vaddr, is_write, breakdown,
                                           trans_lat)
             clocks[t] += us
+            if track_writes and is_write:
+                written.add(vaddr & ~(PAGE_SIZE - 1))
 
             # Epoch boundary: driven by emulated time (mean thread clock).
             if self.epoch_driver_enabled and clocks.mean() >= next_epoch_at:
@@ -316,6 +407,7 @@ class DisaggregatedRack:
             engine="scalar",
             rebalance_reports=list(self.cp.rebalance_reports),
             telemetry=self.telemetry,
+            fault_reports=list(self.fault_reports),
         )
 
     # ------------------------------------------------------------------ #
@@ -431,10 +523,11 @@ class ShardedRack(DisaggregatedRack):
         """Kill switch ``shard`` right before trace access ``index`` is
         issued, restoring it from ``ControlPlane.snapshot(shard=...)``.
         Both engines honour the exact index (the batched engine clamps
-        its chunks so none straddles the kill point)."""
-        assert 0 <= shard < self.num_shards
-        assert index >= 0
-        self._kill_at = (index, shard)
+        its chunks so none straddles the kill point).  Repeated kills
+        (and mixed blade faults) compose through the ordered fault
+        schedule; invalid entries raise ``ValueError``."""
+        self.schedule_fault_plan([flt.FaultEvent(index, flt.SWITCH_KILL,
+                                                 shard)])
 
     def kill_and_restore_switch(self, shard: int) -> int:
         """The failure scenario itself: take the backup snapshot, lose

@@ -20,22 +20,30 @@ from repro.core.types import CoherenceActions, NetworkConstants, PAGE_SIZE
 
 @dataclass
 class LatencyBreakdown:
-    """Matches Fig. 8 (right): fetch / invalidation / TLB / queueing."""
+    """Matches Fig. 8 (right): fetch / invalidation / TLB / queueing.
+    ``retry_us`` is the lossy-fabric retransmission backoff
+    (:class:`repro.core.faults.FabricModel`); zero on a perfect fabric.
+    """
 
     fetch_us: float = 0.0
     invalidation_us: float = 0.0
     tlb_us: float = 0.0
     queue_us: float = 0.0
     switch_us: float = 0.0
+    retry_us: float = 0.0
 
     @property
     def total_us(self) -> float:
+        # Summation order is load-bearing: the batched engine rebuilds
+        # this exact left-to-right chain vectorized, and parity is
+        # bit-exact only if both engines round identically.
         return (
             self.fetch_us
             + self.invalidation_us
             + self.tlb_us
             + self.queue_us
             + self.switch_us
+            + self.retry_us
         )
 
 

@@ -37,11 +37,28 @@ class MindModel(SystemModel):
         )
         res = rack._route(blade, vaddr, req)
         lb = res.latency
+        fab = rack.fabric
+        fab_retries = 0
+        fab_timeout = False
+        if (fab is not None and res.acts.fault is None
+                and not (res.acts.hit_local
+                         and not res.acts.needed_invalidation)):
+            # Lossy fabric: every access that leaves the blade draws a
+            # deterministic retransmission schedule keyed on its global
+            # trace index (pure local hits and protection faults never
+            # cross the fabric; the batched engine applies the same
+            # mask).  The draw itself is the shared vectorized function,
+            # called here with a length-1 index.
+            k, to, cost = fab.draw(rack._cur_access)
+            fab_retries = int(k[0])
+            fab_timeout = bool(to[0])
+            lb.retry_us = float(cost[0])
         breakdown["fetch"] += lb.fetch_us
         breakdown["invalidation"] += lb.invalidation_us
         breakdown["tlb"] += lb.tlb_us
         breakdown["queue"] += lb.queue_us
         breakdown["switch"] += lb.switch_us
+        breakdown["retry"] += lb.retry_us
         if res.rec is not None:
             trans_lat.setdefault(res.rec.kind, []).append(lb.total_us)
         if self.pso and is_write and not res.acts.hit_local:
@@ -60,6 +77,12 @@ class MindModel(SystemModel):
                       hit=int(res.acts.hit_local), tkind=res.rec.kind, us=us)
             tel.observe_latency(lb.fetch_us, lb.invalidation_us, lb.tlb_us,
                                 lb.queue_us, lb.switch_us, us)
+            if fab_timeout or fab_retries:
+                tel.event(tev.TIMEOUT if fab_timeout else tev.RETRY,
+                          blade=blade, base=res.acts.region_base,
+                          log2=res.acts.region_size_log2,
+                          pages=fab_retries, us=lb.retry_us)
+                tel.observe_retry(lb.retry_us)
         return us
 
     def on_epoch(self, next_epoch_at, clocks, breakdown, dir_timeline):

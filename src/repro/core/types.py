@@ -242,3 +242,19 @@ class NetworkConstants:
     # link (§4.1 range partitioning extended across ASICs).  Single-
     # switch racks never charge it.
     switch_to_switch_us: float = 1.0
+    # Lossy/delayed fabric (repro.core.faults.FabricModel).  With
+    # fabric_loss_prob > 0, every access that crosses the fabric (not a
+    # pure local hit, not a protection fault) draws a deterministic
+    # geometric retransmission count from (fabric_seed, access index);
+    # each lost transmission waits one capped-exponential-backoff
+    # timeout (fabric_timeout_us * fabric_backoff**j, clamped to
+    # fabric_timeout_cap_us) and a draw past fabric_max_retries times
+    # out — charged the capped retries plus one final timeout while the
+    # control plane intervenes.  The cost lands in
+    # LatencyBreakdown.retry_us.  Defaults model a perfect fabric.
+    fabric_loss_prob: float = 0.0
+    fabric_timeout_us: float = 12.0
+    fabric_backoff: float = 2.0
+    fabric_timeout_cap_us: float = 96.0
+    fabric_max_retries: int = 5
+    fabric_seed: int = 0

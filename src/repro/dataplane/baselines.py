@@ -69,10 +69,11 @@ BASELINE_PHASES = (
     "state_writeback",  # directory / cache / LRU-order write-back
 )
 
-#: Breakdown keys the baseline systems can touch (same dict layout as
-#: the scalar loop, which zero-initialises all seven keys).
+#: Breakdown keys in the scalar loop's dict layout (which
+#: zero-initialises all of them; the baselines never charge "retry" —
+#: no in-network fabric — but the key rides along for dict equality).
 _BD_KEYS = ("fetch", "invalidation", "tlb", "queue", "switch", "local",
-            "software")
+            "software", "retry")
 
 
 def _seq_accumulate(vals: np.ndarray, init: float = 0.0) -> float:

@@ -119,6 +119,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core.types import PAGE_SHIFT, MSIState, next_pow2
 from repro.dataplane.scheduler import build_wave_schedule, partition_by_shard
 from repro.dataplane.tables import (
@@ -459,10 +460,15 @@ class BatchedDataPlane:
             self._drain_pending_host(state, int(np.flatnonzero(keep)[0]))
 
         stats = mmu.engine.stats
+        # Lossy fabric: one whole-trace draw of the counter-based hash —
+        # the identical float64 stream the scalar oracle reads one index
+        # at a time, so retry charges are bit-equal by construction.
+        self._fab = (rack.fabric.draw(np.arange(n, dtype=np.int64))
+                     if rack.fabric is not None else None)
         clocks = np.zeros(nthreads, np.float64)
         breakdown = {"fetch": 0.0, "invalidation": 0.0, "tlb": 0.0,
                      "queue": 0.0, "switch": 0.0, "local": 0.0,
-                     "software": 0.0}
+                     "software": 0.0, "retry": 0.0}
         trans_lat: dict[str, list[float]] = {}
         dir_timeline: list[int] = []
         # Queueing state lives in the shared NetworkModel so back-to-back
@@ -562,19 +568,25 @@ class BatchedDataPlane:
         lo = 0
         while lo < n:
             full = min(self.chunk_size, n - lo)
-            # Fault injection: never let a chunk straddle the scheduled
-            # switch-kill index; at the index itself, fire the kill and
-            # drop every cached view of the directory.
-            ka = rack._kill_at
-            if ka is not None:
-                if lo == ka[0]:
-                    rack.kill_and_restore_switch(ka[1])
-                    rack._kill_at = None
+            # Fault injection: never let a chunk straddle a scheduled
+            # fault index; at the index itself pin the recorder to it,
+            # fire the fault (with the written-page prefix for blade
+            # kills), and drop every cached view of the directory a
+            # switch kill invalidated.
+            sched = rack._fault_schedule
+            while sched and sched[0].index == lo:
+                fev = sched.pop(0)
+                if self._tel is not None:
+                    self._tel.cur_index = lo
+                wp = (flt.written_page_prefix(vaddrs, writes, lo)
+                      if fev.kind == flt.BLADE_KILL else None)
+                rack._fire_fault(fev, written_pages=wp)
+                if fev.kind == flt.SWITCH_KILL:
                     self._rt = None
                     self._dtab = None
                     self._row_of = {}
-                elif lo < ka[0]:
-                    full = min(full, ka[0] - lo)
+            if sched:
+                full = min(full, sched[0].index - lo)
             safe = (self._next_chunk_size(clocks, next_epoch_at, inflight)
                     if rack.epoch_driver_enabled else full)
             if safe >= full:
@@ -743,6 +755,7 @@ class BatchedDataPlane:
             cross_shard_accesses=int(self._cross_acc),
             rebalance_reports=list(rack.cp.rebalance_reports),
             telemetry=self._tel,
+            fault_reports=list(rack.fault_reports),
         )
 
     # ------------------------------------------------------------------ #
@@ -887,6 +900,10 @@ class BatchedDataPlane:
         c1 = (k.switch_pipeline_ns / 1000.0 + k.rdma_fetch_us
               + k.invalidation_us + k.tlb_shootdown_us
               + (k.switch_to_switch_us if self._sharded else 0.0))
+        if self.rack.fabric is not None:
+            # A lossy fabric can add up to the full exhausted-backoff
+            # cost per access; the no-speculation floor must absorb it.
+            c1 += self.rack.fabric.max_cost_us
         kq = k.queue_service_us
         q0 = float(inflight.max()) if len(inflight) else 0.0
         a = kq
@@ -1994,7 +2011,17 @@ class BatchedDataPlane:
         cross_hop = cross & ~pure_local
         lb_switch = np.where(pure_local, 0.0, k_switch) + np.where(
             cross_hop, k_s2s, 0.0)
-        total = lb_fetch + lb_inv + lb_tlb + lb_queue + lb_switch
+        # Lossy-fabric retransmission charge: pure local hits never
+        # leave the blade; faults never reach this path (filtered by
+        # `keep`).  Same trailing position in the sum as
+        # LatencyBreakdown.total_us — the order is load-bearing for
+        # float-exact parity.
+        if self._fab is not None:
+            lb_retry = np.where(pure_local, 0.0, self._fab[2][gidx])
+        else:
+            lb_retry = np.zeros(len(hit))
+        total = (lb_fetch + lb_inv + lb_tlb + lb_queue + lb_switch
+                 + lb_retry)
         if pso:
             charged = np.where(
                 (write == 1) & ~hit, k_switch + lb_queue, total)
@@ -2009,6 +2036,7 @@ class BatchedDataPlane:
             breakdown["tlb"] += float(lb_tlb.sum())
             breakdown["queue"] += float(lb_queue.sum())
             breakdown["switch"] += float(lb_switch.sum())
+            breakdown["retry"] += float(lb_retry.sum())
             inflight[:] = inflight + ind.sum(axis=0).astype(np.int32)
             # Per-kind latency samples: arrays per chunk, flattened to
             # plain lists once at the end of run().
@@ -2023,7 +2051,7 @@ class BatchedDataPlane:
                                     nfalse_all[is_acc],
                                     flushed_all[is_acc],
                                     lb_fetch, lb_inv, lb_tlb, lb_queue,
-                                    lb_switch, kvec)
+                                    lb_switch, lb_retry, kvec)
 
         self._tick("latency_reconstruct", t0)
         if defer:
@@ -2038,7 +2066,7 @@ class BatchedDataPlane:
     def _commit_events(self, gidx, vaddr, blade, write, rt, rows, hit,
                        kind, invals, cross_hop, charged, drop_acc,
                        false_acc, flush_acc, lb_fetch, lb_inv, lb_tlb,
-                       lb_queue, lb_switch, kvec):
+                       lb_queue, lb_switch, lb_retry, kvec):
         """Emit one committed chunk's per-access telemetry: the ACCESS
         stream, per-access invalidation/downgrade multicasts (plus their
         write-backs), cross-shard hops, and the latency histograms —
@@ -2053,6 +2081,15 @@ class BatchedDataPlane:
         ncross = int(cross_hop.sum())
         if ncross:
             tel.observe_cross_shard_many(np.full(ncross, kvec[6]))
+        if self._fab is not None:
+            rmask = lb_retry > 0.0
+            if rmask.any():
+                tel.observe_retry_many(lb_retry[rmask])
+            rk = self._fab[0][gidx].tolist()
+            rto = self._fab[1][gidx].tolist()
+            rus = lb_retry.tolist()
+        else:
+            rus = None
         home = (self._smap.home_of_batch(vaddr).tolist()
                 if self._sharded else None)
         gi = gidx.tolist()
@@ -2084,3 +2121,7 @@ class BatchedDataPlane:
             ev(tev.ACCESS, index=gi[j], blade=bl[j], base=rb[j],
                log2=rl[j], write=wr[j], hit=int(ht[j]),
                tkind=_KINDS[kd[j]], us=ch[j])
+            if rus is not None and rus[j] > 0.0:
+                ev(tev.TIMEOUT if rto[j] else tev.RETRY, index=gi[j],
+                   blade=bl[j], base=rb[j], log2=rl[j], pages=int(rk[j]),
+                   us=rus[j])

@@ -24,14 +24,16 @@ from __future__ import annotations
 
 from . import events as ev
 from .events import EVENT_KINDS, NON_PARITY_KINDS, Event, canonical
+from .invariants import CoherenceInvariantError, Violation, check_invariants
 from .metrics import HIST_EDGES, Histogram, MetricsRegistry
 from .recorder import DEFAULT_CAPACITY, FlightRecorder
 
 #: Latency components sampled into the ``access_latency_us`` histogram
 #: family.  Every access samples every component (zeros included) except
-#: ``cross_shard``, which is sampled only by accesses that paid the hop.
+#: ``cross_shard`` and ``retry``, which are sampled only by accesses
+#: that paid the hop / a fabric retransmission.
 LATENCY_COMPONENTS = ("fetch", "invalidation", "tlb", "queue", "switch",
-                      "cross_shard", "total")
+                      "cross_shard", "retry", "total")
 
 
 class Telemetry:
@@ -114,6 +116,20 @@ class Telemetry:
             m.inc("rebalance_migrated_entries_total", e.pages, shard=e.targets)
         elif k == ev.SPEC_ROLLBACK:
             m.inc("speculation_rollbacks_total")
+        elif k == ev.RETRY:
+            m.inc("fabric_retries_total", e.pages, blade=e.blade)
+        elif k == ev.TIMEOUT:
+            m.inc("fabric_retries_total", e.pages, blade=e.blade)
+            m.inc("fabric_timeouts_total", blade=e.blade)
+        elif k == ev.BLADE_KILL:
+            m.inc("blade_kills_total", blade=e.blade)
+            if e.pages:
+                m.inc("pages_dirty_lost_total", e.pages, blade=e.blade)
+        elif k == ev.BLADE_RESTORE:
+            m.inc("blade_restores_total", blade=e.blade)
+        elif k == ev.REMAP:
+            m.inc("remapped_vmas_total", blade=e.blade)
+            m.inc("remapped_pages_total", e.pages, blade=e.blade)
 
     # -- latency histograms -------------------------------------------- #
     def observe_latency(self, fetch, invalidation, tlb, queue, switch,
@@ -144,6 +160,13 @@ class Telemetry:
         self.metrics.observe_many("access_latency_us", us,
                                   component="cross_shard")
 
+    def observe_retry(self, us) -> None:
+        self.metrics.observe("access_latency_us", us, component="retry")
+
+    def observe_retry_many(self, us) -> None:
+        self.metrics.observe_many("access_latency_us", us,
+                                  component="retry")
+
     # -- speculative-chunk undo ---------------------------------------- #
     def state_mark(self):
         return (self.recorder.mark(), self.metrics.state())
@@ -157,4 +180,5 @@ __all__ = [
     "Telemetry", "Event", "FlightRecorder", "MetricsRegistry", "Histogram",
     "EVENT_KINDS", "NON_PARITY_KINDS", "LATENCY_COMPONENTS", "HIST_EDGES",
     "DEFAULT_CAPACITY", "canonical", "ev",
+    "check_invariants", "Violation", "CoherenceInvariantError",
 ]

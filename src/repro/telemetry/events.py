@@ -29,6 +29,19 @@ kind                      fields used (beyond ``kind``/``index``)
                           entries migrated), us (charged migration latency)
 ``spec_rollback``         index (chunk start), pages (accesses discarded);
                           batched engine only — excluded from parity
+``retry``                 blade, base, log2 (region), pages (retransmit
+                          count), us (charged backoff cost)
+``timeout``               like ``retry`` but the retry budget was exhausted
+                          (pages == fabric_max_retries); us includes the
+                          final timeout-cap penalty
+``blade_kill``            blade (killed memory blade), targets (regions
+                          quarantined), pages (dirty pages lost), flushed
+                          (dirty pages preserved at M-state owners),
+                          false_pages (dirty refetched, durable mode)
+``blade_restore``         blade (revived memory blade)
+``remap``                 blade (destination blade), targets (dead source
+                          blade), base/log2 (re-homed vma), pages (vma
+                          pages)
 ========================  =====================================================
 
 ``index`` is the global trace access index active when the event was
@@ -54,11 +67,17 @@ XS_HOP = "xs_hop"
 EPOCH = "epoch"
 REBALANCE = "rebalance"
 SPEC_ROLLBACK = "spec_rollback"
+RETRY = "retry"
+TIMEOUT = "timeout"
+BLADE_KILL = "blade_kill"
+BLADE_RESTORE = "blade_restore"
+REMAP = "remap"
 
 EVENT_KINDS = (
     ACCESS, INVALIDATE, DOWNGRADE, WRITEBACK, DIR_INSTALL, DIR_EVICT,
     CACHE_EVICT_CLEAN, CACHE_EVICT_DIRTY, REGION_SPLIT, REGION_MERGE,
     XS_HOP, EPOCH, REBALANCE, SPEC_ROLLBACK,
+    RETRY, TIMEOUT, BLADE_KILL, BLADE_RESTORE, REMAP,
 )
 
 #: Kinds that only one engine can produce; dropped before parity diffs.

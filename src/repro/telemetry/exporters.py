@@ -25,7 +25,11 @@ from . import events as ev
 _INSTANT_KINDS = {
     ev.INVALIDATE, ev.DOWNGRADE, ev.WRITEBACK, ev.DIR_INSTALL, ev.DIR_EVICT,
     ev.CACHE_EVICT_CLEAN, ev.CACHE_EVICT_DIRTY, ev.XS_HOP,
+    ev.RETRY, ev.TIMEOUT,
 }
+
+# Fault-plane control events render on the control-plane track.
+_FAULT_KINDS = {ev.BLADE_KILL, ev.BLADE_RESTORE, ev.REMAP}
 
 
 def to_perfetto(telemetry, label: str = "repro") -> dict:
@@ -84,6 +88,14 @@ def to_perfetto(telemetry, label: str = "repro") -> dict:
             out.append({"ph": "C", "name": "directory_entries", "pid": ctrl,
                         "ts": ts, "args": {"entries": e.pages}})
             epoch_start = ts
+        elif e.kind in _FAULT_KINDS:
+            out.append({
+                "ph": "i", "s": "p", "name": e.kind, "cat": "fault",
+                "pid": ctrl, "tid": 0, "ts": ts,
+                "args": {"index": e.index, "blade": e.blade, "base": e.base,
+                         "targets": e.targets, "pages": e.pages,
+                         "flushed": e.flushed},
+            })
         elif e.kind in (ev.REGION_SPLIT, ev.REGION_MERGE):
             out.append({
                 "ph": "i", "s": "p", "name": e.kind, "cat": "control",

@@ -1,0 +1,552 @@
+"""Fault plane (ISSUE 9): blade failures, lossy fabric, invariants.
+
+Pins the tentpole contracts:
+
+* fault schedules are loudly validated (``ValueError`` naming the
+  offending entry) and generalize the old single-shot switch kill;
+* a blade kill/restore replay converges *exactly* (stats, runtime,
+  breakdown) to the fault-free run on both engines — data loss is
+  accounted in :class:`~repro.core.faults.FaultReport`, never simulated
+  as corruption;
+* the lossy fabric's retry/backoff draw is a pure function of
+  ``(fabric_seed, access index)`` shared by both engines, so lossy
+  replays are byte-identical scalar vs batched;
+* :func:`repro.telemetry.check_invariants` passes every parity regime
+  and catches a deliberately corrupted stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core.traces as T
+from repro.core import faults as flt
+from repro.core.emulator import DisaggregatedRack, ShardedRack
+from repro.core.types import NetworkConstants
+from repro.telemetry import (
+    CoherenceInvariantError,
+    Telemetry,
+    canonical,
+    check_invariants,
+)
+from repro.telemetry.events import (
+    ACCESS,
+    BLADE_KILL,
+    BLADE_RESTORE,
+    DOWNGRADE,
+    INVALIDATE,
+    REMAP,
+    RETRY,
+    TIMEOUT,
+    WRITEBACK,
+    Event,
+)
+
+LOSSY = dict(fabric_loss_prob=0.25, fabric_timeout_us=12.0,
+             fabric_backoff=2.0, fabric_timeout_cap_us=96.0,
+             fabric_max_retries=3, fabric_seed=11)
+
+_KW = dict(num_compute_blades=2, threads_per_blade=2,
+           splitting_enabled=False)
+
+
+def _trace(n=250, seed=3):
+    return T.tf_trace(num_threads=4, accesses_per_thread=n, seed=seed)
+
+
+def _rack(engine="scalar", system="mind", sharded=False, constants=None,
+          **kw):
+    kw = {**_KW, **kw}
+    if sharded:
+        return ShardedRack(num_shards=2, system=system, engine=engine,
+                           constants=constants, telemetry=Telemetry(),
+                           **kw)
+    return DisaggregatedRack(system=system, engine=engine,
+                             constants=constants, telemetry=Telemetry(),
+                             **kw)
+
+
+def _assert_identical(a, b, ctx=""):
+    assert a.stats == b.stats, ctx
+    assert a.runtime_us == b.runtime_us, ctx
+    assert a.total_thread_us == b.total_thread_us, ctx
+    for key in a.latency_breakdown_us:
+        np.testing.assert_allclose(
+            a.latency_breakdown_us[key], b.latency_breakdown_us[key],
+            rtol=1e-9, err_msg=f"{ctx} breakdown[{key}]")
+
+
+def _assert_event_parity(a, b):
+    ea = [e.key() for e in canonical(a.telemetry.recorder.events)]
+    eb = [e.key() for e in canonical(b.telemetry.recorder.events)]
+    assert ea == eb
+
+
+# --------------------------------------------------------------------- #
+# FabricModel: the deterministic retry/backoff draw.
+# --------------------------------------------------------------------- #
+def test_fabric_draw_scalar_and_vectorized_agree_bitwise():
+    fab = flt.FabricModel(NetworkConstants(**LOSSY))
+    n = 4096
+    k_all, to_all, cost_all = fab.draw(np.arange(n))
+    for i in (0, 1, 17, 999, n - 1):
+        k1, to1, c1 = fab.draw(i)
+        assert k1[0] == k_all[i]
+        assert to1[0] == to_all[i]
+        assert c1[0] == cost_all[i]  # bit-equal, not approximately
+
+
+def test_fabric_draw_is_seed_dependent():
+    a = flt.FabricModel(NetworkConstants(**LOSSY))
+    b = flt.FabricModel(NetworkConstants(**{**LOSSY, "fabric_seed": 12}))
+    _, _, ca = a.draw(np.arange(512))
+    _, _, cb = b.draw(np.arange(512))
+    assert (ca != cb).any()
+
+
+def test_fabric_costs_follow_capped_backoff_table():
+    k = NetworkConstants(**LOSSY)
+    fab = flt.FabricModel(k)
+    # cum[j] = sum of min(timeout * backoff^i, cap) for i < j
+    delays = [min(k.fabric_timeout_us * k.fabric_backoff ** i,
+                  k.fabric_timeout_cap_us)
+              for i in range(k.fabric_max_retries)]
+    kk, to, cost = fab.draw(np.arange(20000))
+    assert int(kk.max()) <= k.fabric_max_retries
+    assert to.any() and (~to).any()  # both outcomes at 25% loss
+    expect = np.cumsum([0.0] + delays)[kk] \
+        + np.where(to, k.fabric_timeout_cap_us, 0.0)
+    np.testing.assert_array_equal(cost, expect)
+    assert cost.max() <= fab.max_cost_us
+
+
+def test_fabric_constants_validated():
+    with pytest.raises(ValueError, match="fabric_loss_prob"):
+        flt.FabricModel(NetworkConstants(**{**LOSSY,
+                                            "fabric_loss_prob": 1.5}))
+    with pytest.raises(ValueError, match="fabric_max_retries"):
+        flt.FabricModel(NetworkConstants(**{**LOSSY,
+                                            "fabric_max_retries": 0}))
+
+
+@pytest.mark.parametrize("system", ["gam", "fastswap"])
+def test_lossy_fabric_refused_without_switch(system):
+    with pytest.raises(ValueError, match="no switch"):
+        DisaggregatedRack(system=system, num_compute_blades=2,
+                          threads_per_blade=2,
+                          constants=NetworkConstants(**LOSSY))
+
+
+# --------------------------------------------------------------------- #
+# Fault-schedule validation: loud, naming the offending entry.
+# --------------------------------------------------------------------- #
+def test_schedule_rejects_unknown_kind():
+    r = _rack()
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        r.schedule_fault_plan([flt.FaultEvent(5, "meteor_strike", 0)])
+
+
+def test_schedule_rejects_negative_index():
+    r = _rack()
+    with pytest.raises(ValueError, match="negative access index"):
+        r.schedule_blade_kill(-3, 0)
+
+
+def test_run_rejects_out_of_range_index():
+    r = _rack()
+    tr = _trace(n=10)  # 40 accesses
+    r.schedule_blade_kill(len(tr) + 5, 0)
+    with pytest.raises(ValueError, match="access index out of range"):
+        r.run(tr)
+
+
+def test_schedule_rejects_unknown_blade():
+    r = _rack()
+    with pytest.raises(ValueError, match="unknown memory blade"):
+        r.schedule_blade_kill(5, 99)
+
+
+def test_schedule_rejects_switch_kill_on_unsharded_rack():
+    r = _rack()
+    with pytest.raises(ValueError, match="sharded rack"):
+        r.schedule_fault_plan([flt.FaultEvent(5, flt.SWITCH_KILL, 0)])
+
+
+def test_schedule_rejects_overlapping_events():
+    r = _rack()
+    r.schedule_blade_kill(5, 0)
+    with pytest.raises(ValueError, match="overlapping fault events"):
+        r.schedule_blade_restore(5, 0)
+
+
+def test_schedule_rejects_double_kill():
+    r = _rack()
+    r.schedule_blade_kill(5, 0)
+    with pytest.raises(ValueError, match="already dead"):
+        r.schedule_blade_kill(9, 0)
+
+
+def test_schedule_rejects_restore_of_alive_blade():
+    r = _rack()
+    with pytest.raises(ValueError, match="is alive"):
+        r.schedule_blade_restore(5, 0)
+
+
+def test_schedule_rejects_quarantining_every_blade():
+    r = _rack(num_memory_blades=2)
+    r.schedule_blade_kill(5, 0)
+    with pytest.raises(ValueError, match="every memory blade"):
+        r.schedule_blade_kill(9, 1)
+
+
+def test_schedule_rejects_faults_on_switchless_system():
+    r = _rack(system="gam")
+    with pytest.raises(ValueError, match="no switch"):
+        r.schedule_blade_kill(5, 0)
+
+
+def test_error_names_the_offending_entry():
+    r = _rack()
+    with pytest.raises(ValueError, match=r"blade_kill\(index=5, target=99\)"):
+        r.schedule_blade_kill(5, 99)
+
+
+# --------------------------------------------------------------------- #
+# Blade kill/restore: exact convergence + accounted loss.
+# --------------------------------------------------------------------- #
+def _kill_plan(n):
+    return [flt.FaultEvent(n // 4, flt.BLADE_KILL, 0),
+            flt.FaultEvent(n // 2, flt.BLADE_RESTORE, 0),
+            flt.FaultEvent(3 * n // 4, flt.BLADE_KILL, 1)]
+
+
+@pytest.mark.parametrize("engine", ["scalar", "batched"])
+@pytest.mark.parametrize("durable", [False, True])
+def test_blade_kill_replay_converges_exactly(engine, durable):
+    tr = _trace()
+    base = _rack(engine).run(tr)
+    r = _rack(engine, durable_writebacks=durable)
+    r.schedule_fault_plan(_kill_plan(len(tr)))
+    faulted = r.run(tr)
+    _assert_identical(base, faulted, f"{engine}/durable={durable}")
+    assert [f.kind for f in faulted.fault_reports] == \
+        [flt.BLADE_KILL, flt.BLADE_RESTORE, flt.BLADE_KILL]
+
+
+def test_blade_kill_fault_reports_match_across_engines():
+    tr = _trace()
+    res = {}
+    for engine in ("scalar", "batched"):
+        r = _rack(engine)
+        r.schedule_fault_plan(_kill_plan(len(tr)))
+        res[engine] = r.run(tr)
+    _assert_identical(res["scalar"], res["batched"], "kill parity")
+    _assert_event_parity(res["scalar"], res["batched"])
+    assert res["scalar"].fault_reports == res["batched"].fault_reports
+
+
+def _blade_written_before(res, rack, upto):
+    """written-region counts per memory blade from the ACCESS stream."""
+    spans = {b: (s.va_base, s.va_end)
+             for b, s in rack.mmu.gas.blades.items()}
+    counts = dict.fromkeys(spans, 0)
+    for e in res.telemetry.recorder.events:
+        if e.kind == ACCESS and e.write == 1 and 0 <= e.index < upto:
+            for b, (lo, hi) in spans.items():
+                if lo <= e.base < hi:
+                    counts[b] += 1
+                    break
+    return counts
+
+
+@pytest.mark.parametrize("durable", [False, True])
+def test_blade_kill_accounts_dirty_pages(durable):
+    """Kill the most-written blade mid-trace: written pages classify
+    exhaustively into preserved / lost-or-refetched, and durable
+    write-backs turn every loss into a refetch."""
+    tr = _trace()
+    probe = _rack()
+    res = probe.run(tr)
+    kill_at = len(tr) // 2
+    counts = _blade_written_before(res, probe, kill_at)
+    blade = max(counts, key=counts.get)
+    assert counts[blade] > 0, "trace writes nothing? pick another seed"
+
+    r = _rack(durable_writebacks=durable)
+    r.schedule_blade_kill(kill_at, blade)
+    rep = r.run(tr).fault_reports[0]
+    assert rep.pages_written > 0
+    assert rep.pages_written == (rep.pages_dirty_preserved
+                                 + rep.pages_dirty_lost
+                                 + rep.pages_dirty_refetched)
+    if durable:
+        assert rep.pages_dirty_lost == 0
+    else:
+        assert rep.pages_dirty_refetched == 0
+    assert rep.vmas_remapped > 0 and rep.bytes_remapped > 0
+
+
+def test_back_to_back_kill_restore_cycles():
+    """The satellite pin: the generalized schedule handles tight
+    repeated cycles the old single-shot ``_kill_at`` could not."""
+    tr = _trace()
+    plan = []
+    for c, i in enumerate(range(100, 112, 2)):
+        plan += [flt.FaultEvent(i, flt.BLADE_KILL, c % 2),
+                 flt.FaultEvent(i + 1, flt.BLADE_RESTORE, c % 2)]
+    res = {}
+    for engine in ("scalar", "batched"):
+        r = _rack(engine)
+        r.schedule_fault_plan(plan)
+        res[engine] = r.run(tr)
+        assert len(res[engine].fault_reports) == len(plan)
+    base = _rack().run(tr)
+    _assert_identical(base, res["scalar"], "cycles converge")
+    _assert_identical(res["scalar"], res["batched"], "cycles parity")
+    assert res["scalar"].fault_reports == res["batched"].fault_reports
+
+
+def test_blade_fault_events_reach_the_recorder():
+    tr = _trace()
+    r = _rack()
+    r.schedule_fault_plan(_kill_plan(len(tr)))
+    res = r.run(tr)
+    kinds = [e.kind for e in res.telemetry.recorder.events
+             if e.kind in (BLADE_KILL, BLADE_RESTORE, REMAP)]
+    assert kinds.count(BLADE_KILL) == 2
+    assert kinds.count(BLADE_RESTORE) == 1
+    assert kinds.count(REMAP) == sum(
+        f.vmas_remapped for f in res.fault_reports)
+    m = res.telemetry.metrics
+    assert m.total("blade_kills_total") == 2
+    assert m.total("blade_restores_total") == 1
+    assert m.total("remapped_vmas_total") == kinds.count(REMAP)
+
+
+def test_killed_blade_excluded_from_placement():
+    r = _rack()
+    r.allocator.dead.add(0)
+    from repro.core.types import Perm
+    vma = r.cp.sys_mmap(2, 1 << 20, Perm.RW, requesting_blade=0).vma
+    assert vma.blade_id != 0
+
+
+# --------------------------------------------------------------------- #
+# Lossy fabric: byte-identical scalar vs batched replays.
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("system", ["mind", "mind-pso", "mind-pso+"])
+def test_lossy_fabric_parity(system):
+    tr = _trace()
+    k = NetworkConstants(**LOSSY)
+    rs = _rack("scalar", system=system, constants=k).run(tr)
+    rb = _rack("batched", system=system, constants=k).run(tr)
+    _assert_identical(rs, rb, system)
+    _assert_event_parity(rs, rb)
+    assert rs.latency_breakdown_us["retry"] > 0.0
+
+
+def test_lossy_fabric_parity_under_directory_pressure():
+    tr = _trace()
+    k = NetworkConstants(**LOSSY)
+    rs = _rack("scalar", constants=k, max_directory_entries=120).run(tr)
+    rb = _rack("batched", constants=k, max_directory_entries=120).run(tr)
+    _assert_identical(rs, rb, "dir pressure")
+    _assert_event_parity(rs, rb)
+    tos = [e for e in rs.telemetry.recorder.events if e.kind == TIMEOUT]
+    assert tos, "25% loss over a chatty trace should exhaust a budget"
+
+
+def test_lossy_fabric_parity_on_sharded_rack():
+    tr = T.sharded_conflict_trace(num_threads=4, accesses_per_thread=250,
+                                  num_shards=4, blocks_per_shard=2, seed=9)
+    k = NetworkConstants(**LOSSY)
+    rs = _rack("scalar", sharded=True, constants=k).run(tr)
+    rb = _rack("batched", sharded=True, constants=k).run(tr)
+    _assert_identical(rs, rb, "sharded lossy")
+    _assert_event_parity(rs, rb)
+
+
+def test_retry_events_match_breakdown_charge():
+    tr = _trace()
+    res = _rack(constants=NetworkConstants(**LOSSY)).run(tr)
+    evs = [e for e in res.telemetry.recorder.events
+           if e.kind in (RETRY, TIMEOUT)]
+    assert evs
+    np.testing.assert_allclose(sum(e.us for e in evs),
+                               res.latency_breakdown_us["retry"],
+                               rtol=1e-9)
+    m = res.telemetry.metrics
+    assert m.total("fabric_retries_total") == sum(e.pages for e in evs)
+    assert m.total("fabric_timeouts_total") == sum(
+        1 for e in evs if e.kind == TIMEOUT)
+
+
+def test_pure_local_hits_never_pay_the_fabric():
+    """A single-thread run on one region: after the first fetch, every
+    access is a pure local hit and the retry charge stays flat."""
+    tr = T.uniform_trace(num_threads=1, read_ratio=1.0, sharing_ratio=1.0,
+                         accesses_per_thread=200, working_set_pages=8,
+                         seed=5)
+    res = _rack(num_compute_blades=1, threads_per_blade=1,
+                constants=NetworkConstants(**LOSSY)).run(tr)
+    nret = sum(1 for e in res.telemetry.recorder.events
+               if e.kind in (RETRY, TIMEOUT))
+    # Only the non-hit prefix (cold fetches) can draw retransmissions.
+    assert nret <= res.stats.remote_fetches
+
+
+def test_lossless_fabric_charges_nothing():
+    tr = _trace()
+    base = _rack().run(tr)
+    res = _rack(constants=NetworkConstants()).run(tr)
+    assert res.latency_breakdown_us["retry"] == 0.0
+    assert res.runtime_us == base.runtime_us
+
+
+# --------------------------------------------------------------------- #
+# Chaos: faults + lossy fabric together, both engines.
+# --------------------------------------------------------------------- #
+def test_chaos_faults_and_fabric_together():
+    tr = _trace()
+    k = NetworkConstants(**LOSSY)
+    res = {}
+    for engine in ("scalar", "batched"):
+        r = _rack(engine, constants=k)
+        r.schedule_fault_plan(_kill_plan(len(tr)))
+        res[engine] = r.run(tr)
+    _assert_identical(res["scalar"], res["batched"], "chaos")
+    _assert_event_parity(res["scalar"], res["batched"])
+    assert res["scalar"].fault_reports == res["batched"].fault_reports
+    assert check_invariants(res["scalar"].telemetry) == []
+    assert check_invariants(res["batched"].telemetry) == []
+
+
+# --------------------------------------------------------------------- #
+# Coherence invariant checker.
+# --------------------------------------------------------------------- #
+_REGIMES = {
+    "plain": dict(),
+    "pso": dict(system="mind-pso"),
+    "dir_pressure": dict(max_directory_entries=120),
+    "cache_pressure": dict(cache_bytes_per_blade=1 << 14),
+    "epochs": dict(splitting_enabled=True, epoch_us=4000.0),
+    "sharded": dict(sharded=True),
+}
+
+
+@pytest.mark.parametrize("regime", sorted(_REGIMES))
+@pytest.mark.parametrize("engine", ["scalar", "batched"])
+def test_invariants_clean_on_parity_regimes(regime, engine):
+    kw = dict(_REGIMES[regime])
+    sharded = kw.pop("sharded", False)
+    tr = (T.sharded_conflict_trace(num_threads=4, accesses_per_thread=250,
+                                   num_shards=4, blocks_per_shard=2,
+                                   seed=9)
+          if sharded else _trace())
+    res = _rack(engine, sharded=sharded, **kw).run(tr)
+    assert check_invariants(res.telemetry) == []
+
+
+def test_invariants_catch_corrupted_stream():
+    """The pinned negative test: flip one transition kind in a real
+    stream and the checker names the exact index and rule."""
+    tr = T.uniform_trace(num_threads=4, read_ratio=0.5, sharing_ratio=0.8,
+                         accesses_per_thread=250, working_set_pages=64,
+                         seed=5)
+    res = _rack().run(tr)
+    evs = list(res.telemetry.recorder.events)
+    post = {}  # base -> shadow state after its last access
+    for i, e in enumerate(evs):
+        if e.kind != ACCESS or not e.tkind or "->" not in e.tkind:
+            continue
+        known = post.get(e.base)
+        if known in ("M", "S"):  # shadow state is pinned: contradict it
+            lie = "S" if known == "M" else "M"
+            evs[i] = dataclasses.replace(e, tkind=f"{lie}->{lie}")
+            break
+        post[e.base] = e.tkind.split("->")[1]
+    else:
+        pytest.fail("no revisited region to corrupt")
+    v = check_invariants(evs)
+    assert v and v[0].rule == "state-machine"
+    assert v[0].index == evs[i].index
+    with pytest.raises(CoherenceInvariantError, match="state-machine"):
+        check_invariants(evs, strict=True)
+
+
+def test_invariants_hit_from_invalid():
+    v = check_invariants([
+        Event(ACCESS, 0, blade=0, base=0, log2=14, write=0, hit=1,
+              tkind="I->S"),
+    ])
+    assert [x.rule for x in v] == ["hit-from-invalid"]
+
+
+def test_invariants_residency_and_swmr():
+    v = check_invariants([
+        Event(ACCESS, 0, blade=0, base=0, log2=14, write=1, hit=0,
+              tkind="I->M"),
+        # blade 1 "hits" a region blade 0 owns, with no invalidation.
+        Event(ACCESS, 1, blade=1, base=0, log2=14, write=0, hit=1,
+              tkind="M->S"),
+    ])
+    assert sorted(x.rule for x in v) == ["residency", "swmr"]
+
+
+def test_invariants_ownership_transfer_with_invalidate_is_clean():
+    v = check_invariants([
+        Event(ACCESS, 0, blade=0, base=0, log2=14, write=1, hit=0,
+              tkind="I->M"),
+        Event(INVALIDATE, 1, blade=1, base=0, log2=14, targets=0b1,
+              pages=1, flushed=0),
+        Event(ACCESS, 1, blade=1, base=0, log2=14, write=1, hit=0,
+              tkind="M->M"),
+    ])
+    assert v == []
+
+
+def test_invariants_lost_writeback():
+    stream = [
+        Event(ACCESS, 0, blade=0, base=0, log2=14, write=1, hit=0,
+              tkind="I->M"),
+        Event(INVALIDATE, 1, blade=1, base=0, log2=14, targets=0b1,
+              pages=4, flushed=4),
+        Event(ACCESS, 1, blade=1, base=0, log2=14, write=1, hit=0,
+              tkind="M->M"),
+    ]
+    v = check_invariants(stream)
+    assert [x.rule for x in v] == ["lost-writeback"]
+    stream.append(Event(WRITEBACK, 1, base=0, log2=14, pages=4))
+    assert check_invariants(stream) == []
+
+
+def test_invariants_downgrade_keeps_the_old_copy():
+    v = check_invariants([
+        Event(ACCESS, 0, blade=0, base=0, log2=14, write=1, hit=0,
+              tkind="I->M"),
+        Event(DOWNGRADE, 1, blade=1, base=0, log2=14, targets=0b1),
+        Event(ACCESS, 1, blade=1, base=0, log2=14, write=0, hit=0,
+              tkind="M->S"),
+        # blade 0 kept an S copy through the downgrade: hitting is legal.
+        Event(ACCESS, 2, blade=0, base=0, log2=14, write=0, hit=1,
+              tkind="S->S"),
+    ])
+    assert v == []
+
+
+def test_invariants_fault_sequencing():
+    v = check_invariants([
+        Event(BLADE_RESTORE, 3, blade=0),
+        Event(REMAP, 7, blade=1, targets=5, base=0, log2=14, pages=4),
+    ])
+    assert sorted(x.rule for x in v) == ["fault-sequence",
+                                        "fault-sequence"]
+    clean = check_invariants([
+        Event(REMAP, 3, blade=1, targets=0, base=0, log2=14, pages=4),
+        Event(BLADE_KILL, 3, blade=0, targets=2),
+        Event(BLADE_RESTORE, 9, blade=0),
+    ])
+    assert clean == []

@@ -31,6 +31,7 @@ import json
 import numpy as np
 import pytest
 
+from repro.core import faults as flt
 from repro.core import traces as T
 from repro.core.control_plane import ControlPlane
 from repro.core.emulator import DisaggregatedRack, ShardedRack
@@ -456,10 +457,60 @@ def test_switch_kill_scalar_batched_agree_after_restore():
 def test_schedule_switch_kill_validates_arguments():
     rack = ShardedRack(num_shards=2, system="mind", num_compute_blades=2,
                        threads_per_blade=2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="negative access index"):
         rack.schedule_switch_kill(-1, 0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="unknown shard"):
         rack.schedule_switch_kill(0, 2)
+
+
+def _plan_run(engine, plan):
+    rack = ShardedRack(num_shards=2, engine=engine, shard_slot_budgets=60,
+                       rebalance_threshold=1.5, **_kill_kw)
+    rack.schedule_fault_plan(plan)
+    trace = T.sharded_conflict_trace(num_threads=4, accesses_per_thread=500,
+                                     num_shards=4, blocks_per_shard=2, seed=9)
+    return rack.run(trace)
+
+
+@pytest.mark.parametrize("engine", ["scalar", "batched"])
+def test_repeated_switch_kill_cycles_converge(engine):
+    """The generalized fault schedule replaces the single-shot
+    ``_kill_at``: kill -> restore -> kill the same shard (and the other)
+    repeatedly, with the online rebalancer live, and the replay still
+    converges exactly to the uninterrupted run."""
+    plan = [flt.FaultEvent(100, flt.SWITCH_KILL, 0),
+            flt.FaultEvent(101, flt.SWITCH_KILL, 0),
+            flt.FaultEvent(750, flt.SWITCH_KILL, 1),
+            flt.FaultEvent(1400, flt.SWITCH_KILL, 0),
+            flt.FaultEvent(1999, flt.SWITCH_KILL, 1)]
+    base = _kill_run(engine)
+    killed = _plan_run(engine, plan)
+    _assert_stats_equal(base, killed, f"{engine} repeated kills")
+    _assert_timing_equal(base, killed, f"{engine} repeated kills")
+    assert killed.rebalance_reports == base.rebalance_reports
+    assert [f.kind for f in killed.fault_reports] == [flt.SWITCH_KILL] * 5
+    assert all(f.entries_restored >= 0 for f in killed.fault_reports)
+
+
+def test_mixed_blade_and_switch_faults_on_sharded_rack():
+    """Blade faults and switch failovers interleave in one schedule; the
+    two engines agree on stats, timing and the per-fault reports."""
+    plan = [flt.FaultEvent(200, flt.BLADE_KILL, 0),
+            flt.FaultEvent(600, flt.SWITCH_KILL, 1),
+            flt.FaultEvent(900, flt.BLADE_RESTORE, 0),
+            flt.FaultEvent(1300, flt.BLADE_KILL, 1),
+            flt.FaultEvent(1700, flt.SWITCH_KILL, 0)]
+    rs = _plan_run("scalar", plan)
+    rb = _plan_run("batched", plan)
+    _assert_stats_equal(rs, rb, "mixed faults parity")
+    _assert_timing_equal(rs, rb, "mixed faults parity")
+    assert rs.fault_reports == rb.fault_reports
+    assert [f.kind for f in rs.fault_reports] == [
+        flt.BLADE_KILL, flt.SWITCH_KILL, flt.BLADE_RESTORE,
+        flt.BLADE_KILL, flt.SWITCH_KILL]
+    base = _kill_run("scalar")
+    _assert_stats_equal(base, rs, "mixed faults converge")
+    _assert_timing_equal(base, rs, "mixed faults converge")
 
 
 # --------------------------------------------------------------------- #
