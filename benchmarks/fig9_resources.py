@@ -62,14 +62,21 @@ def match_action_entries():
     return rows
 
 
+def load_balance_mixes() -> dict:
+    """The Fig. 9 (right) allocation-size mixes, seeded — shared with
+    ``benchmarks/alloc_bench.py`` so the fit-policy comparison runs the
+    same fig9-style static cells."""
+    rng = np.random.default_rng(0)
+    return {
+        "TF-like": rng.choice([64 << 20, 256 << 20], 64),
+        "M-like": rng.choice([1 << 20, 4 << 20, 16 << 20], 400),
+    }
+
+
 def load_balance():
     """Fig. 9 (right): Jain's fairness of per-blade allocation."""
     rows = []
-    rng = np.random.default_rng(0)
-    for dist, sizes in {
-        "TF-like": rng.choice([64 << 20, 256 << 20], 64),
-        "M-like": rng.choice([1 << 20, 4 << 20, 16 << 20], 400),
-    }.items():
+    for dist, sizes in load_balance_mixes().items():
         gas = GlobalAddressSpace()
         for _ in range(8):
             gas.add_blade()

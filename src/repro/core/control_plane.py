@@ -312,6 +312,20 @@ class ControlPlane:
             ],
             "splitting": {"c": self.splitting.c, "epoch": self.splitting.epoch},
         }
+        if self.allocator.policy_name != "first_fit":
+            # Non-default fit policies carry their exact free structure:
+            # first-fit free lists are the unique complement of the live
+            # vmas (re-carving reproduces them, keeping default snapshots
+            # byte-identical to the seed format), but buddy split trees
+            # and segregated class arenas are NOT derivable from the vma
+            # set alone — a backup switch restoring without this state
+            # would make different future placement decisions.
+            state["alloc"] = {
+                "policy": self.allocator.policy_name,
+                "pow2_align": self.allocator.pow2_align,
+                "blades": {str(b): a.export_state()
+                           for b, a in self.allocator.blades.items()},
+            }
         if self.telemetry is not None:
             # Per-shard snapshots keep only the failed switch's slice of
             # the registry (counters labeled shard=k); the backup resumes
@@ -337,23 +351,44 @@ class ControlPlane:
         from repro.core.types import VMA as _VMA, Perm as _Perm
 
         state = json.loads(snapshot_json)
+        alloc_state = state.get("alloc")
         mmu, alloc = make_mmu(
             num_memory_blades=len(state["blades"]),
             num_compute_blades=num_compute_blades,
             cache_bytes_per_blade=cache_bytes_per_blade,
+            alloc_policy=(alloc_state["policy"] if alloc_state
+                          else "first_fit"),
         )
         cp = ControlPlane(mmu, alloc)
+        # Honour the snapshot's per-blade geometry: make_mmu builds
+        # full-span blades, but the failed switch may have managed
+        # smaller (or heterogeneous) capacities — a restored allocator
+        # with the wrong capacity silently makes different placement
+        # decisions under pressure.
+        from repro.core.allocator import BladeAllocator as _BA
+        from repro.core.types import BladeSpec as _BladeSpec
+
+        for b, s in state["blades"].items():
+            bid = int(b)
+            spec = mmu.gas.blades[bid]
+            if (spec.capacity, spec.va_base) != (s["capacity"], s["va_base"]):
+                mmu.gas.blades[bid] = _BladeSpec(bid, s["va_base"], s["capacity"])
+                alloc.blades[bid] = _BA(s["va_base"], s["capacity"],
+                                        alloc.policy_name)
+        if alloc_state:
+            # Non-default fit policy: load the serialized free structure
+            # bit-exactly, then register vmas without re-carving — the
+            # backup allocator re-carves exact ranges and makes the same
+            # future decisions the failed switch would have.
+            alloc.pow2_align = bool(alloc_state["pow2_align"])
+            for b, bs in alloc_state["blades"].items():
+                alloc.blades[int(b)].load_state(bs)
         for v in state["vmas"]:
             vma = _VMA(v["base"], v["length"], v["pdid"], _Perm(v["perm"]), v["blade_id"])
-            blade_alloc = alloc.blades[vma.blade_id]
-            got = blade_alloc.alloc(vma.length, 1)  # re-reserve exact range
-            # Re-reservation must land on the same base: first-fit over a
-            # fresh arena may not, so rebuild free lists directly instead.
-            if got != vma.base:
-                if got is not None:
-                    blade_alloc.free_range(got, vma.length)
-                _carve_exact(blade_alloc, vma.base, vma.length)
-            alloc.vmas[vma.base] = vma
+            # First-fit free lists are the unique sorted+coalesced
+            # complement of the vma set, so exact re-carving rebuilds
+            # them; policy-state snapshots already carry theirs.
+            alloc.register_vma(vma, carve=alloc_state is None)
             mmu.protection.grant_vma(vma)
         _install_snapshot_rows(mmu.engine, state["directory"])
         cp.splitting.c = state["splitting"]["c"]
@@ -415,18 +450,3 @@ def _install_snapshot_rows(engine: CoherenceEngine, rows: list[dict]) -> None:
         st = d.stats[key]
         st.false_invalidations = e.get("fic", 0)
         st.accesses = e.get("acc", 0)
-
-
-def _carve_exact(blade_alloc, base: int, length: int) -> None:
-    """Remove exactly [base, base+length) from a blade's free list."""
-    for i, blk in enumerate(list(blade_alloc.free)):
-        if blk.base <= base and base + length <= blk.end:
-            from repro.core.allocator import _FreeBlock
-
-            head = _FreeBlock(blk.base, base - blk.base)
-            tail = _FreeBlock(base + length, blk.end - (base + length))
-            repl = [b for b in (head, tail) if b.length > 0]
-            blade_alloc.free[i : i + 1] = repl
-            blade_alloc.allocated += length
-            return
-    raise ValueError(f"range {base:#x}+{length:#x} not free during restore")

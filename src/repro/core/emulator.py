@@ -158,6 +158,7 @@ class DisaggregatedRack:
         directory_eviction: str = "lru",
         telemetry=None,
         durable_writebacks: bool = False,
+        alloc_policy: str = "first_fit",
     ):
         assert system in SYSTEMS
         assert engine in ("scalar", "batched")
@@ -196,6 +197,7 @@ class DisaggregatedRack:
             max_region_log2=max_region_log2,
             downgrade_keeps_copy=downgrade_keeps_copy,
             directory_eviction=directory_eviction,
+            alloc_policy=alloc_policy,
         )
         if constants is not None:
             self.mmu.network = NetworkModel(constants)

@@ -213,8 +213,14 @@ def make_mmu(
     max_region_log2: int = 21,
     downgrade_keeps_copy: bool = False,
     directory_eviction: str = "lru",
+    alloc_policy: str = "first_fit",
+    blade_capacity: int | None = None,
 ):
-    """Convenience factory wiring a full single-switch MIND instance."""
+    """Convenience factory wiring a full single-switch MIND instance.
+
+    ``alloc_policy`` selects the per-blade fit policy
+    (repro.core.alloc_policies); ``blade_capacity`` shrinks each memory
+    blade below its full VA span (allocation-pressure benchmarks)."""
     from repro.core.allocator import MemoryAllocator
     from repro.core.cache import BladePageCache
     from repro.core.directory import CacheDirectory
@@ -222,8 +228,8 @@ def make_mmu(
 
     gas = GlobalAddressSpace()
     for _ in range(num_memory_blades):
-        gas.add_blade()
-    alloc = MemoryAllocator(gas)
+        gas.add_blade(blade_capacity)
+    alloc = MemoryAllocator(gas, policy=alloc_policy)
     prot = ProtectionTable()
     directory = CacheDirectory(
         max_region_log2=max_region_log2,

@@ -283,6 +283,109 @@ def sharded_conflict_trace(
                        shared_bytes, rng)
 
 
+# --------------------------------------------------------------------- #
+# Allocator churn workload (ISSUE 10): interleaved mmap/munmap streams
+# with skewed size distributions, replayed against the control-plane
+# allocator (not the coherence data plane) by benchmarks/alloc_bench.py
+# and tests/test_alloc_policies.py.
+# --------------------------------------------------------------------- #
+
+MMAP, MUNMAP = 0, 1
+
+# Size-class log2 weights are deliberately skewed (most heaps are mostly
+# small objects with a fat tail of big arenas — the fragmentation regime
+# the fit policies disagree on); ``free_frac`` steers churn intensity and
+# ``lifo_frac`` the lifetime skew (LIFO frees recreate stack-like arena
+# reuse, FIFO frees age the heap and maximize fragmentation pressure).
+CHURN_PROFILES = {
+    "small": dict(class_log2s=(12, 13, 14, 16), weights=(0.45, 0.30, 0.20, 0.05),
+                  free_frac=0.45, lifo_frac=0.70),
+    "mixed": dict(class_log2s=(12, 14, 17, 20, 23), weights=(0.30, 0.25, 0.25, 0.15, 0.05),
+                  free_frac=0.45, lifo_frac=0.40),
+    "large": dict(class_log2s=(16, 20, 22, 24), weights=(0.35, 0.30, 0.25, 0.10),
+                  free_frac=0.40, lifo_frac=0.20),
+}
+
+
+@dataclass
+class ChurnTrace:
+    """A seeded alloc/free event stream with per-pdid arenas.
+
+    ``kinds[i]`` is MMAP or MUNMAP; ``pdids[i]`` the protection domain
+    issuing the event; ``args[i]`` is the request size in bytes for
+    MMAP events and, for MUNMAP events, the *event index* of the MMAP
+    being released (the replayer maps it to the base that mmap
+    returned — bases are allocator-dependent, event indexes are not,
+    so one trace replays identically against every fit policy)."""
+
+    name: str
+    kinds: "np.ndarray"  # int8 [n]
+    pdids: "np.ndarray"  # int32 [n]
+    args: "np.ndarray"  # int64 [n]
+    num_pdids: int
+
+    def __len__(self) -> int:
+        return len(self.kinds)
+
+    def events(self):
+        """Iterate (event_index, kind, pdid, arg) tuples."""
+        for i in range(len(self.kinds)):
+            yield i, int(self.kinds[i]), int(self.pdids[i]), int(self.args[i])
+
+
+def alloc_churn_trace(
+    profile: str = "mixed",
+    num_events: int = 4_000,
+    num_pdids: int = 8,
+    exact_pow2_frac: float = 0.5,
+    seed: int = 11,
+) -> ChurnTrace:
+    """Generate a seeded mmap/munmap churn stream (ISSUE 10).
+
+    Each event picks a pdid; with probability ``free_frac`` (and a
+    non-empty arena somewhere) it releases a live allocation — LIFO
+    from its pdid's arena with probability ``lifo_frac``, else uniform
+    over that arena — otherwise it requests a size drawn from the
+    profile's skewed class distribution, jittered below the class size
+    with probability ``1 - exact_pow2_frac`` so non-pow2 rounding is
+    exercised.  Fully deterministic for identical arguments."""
+    p = CHURN_PROFILES[profile]
+    rng = np.random.default_rng(seed)
+    class_log2s = np.asarray(p["class_log2s"])
+    weights = np.asarray(p["weights"], dtype=float)
+    weights = weights / weights.sum()
+    live: dict[int, list[int]] = {pd: [] for pd in range(1, num_pdids + 1)}
+    kinds, pdids, args = [], [], []
+    for i in range(num_events):
+        pd = int(rng.integers(1, num_pdids + 1))
+        nonempty = sorted(k for k, v in live.items() if v)
+        if nonempty and rng.random() < p["free_frac"]:
+            if not live[pd]:
+                pd = nonempty[int(rng.integers(0, len(nonempty)))]
+            arena = live[pd]
+            j = (len(arena) - 1 if rng.random() < p["lifo_frac"]
+                 else int(rng.integers(0, len(arena))))
+            ev = arena.pop(j)
+            kinds.append(MUNMAP)
+            pdids.append(pd)
+            args.append(ev)
+        else:
+            cls = 1 << int(rng.choice(class_log2s, p=weights))
+            size = (cls if rng.random() < exact_pow2_frac
+                    else int(rng.integers(cls // 2 + 1, cls + 1)))
+            kinds.append(MMAP)
+            pdids.append(pd)
+            args.append(size)
+            live[pd].append(i)
+    return ChurnTrace(
+        name=f"churn({profile})",
+        kinds=np.asarray(kinds, np.int8),
+        pdids=np.asarray(pdids, np.int32),
+        args=np.asarray(args, np.int64),
+        num_pdids=num_pdids,
+    )
+
+
 def _interleave(name, ths, ops, offs, arena, shared_bytes, rng) -> Trace:
     th = np.concatenate(ths)
     op = np.concatenate(ops)

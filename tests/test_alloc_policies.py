@@ -1,0 +1,302 @@
+"""Pluggable fit policies (ISSUE 10): round-trip invariants for every
+policy, snapshot/restore re-carving, find_vma index, helper edge cases,
+and churn-trace determinism."""
+
+import json
+
+import pytest
+
+try:  # property tests need hypothesis (CI dev extra); the rest run bare
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare local installs
+    HAVE_HYPOTHESIS = False
+
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.alloc_policies import (
+    DEFAULT_POLICY, POLICIES, ceil_log2, make_policy)
+from repro.core.allocator import BladeAllocator, MemoryAllocator
+from repro.core.control_plane import ControlPlane
+from repro.core.switch import make_mmu
+from repro.core.traces import (
+    CHURN_PROFILES, MMAP, MUNMAP, alloc_churn_trace)
+from repro.core.types import PAGE_SIZE, Perm, align_up, next_pow2
+
+ALL_POLICIES = sorted(POLICIES)
+VA_BASE = 1 << 36
+CAPACITY = 1 << 26  # 64 MB — small enough that churn hits fragmentation
+
+
+def check_policy_books(policy, live):
+    """The invariants every fit policy must keep after every operation."""
+    blocks = policy.free_blocks()
+    # Sorted, coalesce-maximal (first_fit/buddy) or at least non-adjacent
+    # within a class isn't required — but non-overlapping and in-range is.
+    for (b0, l0), (b1, l1) in zip(blocks, blocks[1:]):
+        assert b0 + l0 <= b1, f"free blocks overlap/unsorted: {blocks}"
+    for b, l in blocks:
+        assert l > 0
+        assert VA_BASE <= b and b + l <= VA_BASE + CAPACITY
+    # Conservation: free + reserved == capacity, reserved covers live.
+    assert policy.free_bytes + policy.reserved_bytes == CAPACITY
+    assert policy.reserved_bytes >= sum(l for _, l in live)
+    assert policy.largest_free == max((l for _, l in blocks), default=0)
+    # Live allocations never overlap each other or any free block.
+    spans = sorted(live) + blocks
+    spans.sort()
+    for (b0, l0), (b1, l1) in zip(spans, spans[1:]):
+        assert b0 + l0 <= b1, f"overlap between live+free spans: {spans}"
+
+
+def _roundtrip(name, ops):
+    """Interleaved alloc/free against one policy: conservation, sorted
+    non-overlapping free blocks, alignment honored, full capacity back
+    after draining."""
+    policy = make_policy(name, VA_BASE, CAPACITY)
+    live = []  # (base, length) pairs as the policy saw them
+    for op, size in ops:
+        if op == "alloc" or not live:
+            length = next_pow2(align_up(size, PAGE_SIZE))
+            base = policy.alloc(length, length)
+            if base is None:
+                continue
+            assert base % length == 0, f"{name}: base not size-aligned"
+            live.append((base, length))
+        else:
+            base, length = live.pop(len(live) // 2)
+            policy.free_range(base, length)
+        check_policy_books(policy, live)
+    for base, length in live:
+        policy.free_range(base, length)
+    check_policy_books(policy, [])
+    assert policy.reserved_bytes == 0
+    assert policy.free_bytes == CAPACITY
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_policy_roundtrip_smoke(name):
+    """Deterministic round-trip (runs even without hypothesis)."""
+    ops = [("alloc", (1 << (12 + i % 9)) - (i % 3)) for i in range(30)]
+    ops += [("free", 1), ("alloc", 5000), ("free", 1), ("free", 1),
+            ("alloc", 3 << 20), ("free", 1), ("alloc", 1)] * 4
+    _roundtrip(name, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("name", ALL_POLICIES)
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]),
+                  st.integers(min_value=1, max_value=1 << 22)),
+        min_size=1, max_size=80))
+    @settings(max_examples=40, deadline=None)
+    def test_policy_roundtrip_invariants(name, ops):
+        _roundtrip(name, ops)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_policy_state_roundtrip(name):
+    """export_state/load_state reproduces byte-identical follow-on
+    decisions (the §3.2 failover contract at the policy layer)."""
+    a = make_policy(name, VA_BASE, CAPACITY)
+    bases = [a.alloc(1 << (12 + i % 5), 1 << (12 + i % 5)) for i in range(40)]
+    for b, i in zip(bases[::3], range(0, 40, 3)):
+        a.free_range(b, 1 << (12 + i % 5))
+    b = make_policy(name, VA_BASE, CAPACITY)
+    b.load_state(a.export_state())
+    assert b.free_blocks() == a.free_blocks()
+    assert b.free_bytes == a.free_bytes
+    assert b.reserved_bytes == a.reserved_bytes
+    for length in (1 << 12, 1 << 14, 1 << 16, 1 << 13):
+        assert a.alloc(length, length) == b.alloc(length, length)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_control_plane_snapshot_restore_per_policy(name):
+    """Snapshot -> restore under each policy: identical books and an
+    identical next placement decision."""
+    mmu, alloc = make_mmu(num_memory_blades=3, num_compute_blades=2,
+                          cache_bytes_per_blade=1 << 20, alloc_policy=name,
+                          blade_capacity=1 << 28)
+    cp = ControlPlane(mmu, alloc)
+    vmas = [cp.sys_mmap(1 + i % 3, (i % 7 + 1) * 3 * PAGE_SIZE,
+                        requesting_blade=i % 2).vma for i in range(30)]
+    for v in vmas[::4]:
+        assert cp.sys_munmap(v.pdid, v.base).retval == 0
+    snap = cp.snapshot()
+    cp2 = ControlPlane.restore(snap, cache_bytes_per_blade=1 << 20,
+                               num_compute_blades=2)
+    assert cp2.allocator.policy_name == name
+    assert cp2.allocator.allocation_by_blade() == alloc.allocation_by_blade()
+    assert cp2.allocator.free_bytes_by_blade() == alloc.free_bytes_by_blade()
+    for b, a in alloc.blades.items():
+        assert cp2.allocator.blades[b].free_blocks() == a.free_blocks()
+    v1 = cp.sys_mmap(2, 100_000).vma
+    v2 = cp2.sys_mmap(2, 100_000).vma
+    assert (v1.base, v1.blade_id, v1.length) == (v2.base, v2.blade_id, v2.length)
+
+
+def test_default_policy_snapshot_format_unchanged():
+    """The default first-fit snapshot must not grow an ``alloc`` section:
+    pre-PR snapshots restore, and restore-time re-carving covers it."""
+    mmu, alloc = make_mmu(num_memory_blades=2, num_compute_blades=1,
+                          cache_bytes_per_blade=1 << 20)
+    cp = ControlPlane(mmu, alloc)
+    cp.sys_mmap(1, PAGE_SIZE)
+    assert DEFAULT_POLICY == "first_fit"
+    assert "alloc" not in json.loads(cp.snapshot())
+    mmu2, alloc2 = make_mmu(num_memory_blades=2, num_compute_blades=1,
+                            cache_bytes_per_blade=1 << 20,
+                            alloc_policy="buddy")
+    cp2 = ControlPlane(mmu2, alloc2)
+    cp2.sys_mmap(1, PAGE_SIZE)
+    assert json.loads(cp2.snapshot())["alloc"]["policy"] == "buddy"
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown fit policy 'best_fit'"):
+        make_policy("best_fit", VA_BASE, CAPACITY)
+
+
+def test_rack_policy_plumbing():
+    """alloc_policy threads through make_mmu down to every blade."""
+    mmu, alloc = make_mmu(num_memory_blades=2, num_compute_blades=1,
+                          cache_bytes_per_blade=1 << 20,
+                          alloc_policy="segregated")
+    assert alloc.policy_name == "segregated"
+    for b in alloc.blades.values():
+        assert type(b.policy).__name__ == "SegregatedPolicy"
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_churn_replay_drains_clean(name):
+    """A full churn trace replays and drains against every policy with
+    conservation intact (the alloc_bench contract, in miniature)."""
+    gas = GlobalAddressSpace()
+    for _ in range(2):
+        gas.add_blade(1 << 28)
+    alloc = MemoryAllocator(gas, policy=name)
+    trace = alloc_churn_trace(profile="mixed", num_events=400, seed=3)
+    base_of = {}
+    for i, kind, pdid, arg in trace.events():
+        if kind == MMAP:
+            try:
+                base_of[i] = alloc.mmap(pdid, arg).base
+            except MemoryError:
+                base_of[i] = None
+        else:
+            base = base_of.pop(arg)
+            if base is not None:
+                alloc.munmap(base)
+    for base in [b for b in base_of.values() if b is not None]:
+        alloc.munmap(base)
+    for b in alloc.blades.values():
+        b.check_conservation()
+    assert sum(alloc.allocation_by_blade().values()) == 0
+
+
+# --------------------------------------------------------------------- #
+# find_vma bisect index vs the seed's O(n) scan (satellite 4).
+
+def _gas(blades):
+    gas = GlobalAddressSpace()
+    for _ in range(blades):
+        gas.add_blade()
+    return gas
+
+
+def _bisect_vs_scan(ops, probes):
+    a = MemoryAllocator(_gas(2))
+    live = []
+    for op, size in ops:
+        if op == "alloc" or not live:
+            try:
+                live.append(a.mmap(1, size))
+            except MemoryError:
+                continue
+        else:
+            a.munmap(live.pop(0).base)
+        addrs = [0, 1 << 62]
+        for v in live:
+            for d in probes:
+                addrs += [v.base + d, v.end + d, v.base + v.length // 2]
+        for addr in addrs:
+            assert a.find_vma(addr) is a._find_vma_scan(addr)
+
+
+def test_find_vma_bisect_matches_scan_smoke():
+    ops = [("alloc", 1 << (12 + i % 6)) for i in range(20)]
+    ops += [("free", 1), ("alloc", 7777), ("free", 1)] * 5
+    _bisect_vs_scan(ops, probes=[-2, -1, 0, 1, 2])
+
+
+if HAVE_HYPOTHESIS:
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]),
+                  st.integers(min_value=1, max_value=1 << 20)),
+        min_size=1, max_size=50),
+        probes=st.lists(st.integers(min_value=-2, max_value=2), min_size=1,
+                        max_size=8))
+    @settings(max_examples=40, deadline=None)
+    def test_find_vma_bisect_matches_scan(ops, probes):
+        _bisect_vs_scan(ops, probes)
+
+
+# --------------------------------------------------------------------- #
+# Helper edge cases (satellite 3).
+
+@pytest.mark.parametrize("x,want", [
+    (0, 1), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8),
+    (4095, 4096), (4096, 4096), (4097, 8192),
+    ((1 << 30) - 1, 1 << 30), ((1 << 30) + 1, 1 << 31),
+])
+def test_next_pow2_edges(x, want):
+    assert next_pow2(x) == want
+
+
+@pytest.mark.parametrize("x,a,want", [
+    (0, 4096, 0), (1, 4096, 4096), (4096, 4096, 4096),
+    (4097, 4096, 8192), (1, 1, 1), (12345, 8, 12352),
+])
+def test_align_up_edges(x, a, want):
+    assert align_up(x, a) == want
+
+
+@pytest.mark.parametrize("x,want", [
+    (1, 0), (2, 1), (3, 2), (4, 2), (5, 3), (4096, 12), (4097, 13),
+])
+def test_ceil_log2_edges(x, want):
+    assert ceil_log2(x) == want
+
+
+# --------------------------------------------------------------------- #
+# Churn trace generator (satellite/tentpole workload).
+
+def test_churn_trace_deterministic():
+    t1 = alloc_churn_trace(profile="small", num_events=300, seed=7)
+    t2 = alloc_churn_trace(profile="small", num_events=300, seed=7)
+    assert (t1.kinds == t2.kinds).all()
+    assert (t1.pdids == t2.pdids).all()
+    assert (t1.args == t2.args).all()
+    t3 = alloc_churn_trace(profile="small", num_events=300, seed=8)
+    assert not (t3.args == t1.args).all()
+
+
+@pytest.mark.parametrize("profile", sorted(CHURN_PROFILES))
+def test_churn_trace_well_formed(profile):
+    """Every munmap references an earlier, not-yet-freed mmap event of
+    the same trace; sizes match the profile's classes."""
+    t = alloc_churn_trace(profile=profile, num_events=500)
+    assert len(t) == 500
+    live = set()
+    max_cls = 1 << max(CHURN_PROFILES[profile]["class_log2s"])
+    for i, kind, pdid, arg in t.events():
+        assert 1 <= pdid <= t.num_pdids
+        if kind == MMAP:
+            assert 0 < arg <= max_cls
+            live.add(i)
+        else:
+            assert kind == MUNMAP
+            assert arg in live, "munmap of unknown/freed event"
+            live.remove(arg)
+    frees = int((t.kinds == MUNMAP).sum())
+    assert frees > len(t) // 5, "profile should be free-heavy churn"

@@ -1,8 +1,13 @@
-"""Allocator: balanced placement, first-fit, fragmentation, fairness."""
+"""Allocator: balanced placement, first-fit, fragmentation, fairness,
+and the ISSUE 10 hardening pins (validated frees, mmap/munmap errors)."""
 
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis (CI dev extra); the rest run bare
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare local installs
+    HAVE_HYPOTHESIS = False
 
 from repro.core.address_space import GlobalAddressSpace
 from repro.core.allocator import MemoryAllocator
@@ -56,39 +61,116 @@ def test_find_vma():
     assert a.find_vma(v.base - 1) is None
 
 
-@given(
-    st.lists(
-        st.tuples(st.sampled_from(["alloc", "free"]),
-                  st.integers(min_value=1, max_value=1 << 22)),
-        min_size=1, max_size=60,
-    )
-)
-@settings(max_examples=50, deadline=None)
-def test_alloc_free_invariants(ops):
-    """No overlapping vmas; accounting consistent; free returns capacity."""
+# --------------------------------------------------------------------- #
+# Hardening pins (ISSUE 10 satellites 1-3).  Each of these silently
+# corrupted accounting or raised an anonymous KeyError pre-PR; the match
+# strings pin the named errors so regressions change a message, not a
+# behaviour.
+
+def test_double_free_rejected():
+    a = make_alloc(1)
+    v = a.mmap(1, PAGE_SIZE)
+    blade = a.blades[v.blade_id]
+    blade.free_range(v.base, v.length)
+    with pytest.raises(ValueError,
+                       match="no live allocation at this base"):
+        blade.free_range(v.base, v.length)
+
+
+def test_overlapping_free_rejected():
+    """Freeing from inside a live vma (not at its base) must not split
+    the accounting — pre-PR this grew the free list past capacity."""
+    a = make_alloc(1)
+    v = a.mmap(1, 4 * PAGE_SIZE)
+    with pytest.raises(ValueError,
+                       match="double free or overlapping free"):
+        a.blades[v.blade_id].free_range(v.base + PAGE_SIZE, PAGE_SIZE)
+
+
+def test_free_length_mismatch_rejected():
+    a = make_alloc(1)
+    v = a.mmap(1, 4 * PAGE_SIZE)
+    with pytest.raises(ValueError,
+                       match="does not match the allocated"):
+        a.blades[v.blade_id].free_range(v.base, PAGE_SIZE)
+
+
+def test_out_of_range_free_rejected():
+    a = make_alloc(1)
+    blade = a.blades[0]
+    with pytest.raises(ValueError, match="outside blade range"):
+        blade.free_range(blade.va_base - PAGE_SIZE, PAGE_SIZE)
+    with pytest.raises(ValueError, match="outside blade range"):
+        blade.free_range(blade.va_base + blade.capacity - PAGE_SIZE,
+                         2 * PAGE_SIZE)
+
+
+def test_mmap_rejects_nonpositive_length():
+    """mmap(0) used to mint a 1-byte vma via next_pow2(0) == 1."""
+    a = make_alloc(1)
+    with pytest.raises(ValueError, match="mmap length must be positive"):
+        a.mmap(1, 0)
+    with pytest.raises(ValueError, match="mmap length must be positive"):
+        a.mmap(1, -4096)
+    assert not a.vmas  # nothing leaked into the vma table
+
+
+def test_munmap_unknown_base_named_error():
+    """Pre-PR: bare KeyError from the vmas dict."""
+    a = make_alloc(1)
+    with pytest.raises(ValueError,
+                       match="munmap of unknown base 0xdead"):
+        a.munmap(0xdead)
+
+
+def test_munmap_after_blade_retired_is_counted_not_crash():
+    """A vma whose VA range died with a retired blade: the free has no
+    free-structure to return to — explicit accounting, not a KeyError."""
     a = make_alloc(2)
-    live = []
-    for op, size in ops:
-        if op == "alloc" or not live:
-            try:
-                v = a.mmap(1, size)
-                live.append(v)
-            except MemoryError:
-                continue
-        else:
-            v = live.pop()
-            a.munmap(v.base)
-        # no overlaps among live vmas
-        spans = sorted((v.base, v.end) for v in live)
-        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
-            assert e0 <= s1
-        # accounting
-        assert sum(a.allocation_by_blade().values()) == sum(
-            v.length for v in live
-        )
-    for v in live:
-        a.munmap(v.base)
-    assert sum(a.allocation_by_blade().values()) == 0
-    # capacity fully restored
+    v = a.mmap(1, PAGE_SIZE)
+    a.on_blade_retired(v.blade_id)
+    a.munmap(v.base)  # pre-PR: KeyError on the popped blade
+    assert a.orphaned_frees == 1
+    assert a.find_vma(v.base) is None
+    # The survivor's books still balance.
     for b in a.blades.values():
-        assert b.largest_free == b.capacity
+        b.check_conservation()
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        st.lists(
+            st.tuples(st.sampled_from(["alloc", "free"]),
+                      st.integers(min_value=1, max_value=1 << 22)),
+            min_size=1, max_size=60,
+        )
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_alloc_free_invariants(ops):
+        """No overlapping vmas; accounting consistent; free returns capacity."""
+        a = make_alloc(2)
+        live = []
+        for op, size in ops:
+            if op == "alloc" or not live:
+                try:
+                    v = a.mmap(1, size)
+                    live.append(v)
+                except MemoryError:
+                    continue
+            else:
+                v = live.pop()
+                a.munmap(v.base)
+            # no overlaps among live vmas
+            spans = sorted((v.base, v.end) for v in live)
+            for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+                assert e0 <= s1
+            # accounting
+            assert sum(a.allocation_by_blade().values()) == sum(
+                v.length for v in live
+            )
+        for v in live:
+            a.munmap(v.base)
+        assert sum(a.allocation_by_blade().values()) == 0
+        # capacity fully restored
+        for b in a.blades.values():
+            assert b.largest_free == b.capacity
